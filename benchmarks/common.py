@@ -1,0 +1,64 @@
+"""Shared benchmark helpers.
+
+Benchmarks run REDUCED-SCALE versions of every paper table on CPU
+(documented per-benchmark) and the analytic FPGA cost model at FULL
+paper scale (it is pure arithmetic).  Each module prints a CSV-ish
+table and returns rows for benchmarks/run.py to aggregate.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lutdnn as LD
+from repro.data.loader import batch_iterator, train_test_split
+from repro.data.synthetic import make_dataset
+
+_DATA_CACHE: Dict[str, Dict] = {}
+
+
+def dataset(name: str, n: int = 4000):
+    key = f"{name}:{n}"
+    if key not in _DATA_CACHE:
+        _DATA_CACHE[key] = train_test_split(make_dataset(name, n_samples=n,
+                                                         seed=0))
+    return _DATA_CACHE[key]
+
+
+def train_eval(spec: LD.ModelSpec, data, steps: int = 150, seed: int = 0,
+               conn=None, lr: float = 5e-3):
+    """QAT-train a LUT-DNN and return (test_acc, model)."""
+    init_state, step = LD.make_train_step(spec, lr=lr)
+    state = init_state(jax.random.key(seed))
+    if conn is not None:
+        state["model"]["conn"] = conn
+    jstep = jax.jit(step)
+    it = batch_iterator(data["train"], 256, seed=seed)
+    for _ in range(steps):
+        state, _ = jstep(state, next(it))
+    ev = jax.jit(LD.make_eval_step(spec))
+    acc, _ = ev(state["model"], data["test"])
+    return float(acc), state["model"]
+
+
+def timed(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds per call (jit-compiled fn)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def print_table(title: str, header: List[str], rows: List[List]) -> None:
+    print(f"\n== {title} ==")
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))

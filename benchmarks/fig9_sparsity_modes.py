@@ -1,0 +1,54 @@
+"""Paper Fig. 9 — test accuracy of random (5 seeds, boxplot) vs DeepR*
+vs SparseLUT connectivity across LUT-DNN variants (reduced scale)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import dataset, print_table, train_eval
+from repro.configs import paper_models as PM
+from repro.core import lutdnn as LD
+from repro.data.loader import batch_iterator
+
+
+def run(fast: bool = False):
+    steps_t = 60 if fast else 150
+    steps_s = 60 if fast else 150
+    seeds = (0, 1, 2) if fast else (0, 1, 2, 3, 4)
+    data = dataset("jsc")
+    rows = []
+    variants = {
+        "PolyLUT(D=1)": PM.tiny("jsc", degree=1, fan_in=2),
+        "PolyLUT(D=2)": PM.tiny("jsc", degree=2, fan_in=2),
+        "PolyLUT-Add(D=1)": PM.tiny("jsc", degree=1, fan_in=2,
+                                    adder_width=2),
+        "NeuraLUT": PM.tiny("jsc", degree=1, fan_in=2, hidden=(6,)),
+    }
+    for name, spec in variants.items():
+        rand = [train_eval(spec, data, steps=steps_t, seed=s)[0]
+                for s in seeds]
+
+        it = batch_iterator(data["train"], 256, seed=7)
+        md, _, _ = LD.search_connectivity(
+            __import__("jax").random.key(7), spec, it, n_steps=steps_s,
+            mode="deepr")
+        acc_d, _ = train_eval(spec, data, steps=steps_t, seed=seeds[0],
+                              conn=LD.masks_to_conn(md, spec))
+
+        it = batch_iterator(data["train"], 256, seed=8)
+        ms, _, _ = LD.search_connectivity(
+            __import__("jax").random.key(8), spec, it, n_steps=steps_s,
+            phase_frac=0.6, eps2=2e-3)
+        acc_s, _ = train_eval(spec, data, steps=steps_t, seed=seeds[0],
+                              conn=LD.masks_to_conn(ms, spec))
+
+        rows.append([name, f"{np.mean(rand):.4f}", f"{np.min(rand):.4f}",
+                     f"{np.max(rand):.4f}", f"{acc_d:.4f}", f"{acc_s:.4f}"])
+    print_table("Fig. 9 (reduced scale; random over "
+                f"{len(seeds)} seeds)",
+                ["model", "rand_mean", "rand_min", "rand_max", "DeepR*",
+                 "SparseLUT"], rows)
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

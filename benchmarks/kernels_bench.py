@@ -1,0 +1,53 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU) vs jnp reference.
+
+On this CPU container the numbers are NOT TPU performance — they only
+prove the kernels run and give the ref-vs-kernel shape sweep a timing
+column.  TPU roofline expectations are derived analytically in
+EXPERIMENTS.md (section Perf, wkv6 entry).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import print_table, timed
+from repro.kernels.masked_matmul import ops as mm_ops, ref as mm_ref
+from repro.kernels.wkv6 import ref as wkv_ref
+
+
+def run(fast: bool = False):
+    rows = []
+    # wkv6 chunked-ref timing across chunk sizes (the kernel's tuning knob)
+    B, S, H, K = 1, 512, 4, 64
+    ks = jax.random.split(jax.random.key(0), 5)
+    r = jax.random.normal(ks[0], (B, S, H, K))
+    k = jax.random.normal(ks[1], (B, S, H, K))
+    v = jax.random.normal(ks[2], (B, S, H, K))
+    lw = -jnp.exp(jax.random.normal(ks[3], (B, S, H, K)) * 0.3 - 2.0)
+    u = jax.random.normal(ks[4], (H, K)) * 0.1
+    for chunk in (16, 64, 128):
+        f = jax.jit(lambda a, b, c, d, e: wkv_ref.wkv_chunked(
+            a, b, c, d, e, None, chunk=chunk))
+        t = timed(f, r, k, v, lw, u, iters=2)
+        rows.append(["wkv6_chunked_ref", f"S={S},C={chunk}",
+                     f"{t*1e3:.1f}ms"])
+
+    # masked matmul: gather-ref vs dense-scatter formulation
+    ks = jax.random.split(jax.random.key(1), 3)
+    x = jax.random.normal(ks[0], (1024, 784))
+    conn = jax.random.randint(ks[1], (256, 6), 0, 784)
+    w = jax.random.normal(ks[2], (256, 6))
+    f_g = jax.jit(lambda a: mm_ref.masked_matmul(a, conn, w))
+    f_d = jax.jit(lambda a: mm_ref.masked_matmul_dense(a, conn, w, 784))
+    rows.append(["masked_matmul", "gather-form (dense-small)",
+                 f"{timed(f_g, x, iters=3)*1e3:.2f}ms"])
+    rows.append(["masked_matmul", "scatter-form (sparse-large)",
+                 f"{timed(f_d, x, iters=3)*1e3:.2f}ms"])
+
+    print_table("Kernel micro-bench (CPU; relative only)",
+                ["kernel", "config", "time"], rows)
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

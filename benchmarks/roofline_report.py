@@ -1,0 +1,93 @@
+"""Aggregate dry-run cell records into the roofline table
+(EXPERIMENTS.md section Roofline).
+
+Reads runs/dryrun/*.json produced by ``python -m repro.launch.dryrun
+--driver`` and emits a markdown table per mesh plus hillclimb-target
+selection (worst roofline fraction / most collective-bound / most
+paper-representative).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from typing import Dict, List
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(out_dir: str = "runs/dryrun") -> List[Dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:8.2f}s "
+        # noqa
+    return f"{x*1e3:8.2f}ms"
+
+
+def table(recs: List[Dict], mesh: str) -> str:
+    rows = [r for r in recs if r.get("mesh") == mesh]
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])
+                             if r["shape"] in SHAPE_ORDER else 9))
+    out = [f"### Mesh `{mesh}`\n",
+           "| arch | shape | compute | memory | collective | dominant "
+           "| useful | roofline | HBM/dev | fits 16G |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("status") == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"skipped | — | — | — | ({r['reason'][:40]}…) |")
+            continue
+        if r.get("status") != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | FAILED | | | | | | | |")
+            continue
+        rf = r["roofline"]
+        mem_gb = r["memory"].get("peak_bytes_per_device", 0) / 1e9
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(rf['compute_s'])} | "
+            f"{fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} | "
+            f"{rf['dominant']} | {rf['useful_ratio']:.1%} | "
+            f"{rf['roofline_fraction']:.1%} | {mem_gb:.1f}G | "
+            f"{'y' if r['memory'].get('fits_hbm_16g') else 'NO'} |")
+    return "\n".join(out) + "\n"
+
+
+def pick_hillclimb_targets(recs: List[Dict]) -> Dict[str, Dict]:
+    ok = [r for r in recs if r.get("status") == "ok"
+          and r.get("mesh") == "single"]
+    worst = min(ok, key=lambda r: r["roofline"]["roofline_fraction"])
+    coll = max(ok, key=lambda r: r["roofline"]["collective_s"])
+    # paper-representative: the biggest train cell with the technique's
+    # natural home (fan-in-constrained layers) — the MoE router / FFN
+    # archs; kimi-k2 train is the flagship
+    rep = next((r for r in ok if r["arch"] == "kimi-k2-1t-a32b"
+                and r["shape"] == "train_4k"), worst)
+    return {"worst_roofline": worst, "most_collective": coll,
+            "paper_representative": rep}
+
+
+def main() -> None:
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "runs/dryrun"
+    recs = load(out_dir)
+    if not recs:
+        print(f"no records under {out_dir}; run the dry-run driver first")
+        return
+    for mesh in ("single", "multi"):
+        print(table(recs, mesh))
+    targets = pick_hillclimb_targets(recs)
+    print("### Hillclimb targets (single-pod)\n")
+    for k, r in targets.items():
+        rf = r["roofline"]
+        print(f"* **{k}**: {r['arch']} x {r['shape']} — dominant "
+              f"{rf['dominant']}, roofline {rf['roofline_fraction']:.1%}")
+
+
+if __name__ == "__main__":
+    main()

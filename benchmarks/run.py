@@ -1,0 +1,66 @@
+"""Benchmark runner — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # full pass
+    PYTHONPATH=src python -m benchmarks.run --fast     # reduced steps
+    PYTHONPATH=src python -m benchmarks.run --only table2,roofline
+
+Every module prints its own CSV table; the runner adds a wall-time
+summary row per module (name,seconds,status).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("table2", "benchmarks.table2_polylut_add"),
+    ("fig7", "benchmarks.fig7_deeper_wider"),
+    ("table4", "benchmarks.table4_iso_accuracy"),
+    ("fig8", "benchmarks.fig8_heatmap"),
+    ("fig9", "benchmarks.fig9_sparsity_modes"),
+    ("table7", "benchmarks.table7_connectivity"),
+    ("table8", "benchmarks.table8_cost_model"),
+    ("table9", "benchmarks.table9_runtime"),
+    ("kernels", "benchmarks.kernels_bench"),
+    ("roofline", "benchmarks.roofline_report"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced step counts (CI mode)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of module names")
+    args = ap.parse_args()
+
+    only = set(args.only.split(",")) if args.only else None
+    summary = []
+    for name, modpath in MODULES:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(modpath, fromlist=["run", "main"])
+            if hasattr(mod, "run"):
+                mod.run(fast=args.fast)
+            else:
+                mod.main()
+            status = "ok"
+        except Exception:
+            traceback.print_exc()
+            status = "FAILED"
+        summary.append((name, round(time.time() - t0, 1), status))
+
+    print("\n== benchmark summary ==")
+    print("module,seconds,status")
+    for row in summary:
+        print(",".join(str(x) for x in row))
+    if any(s[-1] != "ok" for s in summary):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Paper Table IX — task execution-time breakdown of the toolflow.
+
+Reduced scale, same pipeline stages as the paper:
+  connectivity search / LUT-DNN QAT training / truth-table synthesis
+  ('RTL generation') / cost-model evaluation ('synthesis & P&R').
+The claim reproduced: connectivity search does not dominate the
+end-to-end toolflow.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import dataset, print_table, train_eval
+from repro.configs import paper_models as PM
+from repro.core import cost_model as CM
+from repro.core import lut_synth as LS
+from repro.core import lutdnn as LD
+from repro.data.loader import batch_iterator
+
+
+def run(fast: bool = False):
+    steps = 50 if fast else 150
+    data = dataset("jsc")
+    spec = PM.tiny("jsc", degree=2, fan_in=3)
+    rows = []
+
+    t0 = time.perf_counter()
+    it = batch_iterator(data["train"], 256, seed=0)
+    masks, _, _ = LD.search_connectivity(
+        jax.random.key(0), spec, it, n_steps=steps, phase_frac=0.6,
+        eps2=2e-3)
+    rows.append(["connectivity search", f"{time.perf_counter()-t0:.2f}"])
+
+    t0 = time.perf_counter()
+    conn = LD.masks_to_conn(masks, spec)
+    acc, model = train_eval(spec, data, steps=steps, conn=conn)
+    rows.append(["LUT-DNN QAT training", f"{time.perf_counter()-t0:.2f}"])
+
+    t0 = time.perf_counter()
+    tables = LS.synthesise(model, spec)
+    jax.block_until_ready(tables[0].sub_table)
+    rows.append(["truth-table synthesis (RTL gen.)",
+                 f"{time.perf_counter()-t0:.2f}"])
+
+    t0 = time.perf_counter()
+    CM.model_cost(spec)
+    rows.append(["cost model (synthesis & P&R)",
+                 f"{time.perf_counter()-t0:.4f}"])
+
+    print_table(f"Table IX (reduced scale; acc={acc:.3f})",
+                ["task", "seconds"], rows)
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

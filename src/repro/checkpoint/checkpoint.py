@@ -1,0 +1,208 @@
+"""Sharded, elastic checkpointing (no external deps).
+
+Layout on disk (one directory per step):
+
+    ckpt_dir/step_000123/
+      manifest.json       # pytree structure, per-leaf shape/dtype/shards
+      shard_000.npz       # leaf data, chunked along axis 0
+
+Design points for 1000+-node deployments:
+* leaves are chunked (``max_shard_bytes``) so no single file exceeds a
+  size a host can stream, and different hosts can write disjoint chunks
+  (here single-process writes all; the manifest format already carries
+  the chunk math so a multi-host writer only changes the writer loop);
+* restore is **elastic**: the manifest is mesh-agnostic — arrays are
+  reassembled on host then ``device_put`` with whatever sharding the
+  *new* mesh wants, so a job can restart on a different data-parallel
+  extent (tested in tests/test_checkpoint.py);
+* writes are atomic (tmp dir + rename) so a preempted writer never
+  corrupts the latest checkpoint;
+* ``AsyncCheckpointer`` overlaps serialization with the next train step.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+import jax
+import ml_dtypes
+
+# dtypes numpy's savez cannot roundtrip natively: stored as a bit-view
+# of the same width, dtype name preserved in the manifest.
+_VIEW_DTYPES = {
+    "bfloat16": (ml_dtypes.bfloat16, np.uint16),
+    "float8_e4m3fn": (ml_dtypes.float8_e4m3fn, np.uint8),
+    "float8_e5m2": (ml_dtypes.float8_e5m2, np.uint8),
+}
+
+
+def _to_storage(arr: np.ndarray) -> np.ndarray:
+    name = str(arr.dtype)
+    if name in _VIEW_DTYPES:
+        return arr.view(_VIEW_DTYPES[name][1])
+    return arr
+
+
+def _np_dtype(name: str):
+    if name in _VIEW_DTYPES:
+        return np.dtype(_VIEW_DTYPES[name][0])
+    return np.dtype(name)
+
+
+def _flatten(tree: Any) -> Tuple[List[np.ndarray], Any, List[str]]:
+    leaves, treedef = jax.tree.flatten(tree)
+    names = [f"leaf_{i:05d}" for i in range(len(leaves))]
+    return [np.asarray(l) for l in leaves], treedef, names
+
+
+def save_checkpoint(path: str, step: int, tree: Any,
+                    max_shard_bytes: int = 512 * 1024 * 1024) -> str:
+    """Atomic write of `tree` under ``path/step_{step:08d}``."""
+    leaves, treedef, names = _flatten(tree)
+    final = os.path.join(path, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+
+    manifest: Dict[str, Any] = {
+        "step": step,
+        "treedef": str(treedef),
+        "leaves": [],
+    }
+    shard_id, shard_payload, shard_bytes = 0, {}, 0
+
+    def flush():
+        nonlocal shard_id, shard_payload, shard_bytes
+        if shard_payload:
+            np.savez(os.path.join(tmp, f"shard_{shard_id:03d}.npz"),
+                     **shard_payload)
+            shard_id += 1
+            shard_payload, shard_bytes = {}, 0
+
+    for name, leaf in zip(names, leaves):
+        chunks = max(1, int(np.ceil(leaf.nbytes / max_shard_bytes)))
+        rows = leaf.shape[0] if leaf.ndim else 1
+        chunks = min(chunks, max(rows, 1))
+        entry = {"name": name, "shape": list(leaf.shape),
+                 "dtype": str(leaf.dtype), "chunks": []}
+        if leaf.ndim == 0 or chunks == 1:
+            parts = [(0, leaf)]
+        else:
+            splits = np.array_split(np.arange(rows), chunks)
+            parts = [(int(s[0]), leaf[s[0]:s[-1] + 1]) for s in splits if len(s)]
+        for off, part in parts:
+            keyname = f"{name}_o{off}"
+            entry["chunks"].append({"key": keyname, "offset": off,
+                                    "shard": None})
+            if shard_bytes + part.nbytes > max_shard_bytes:
+                flush()
+            entry["chunks"][-1]["shard"] = shard_id
+            shard_payload[keyname] = _to_storage(part)
+            shard_bytes += part.nbytes
+        manifest["leaves"].append(entry)
+    flush()
+
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def restore_checkpoint(path: str, template: Any,
+                       step: Optional[int] = None,
+                       shardings: Any = None) -> Tuple[Any, int]:
+    """Restore into the structure of ``template``.  ``shardings`` (a
+    matching pytree of NamedSharding, or a single sharding) lays leaves
+    onto the *current* mesh — this is the elastic-resume hook."""
+    if step is None:
+        steps = sorted(int(d.split("_")[1]) for d in os.listdir(path)
+                       if d.startswith("step_") and not d.endswith(".tmp"))
+        if not steps:
+            raise FileNotFoundError(f"no checkpoints under {path}")
+        step = steps[-1]
+    d = os.path.join(path, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    shards: Dict[int, Any] = {}
+
+    def shard(i: int):
+        if i not in shards:
+            shards[i] = np.load(os.path.join(d, f"shard_{i:03d}.npz"))
+        return shards[i]
+
+    arrays = []
+    for entry in manifest["leaves"]:
+        dt = _np_dtype(entry["dtype"])
+        out = np.empty(entry["shape"], dtype=dt)
+        if not entry["shape"]:
+            raw = np.asarray(shard(entry["chunks"][0]["shard"])
+                             [entry["chunks"][0]["key"]])
+            out = raw.view(dt) if raw.dtype != dt else raw
+        else:
+            for c in entry["chunks"]:
+                part = shard(c["shard"])[c["key"]]
+                if part.dtype != dt:
+                    part = part.view(dt)
+                out[c["offset"]:c["offset"] + part.shape[0]] = part
+        arrays.append(out)
+
+    _, treedef = jax.tree.flatten(template)
+    tree = jax.tree.unflatten(treedef, arrays)
+    if shardings is not None:
+        if jax.tree.structure(shardings, is_leaf=lambda x: x is None) \
+                != jax.tree.structure(tree):
+            tree = jax.device_put(tree, shardings)  # single sharding
+        else:
+            tree = jax.tree.map(lambda a, s: jax.device_put(a, s),
+                                tree, shardings)
+    return tree, step
+
+
+class CheckpointManager:
+    """Keeps the newest ``keep`` checkpoints, atomic, monotonic."""
+
+    def __init__(self, path: str, keep: int = 3):
+        self.path = path
+        self.keep = keep
+        os.makedirs(path, exist_ok=True)
+
+    def steps(self) -> List[int]:
+        return sorted(int(d.split("_")[1]) for d in os.listdir(self.path)
+                      if d.startswith("step_") and not d.endswith(".tmp"))
+
+    def save(self, step: int, tree: Any) -> str:
+        out = save_checkpoint(self.path, step, tree)
+        for s in self.steps()[:-self.keep]:
+            shutil.rmtree(os.path.join(self.path, f"step_{s:08d}"),
+                          ignore_errors=True)
+        return out
+
+    def restore_latest(self, template: Any, shardings: Any = None):
+        return restore_checkpoint(self.path, template, None, shardings)
+
+
+class AsyncCheckpointer:
+    """Overlap checkpoint I/O with compute: snapshot to host sync, write
+    on a daemon thread.  ``wait()`` joins outstanding writes (call
+    before exit)."""
+
+    def __init__(self, manager: CheckpointManager):
+        self.manager = manager
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, step: int, tree: Any) -> None:
+        host_tree = jax.tree.map(np.asarray, tree)   # snapshot now
+        self.wait()
+        self._thread = threading.Thread(
+            target=self.manager.save, args=(step, host_tree), daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

@@ -1,0 +1,11 @@
+"""SparseLUT core: the paper's contribution as composable JAX modules."""
+from repro.core.quant import QuantSpec, input_quant, act_quant
+from repro.core.masking import (ThetaLayer, init_theta_layer, random_mask,
+                                mask_to_indices, final_mask, effective_weight)
+from repro.core.sparse_train import SparsityConfig, sparse_control
+from repro.core.layers import LayerSpec, make_layer_specs
+from repro.core.lutdnn import (ModelSpec, init_model, forward, make_train_step,
+                               make_search_step, search_connectivity,
+                               masks_to_conn)
+from repro.core.lut_synth import synthesise, lut_forward
+from repro.core.cost_model import model_cost, HardwareReport

@@ -1,0 +1,197 @@
+"""LUT-DNN layers: LogicNets / PolyLUT / PolyLUT-Add / NeuraLUT.
+
+A layer is described by a static ``LayerSpec`` plus a params pytree.
+Connectivity is *data* (an int32 gather table ``conn`` of shape
+(n_out, A, F)), which is exactly how SparseLUT can swap random
+connectivity for a learned mask with zero structural change.
+
+Training forward uses gather + monomial expansion + small einsum — the
+dense-small formulation of fan-in sparsity (see kernels/masked_matmul
+for the Pallas hot-spot version of the same contraction).  Inference
+can instead run through synthesised truth tables (core/lut_synth +
+kernels/lut_gather), and the two paths agree bit-exactly (tested).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import poly
+from repro.core.quant import (QuantSpec, act_quant, adder_quant, bn_apply_eval,
+                              bn_apply_train, bn_init, input_quant)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    n_in: int
+    n_out: int
+    fan_in: int                 # F per sub-neuron
+    degree: int = 1             # D (1 == LogicNets linear neuron)
+    adder_width: int = 1        # A (>1 == PolyLUT-Add)
+    in_quant: QuantSpec = QuantSpec(2, -1.0, 1.0)
+    out_quant: QuantSpec = QuantSpec(2, 0.0, 1.0)
+    hidden: Tuple[int, ...] = ()  # NeuraLUT sub-net widths; () == PolyLUT
+    is_output: bool = False
+
+    @property
+    def total_fan_in(self) -> int:
+        return self.fan_in * self.adder_width
+
+    @property
+    def n_monomials(self) -> int:
+        return poly.num_monomials(self.fan_in, self.degree)
+
+    @property
+    def sub_quant(self) -> QuantSpec:
+        """Quantizer on sub-neuron outputs feeding the adder.
+
+        Paper Sec. III-A: the adder's internal word length is beta+1
+        where beta is the layer's ACTIVATION width (out_quant) — not the
+        input width beta_i, which may be larger on the first layer
+        (JSC-XL uses beta_i=7 but still a 6-bit adder feed)."""
+        return adder_quant(self.out_quant.bits, self.adder_width)
+
+    # ---- hardware-size bookkeeping (feeds core/cost_model) -------------
+    @property
+    def subneuron_table_entries(self) -> int:
+        return 2 ** (self.in_quant.bits * self.fan_in)
+
+    @property
+    def adder_table_entries(self) -> int:
+        if self.adder_width == 1:
+            return 0
+        return 2 ** (self.adder_width * self.sub_quant.bits)
+
+    @property
+    def layer_table_entries(self) -> int:
+        """Total truth-table entries for the layer (paper Table II col.)."""
+        per_neuron = self.adder_width * self.subneuron_table_entries \
+            + self.adder_table_entries
+        return self.n_out * per_neuron
+
+
+def _he(key, shape, fan):
+    return jax.random.normal(key, shape, jnp.float32) * math.sqrt(2.0 / max(fan, 1))
+
+
+def init_layer(key: jax.Array, spec: LayerSpec) -> dict:
+    """Trainable params for one layer (connectivity lives separately)."""
+    p: dict = {"bn": bn_init(spec.n_out)}
+    if spec.hidden:
+        dims = (spec.fan_in,) + tuple(spec.hidden) + (1,)
+        keys = jax.random.split(key, len(dims))
+        mats = []
+        for i in range(len(dims) - 1):
+            mats.append({
+                "w": _he(keys[i], (spec.n_out, spec.adder_width,
+                                   dims[i], dims[i + 1]), dims[i]),
+                "b": jnp.zeros((spec.n_out, spec.adder_width, dims[i + 1]),
+                               jnp.float32),
+            })
+        p["subnet"] = mats
+        p["skip"] = _he(keys[-1], (spec.n_out, spec.adder_width,
+                                   spec.fan_in, 1), spec.fan_in)
+    else:
+        k_w, k_b = jax.random.split(key)
+        p["w"] = _he(k_w, (spec.n_out, spec.adder_width, spec.n_monomials),
+                     spec.fan_in)
+        p["b"] = jnp.zeros((spec.n_out, spec.adder_width), jnp.float32)
+    return p
+
+
+def random_conn(key: jax.Array, spec: LayerSpec) -> jnp.ndarray:
+    """Random connectivity (the baseline): (n_out, A, F) indices, drawn
+    without replacement per neuron across the whole A*F budget."""
+    total = spec.total_fan_in
+
+    def one(k):
+        return jax.random.choice(k, spec.n_in, (total,),
+                                 replace=total > spec.n_in)
+
+    keys = jax.random.split(key, spec.n_out)
+    flat = jax.vmap(one)(keys)  # (n_out, A*F)
+    return flat.reshape(spec.n_out, spec.adder_width, spec.fan_in).astype(jnp.int32)
+
+
+def subneuron_transfer(params: dict, spec: LayerSpec,
+                       x_f: jnp.ndarray) -> jnp.ndarray:
+    """Map gathered fan-in values (..., n_out, A, F) -> pre-activation
+    (..., n_out, A).  Polynomial (PolyLUT) or sub-network (NeuraLUT)."""
+    if spec.hidden:
+        t = x_f
+        n_mats = len(params["subnet"])
+        for i, m in enumerate(params["subnet"]):
+            t = jnp.einsum("...naf,nafe->...nae", t, m["w"]) + m["b"]
+            if i < n_mats - 1:
+                t = jax.nn.relu(t)
+        skip = jnp.einsum("...naf,nafe->...nae", x_f, params["skip"])
+        return (t + skip)[..., 0]
+    feats = poly.expand(x_f, spec.degree)              # (..., n_out, A, M)
+    return jnp.einsum("...nam,nam->...na", feats, params["w"]) + params["b"]
+
+
+def layer_forward(params: dict, conn: jnp.ndarray, spec: LayerSpec,
+                  x: jnp.ndarray, train: bool = False
+                  ) -> Tuple[jnp.ndarray, dict]:
+    """x: (..., n_in) on the previous layer's quant grid.
+
+    Returns (y, new_params) where y is on this layer's out-quant grid
+    (or raw BN output for the output layer) and new_params carries
+    updated BN running stats when ``train``.
+    """
+    x_q = spec.in_quant.quantize(x)
+    x_f = x_q[..., conn]                               # (..., n_out, A, F)
+    pre = subneuron_transfer(params, spec, x_f)        # (..., n_out, A)
+
+    if spec.adder_width > 1:
+        sub = spec.sub_quant.quantize(pre)             # beta+1 bits
+        s = jnp.sum(sub, axis=-1)                      # adder
+    else:
+        s = pre[..., 0]
+
+    new_params = params
+    if train:
+        z, new_bn = bn_apply_train(params["bn"], s)
+        new_params = dict(params)
+        new_params["bn"] = new_bn
+    else:
+        z = bn_apply_eval(params["bn"], s)
+
+    if spec.is_output:
+        return z, new_params
+    y = spec.out_quant.quantize(jax.nn.relu(z))
+    return y, new_params
+
+
+def make_layer_specs(in_features: int, widths: Sequence[int], bits: int,
+                     fan_in: int, degree: int = 1, adder_width: int = 1,
+                     input_bits: Optional[int] = None,
+                     input_fan_in: Optional[int] = None,
+                     hidden: Tuple[int, ...] = ()) -> list:
+    """Build the per-layer spec list for a full LUT-DNN.
+
+    Mirrors the paper's configuration tables: the first layer may use a
+    different input bit-width (beta_i) and fan-in (F_i); hidden
+    activations are unsigned ``bits`` over [0,1]; the output layer emits
+    BN output directly (argmax logits).
+    """
+    specs = []
+    dims = [in_features] + list(widths)
+    for i in range(len(widths)):
+        first = i == 0
+        last = i == len(widths) - 1
+        b_in = (input_bits if (first and input_bits is not None) else bits)
+        f = (input_fan_in if (first and input_fan_in is not None) else fan_in)
+        iq = input_quant(b_in) if first else act_quant(bits)
+        oq = act_quant(bits)
+        specs.append(LayerSpec(
+            n_in=dims[i], n_out=dims[i + 1],
+            fan_in=min(f, dims[i]), degree=degree,
+            adder_width=adder_width, in_quant=iq, out_quant=oq,
+            hidden=hidden, is_output=last,
+        ))
+    return specs

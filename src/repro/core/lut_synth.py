@@ -1,0 +1,160 @@
+"""Truth-table synthesis: trained LUT-DNN -> per-neuron lookup tables.
+
+This is the paper's "RTL generation" stage re-targeted to TPU: instead
+of emitting Verilog, we enumerate every (beta*F)-bit input combination
+per sub-neuron (and every A*(beta+1)-bit combination per adder), push
+them through the trained transfer function in eval mode, and store the
+resulting output *codes*.  Inference then becomes pure integer
+gather — implemented by the Pallas ``lut_gather`` kernel on TPU and by
+its jnp oracle here.
+
+Bit-exactness contract (tested): for any input on the quant grid,
+``lut_forward(synthesise(model), x) == quantized forward(model, x)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import layers as L
+from repro.core.lutdnn import ModelSpec
+from repro.core.quant import QuantSpec, bn_fold
+
+
+@dataclasses.dataclass
+class LayerTables:
+    """Synthesised artefacts for one layer."""
+
+    conn: jnp.ndarray        # (n_out, A, F) int32 gather indices
+    sub_table: jnp.ndarray   # (n_out, A, 2**(b_in*F)) int32 output codes
+    add_table: jnp.ndarray   # (n_out, 2**(A*(b_in+1))) int32, or (n_out, 0)
+    in_bits: int
+    sub_bits: int            # bits of sub-table output codes
+    out_bits: int
+    fan_in: int
+    adder_width: int
+    is_output: bool
+    out_quant: QuantSpec
+    sub_quant: QuantSpec
+
+
+def _enum_codes(n_slots: int, bits: int) -> np.ndarray:
+    """All 2**(n_slots*bits) input-code tuples, shape (2**.., n_slots).
+
+    Slot 0 occupies the LOW bits of the packed index — this convention
+    must match kernels/lut_gather exactly.
+    """
+    total = 2 ** (n_slots * bits)
+    idx = np.arange(total, dtype=np.int64)
+    cols = [(idx >> (bits * i)) & ((1 << bits) - 1) for i in range(n_slots)]
+    return np.stack(cols, axis=1).astype(np.int32)
+
+
+def synthesise_layer(params: dict, conn: jnp.ndarray, spec: L.LayerSpec
+                     ) -> LayerTables:
+    b_in = spec.in_quant.bits
+    combos = jnp.asarray(_enum_codes(spec.fan_in, b_in))        # (K, F)
+    vals = spec.in_quant.from_code(combos)                      # (K, F)
+
+    # sub-neuron transfer for every neuron and combo: (K, n_out, A)
+    x_f = jnp.broadcast_to(vals[:, None, None, :],
+                           (vals.shape[0], spec.n_out, spec.adder_width,
+                            spec.fan_in))
+    pre = L.subneuron_transfer(params, spec, x_f)               # (K, n_out, A)
+
+    bn = bn_fold(params["bn"])
+    sq = spec.sub_quant
+    oq = spec.out_quant
+
+    if spec.adder_width > 1:
+        # sub-neuron LUT emits (beta+1)-bit codes of the quantized pre-sum
+        sub_codes = sq.to_code(pre)                             # (K, n_out, A)
+        sub_table = jnp.transpose(sub_codes, (1, 2, 0))         # (n_out, A, K)
+        # adder LUT: enumerate A codes of (beta+1) bits
+        acombos = jnp.asarray(_enum_codes(spec.adder_width, sq.bits))
+        avals = sq.from_code(acombos)                           # (Ka, A)
+        s = jnp.sum(avals, axis=-1)                             # (Ka,)
+        z = s[:, None] * bn.scale[None, :] + bn.offset[None, :]  # (Ka, n_out)
+        if spec.is_output:
+            out_codes = _logit_codes(z, oq)
+        else:
+            out_codes = oq.to_code(oq.clip(jax.nn.relu(z)))
+        add_table = out_codes.T.astype(jnp.int32)               # (n_out, Ka)
+        sub_bits = sq.bits
+    else:
+        z = pre[..., 0] * bn.scale[None, :] + bn.offset[None, :]  # (K, n_out)
+        if spec.is_output:
+            codes = _logit_codes(z, oq)
+        else:
+            codes = oq.to_code(oq.clip(jax.nn.relu(z)))
+        sub_table = codes.T[:, None, :].astype(jnp.int32)       # (n_out, 1, K)
+        add_table = jnp.zeros((spec.n_out, 0), jnp.int32)
+        sub_bits = oq.bits
+
+    return LayerTables(
+        conn=conn, sub_table=sub_table.astype(jnp.int32),
+        add_table=add_table, in_bits=b_in, sub_bits=sub_bits,
+        out_bits=oq.bits, fan_in=spec.fan_in,
+        adder_width=spec.adder_width, is_output=spec.is_output,
+        out_quant=oq, sub_quant=sq)
+
+
+def _logit_codes(z: jnp.ndarray, oq: QuantSpec) -> jnp.ndarray:
+    """Output layer: quantize raw BN output over a wide signed range so
+    argmax is preserved.  16-bit signed fixed point, range +-8."""
+    wide = QuantSpec(bits=16, low=-8.0, high=8.0)
+    del oq
+    return wide.to_code(wide.clip(z))
+
+
+OUTPUT_QUANT = QuantSpec(bits=16, low=-8.0, high=8.0)
+
+
+def synthesise(model: dict, spec: ModelSpec) -> List[LayerTables]:
+    return [
+        synthesise_layer(p, c, s)
+        for p, c, s in zip(model["layers"], model["conn"], spec.layer_specs())
+    ]
+
+
+# --------------------------------------------------------------------------
+# jnp reference LUT-mode inference (the Pallas kernel mirrors this)
+# --------------------------------------------------------------------------
+
+def pack_index(codes_f: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """(..., F) int codes -> packed integer index (slot 0 = low bits)."""
+    f = codes_f.shape[-1]
+    shifts = jnp.asarray([bits * i for i in range(f)], jnp.int32)
+    return jnp.sum(codes_f.astype(jnp.int32) << shifts, axis=-1)
+
+
+def lut_layer_forward(tables: LayerTables, codes: jnp.ndarray) -> jnp.ndarray:
+    """codes: (B, n_in) int32 on this layer's input grid -> (B, n_out)."""
+    gathered = codes[:, tables.conn]                 # (B, n_out, A, F)
+    idx = pack_index(gathered, tables.in_bits)       # (B, n_out, A)
+    sub = _gather_tables(tables.sub_table, idx)      # (B, n_out, A)
+    if tables.adder_width > 1:
+        aidx = pack_index(sub, tables.sub_bits)      # (B, n_out)
+        return _gather_tables(tables.add_table[:, None, :],
+                              aidx[..., None])[..., 0]
+    return sub[..., 0]
+
+
+def _gather_tables(table: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """table: (n_out, A, K); idx: (B, n_out, A) -> (B, n_out, A)."""
+    return jnp.take_along_axis(
+        jnp.broadcast_to(table[None], (idx.shape[0],) + table.shape),
+        idx[..., None], axis=-1)[..., 0]
+
+
+def lut_forward(all_tables: List[LayerTables], x: jnp.ndarray,
+                first_quant: QuantSpec) -> jnp.ndarray:
+    """Full LUT-mode inference.  x: (B, n_in) real; returns logits."""
+    codes = first_quant.to_code(first_quant.clip(x))
+    for t in all_tables:
+        codes = lut_layer_forward(t, codes)
+    return OUTPUT_QUANT.from_code(codes)

@@ -1,0 +1,266 @@
+"""LUT-DNN network builder, trainers, and the SparseLUT toolflow.
+
+Two coupled training pipelines, exactly mirroring the paper's workflow
+(Fig. 6):
+
+1. **Connectivity search** (`init_search_model` / `make_search_step`):
+   a full-precision MLP with the Alg.-1 theta/sign representation is
+   trained with the Alg.-2 non-greedy controller.  Output: per-layer
+   feature masks ``M`` with exactly F_o actives per neuron.
+
+2. **LUT-DNN QAT** (`init_model` / `make_train_step`): quantized
+   LogicNets / PolyLUT / PolyLUT-Add / NeuraLUT training over a fixed
+   connectivity (random, or the mask from step 1 via
+   ``masks_to_conn``).  Output: a model synthesisable to truth tables
+   (core/lut_synth).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import layers as L
+from repro.core import masking, sparse_train
+from repro.core.sparse_train import SparsityConfig
+from repro.optim import adamw
+from repro.optim.adamw import apply_updates
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """A full LUT-DNN configuration (one row of paper Table III / V)."""
+
+    name: str
+    in_features: int
+    widths: Tuple[int, ...]
+    bits: int                   # beta
+    fan_in: int                 # F
+    degree: int = 1             # D
+    adder_width: int = 1        # A
+    input_bits: Optional[int] = None   # beta_i
+    input_fan_in: Optional[int] = None  # F_i
+    hidden: Tuple[int, ...] = ()        # NeuraLUT sub-net widths
+
+    def layer_specs(self) -> list:
+        return L.make_layer_specs(
+            self.in_features, self.widths, self.bits, self.fan_in,
+            self.degree, self.adder_width, self.input_bits,
+            self.input_fan_in, self.hidden)
+
+    @property
+    def table_entries(self) -> int:
+        return sum(s.layer_table_entries for s in self.layer_specs())
+
+
+# --------------------------------------------------------------------------
+# QAT model over fixed connectivity
+# --------------------------------------------------------------------------
+
+def init_model(key: jax.Array, spec: ModelSpec,
+               conn: Optional[Sequence[jnp.ndarray]] = None) -> dict:
+    specs = spec.layer_specs()
+    keys = jax.random.split(key, 2 * len(specs))
+    params = [L.init_layer(keys[2 * i], s) for i, s in enumerate(specs)]
+    if conn is None:
+        conn = [L.random_conn(keys[2 * i + 1], s) for i, s in enumerate(specs)]
+    return {"layers": params, "conn": list(conn)}
+
+
+def forward(model: dict, spec: ModelSpec, x: jnp.ndarray,
+            train: bool = False) -> Tuple[jnp.ndarray, dict]:
+    specs = spec.layer_specs()
+    new_layers = []
+    h = x
+    for p, c, s in zip(model["layers"], model["conn"], specs):
+        h, p2 = L.layer_forward(p, c, s, h, train=train)
+        new_layers.append(p2)
+    return h, {"layers": new_layers, "conn": model["conn"]}
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[..., None], axis=-1))
+
+
+def accuracy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+
+
+def make_train_step(spec: ModelSpec, lr=1e-3, weight_decay: float = 0.0):
+    """Returns (init_state, step) for QAT training of a LUT-DNN."""
+    opt_init, opt_update = adamw(lr, weight_decay=weight_decay)
+
+    def init_state(key):
+        model = init_model(key, spec)
+        return {"model": model, "opt": opt_init(model["layers"])}
+
+    def step(state, batch):
+        x, y = batch["x"], batch["y"]
+
+        def loss_fn(layer_params):
+            m = {"layers": layer_params, "conn": state["model"]["conn"]}
+            logits, new_m = forward(m, spec, x, train=True)
+            return cross_entropy(logits, y), (new_m, accuracy(logits, y))
+
+        (loss, (new_m, acc)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state["model"]["layers"])
+        updates, new_opt = opt_update(grads, state["opt"],
+                                      state["model"]["layers"])
+        new_layers = apply_updates(new_m["layers"], updates)
+        # BN stats are not optimizer-updated; keep the fresh running stats
+        for i, p in enumerate(new_m["layers"]):
+            new_layers[i]["bn"] = p["bn"]
+        new_state = {"model": {"layers": new_layers,
+                               "conn": state["model"]["conn"]},
+                     "opt": new_opt}
+        return new_state, {"loss": loss, "acc": acc}
+
+    return init_state, step
+
+
+def make_eval_step(spec: ModelSpec):
+    def eval_step(model, batch):
+        logits, _ = forward(model, spec, batch["x"], train=False)
+        return accuracy(logits, batch["y"]), cross_entropy(logits, batch["y"])
+    return eval_step
+
+
+# --------------------------------------------------------------------------
+# Connectivity search (full precision, Alg. 1 + Alg. 2)
+# --------------------------------------------------------------------------
+
+def init_search_model(key: jax.Array, spec: ModelSpec,
+                      initial_fan_in: Optional[int] = None) -> list:
+    """Full-precision theta/sign MLP with the LUT-DNN's topology widths."""
+    dims = [spec.in_features] + list(spec.widths)
+    keys = jax.random.split(key, len(spec.widths))
+    return [
+        masking.init_theta_layer(keys[i], dims[i], dims[i + 1], initial_fan_in)
+        for i in range(len(spec.widths))
+    ]
+
+
+def search_forward(tlayers: Sequence[masking.ThetaLayer],
+                   x: jnp.ndarray) -> jnp.ndarray:
+    h = x
+    n = len(tlayers)
+    for i, tl in enumerate(tlayers):
+        h = h @ tl.effective_weight() + tl.bias
+        if i < n - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def search_sparsity_configs(spec: ModelSpec, phase_boundary: int,
+                            **kw) -> list:
+    """Per-layer Alg.-2 configs.  Target fan-in per OUTPUT neuron is the
+    total budget A*F (F_i-specific first layer respected)."""
+    specs = spec.layer_specs()
+    return [SparsityConfig(target_fan_in=s.total_fan_in,
+                           phase_boundary=phase_boundary, **kw)
+            for s in specs]
+
+
+def make_search_step(spec: ModelSpec, cfgs: Sequence[SparsityConfig],
+                     lr: float = 0.15, mode: str = "sparselut"):
+    """One fused step: SGD on (theta, bias) -> connectivity control.
+
+    mode = "sparselut" (Alg. 2, non-greedy, dense-to-sparse) |
+           "deepr"     (DeepR* baseline: sparse-to-sparse, greedy).
+
+    Paper fidelity note: Alg. 2 line 6 is a PLAIN SGD update
+    (theta <- theta - eta dE/dtheta - eta*alpha + eta*v).  An adaptive
+    optimizer (AdamW) normalizes per-parameter step sizes and thereby
+    ERASES the gradient-magnitude signal that the theta-ranking
+    prune/truncate steps depend on — measured consequence: post-
+    truncation accuracy collapses (0.21 vs 0.85+ with SGD) and the
+    learned mask stops localizing (EXPERIMENTS.md section 1, Fig. 8).
+    """
+    from repro.optim.adamw import sgd
+    opt_init, opt_update = sgd(lr, momentum=0.9)
+
+    def init_state(key):
+        k_m, k_c = jax.random.split(key)
+        fi = None if mode == "sparselut" else cfgs[0].target_fan_in
+        tlayers = init_search_model(k_m, spec, initial_fan_in=fi)
+        return {"tlayers": tlayers, "opt": opt_init(tlayers),
+                "key": k_c, "step": jnp.zeros((), jnp.int32)}
+
+    def step(state, batch):
+        x, y = batch["x"], batch["y"]
+
+        def loss_fn(tlayers):
+            logits = search_forward(tlayers, x)
+            return cross_entropy(logits, y), accuracy(logits, y)
+
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["tlayers"])
+        updates, new_opt = opt_update(grads, state["opt"], state["tlayers"])
+        tlayers = apply_updates(state["tlayers"], updates)
+        key, sub = jax.random.split(state["key"])
+        if mode == "sparselut":
+            tlayers = sparse_train.sparse_control_tree(
+                tlayers, sub, state["step"], cfgs, lr)
+        else:
+            keys = jax.random.split(sub, len(tlayers))
+            tlayers = [
+                masking.ThetaLayer(
+                    theta=sparse_train.deepr_control(t.theta, k, c, lr),
+                    sign=t.sign, bias=t.bias)
+                for t, k, c in zip(tlayers, keys, cfgs)
+            ]
+        new_state = {"tlayers": tlayers, "opt": new_opt, "key": key,
+                     "step": state["step"] + 1}
+        return new_state, {"loss": loss, "acc": acc}
+
+    return init_state, step
+
+
+def masks_to_conn(masks: Sequence[jnp.ndarray], spec: ModelSpec) -> list:
+    """Feature masks M -> per-layer gather tables (n_out, A, F)."""
+    conn = []
+    for m, s in zip(masks, spec.layer_specs()):
+        idx = masking.mask_to_indices(m, s.total_fan_in)   # (n_out, A*F)
+        conn.append(idx.reshape(s.n_out, s.adder_width, s.fan_in))
+    return conn
+
+
+def search_connectivity(key: jax.Array, spec: ModelSpec, batches,
+                        n_steps: int, phase_frac: float = 0.8,
+                        lr: float = 0.15, mode: str = "sparselut",
+                        **sparse_kw):
+    """End-to-end step-1 of the toolflow: returns (masks, history)."""
+    cfgs = search_sparsity_configs(
+        spec, phase_boundary=int(n_steps * phase_frac), **sparse_kw)
+    init_state, step = make_search_step(spec, cfgs, lr, mode=mode)
+    state = init_state(key)
+    jstep = jax.jit(step)
+    hist = []
+    for i in range(n_steps):
+        state, metrics = jstep(state, next(batches))
+        if i % max(n_steps // 10, 1) == 0:
+            hist.append({k: float(v) for k, v in metrics.items()})
+    masks = sparse_train.extract_masks(state["tlayers"], cfgs)
+    return masks, hist, state
+
+
+# --------------------------------------------------------------------------
+# Population training (N seeds at once; shards over the data axis)
+# --------------------------------------------------------------------------
+
+def population_init(key: jax.Array, spec: ModelSpec, n: int):
+    init_state, _ = make_train_step(spec)
+    return jax.vmap(init_state)(jax.random.split(key, n))
+
+
+def make_population_step(spec: ModelSpec, lr=1e-3):
+    _, step = make_train_step(spec, lr)
+
+    def pop_step(states, batch):
+        # every member sees the same batch; params differ per seed
+        return jax.vmap(step, in_axes=(0, None))(states, batch)
+
+    return pop_step

@@ -1,0 +1,121 @@
+"""Algorithm 1 — weight-mapping for SparseLUT connectivity search.
+
+Every connection k is represented by a trainable magnitude-and-status
+parameter ``theta_k`` (active iff theta_k > 0) and a frozen random sign
+``s_k``.  The effective weight is
+
+    w_k = theta_k * s_k * 1(theta_k > 0)
+
+Weight matrices are stored as (n_in, n_out); the per-neuron fan-in
+constraint applies along axis 0 (each *output* neuron draws from at most
+F input connections).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class ThetaLayer:
+    """Pytree carrying the Alg.-1 representation of one weight matrix."""
+
+    theta: jnp.ndarray  # (n_in, n_out) float32; active iff > 0
+    sign: jnp.ndarray   # (n_in, n_out) float32 in {-1, +1}; frozen
+    bias: jnp.ndarray   # (n_out,) float32
+
+    def effective_weight(self) -> jnp.ndarray:
+        return effective_weight(self.theta, self.sign)
+
+    def mask(self) -> jnp.ndarray:
+        return (self.theta > 0).astype(jnp.float32)
+
+    def fan_in(self) -> jnp.ndarray:
+        """Active-connection count per output neuron: (n_out,) int32."""
+        return jnp.sum(self.theta > 0, axis=0).astype(jnp.int32)
+
+
+jax.tree_util.register_pytree_node(
+    ThetaLayer,
+    lambda t: ((t.theta, t.sign, t.bias), None),
+    lambda _, c: ThetaLayer(*c),
+)
+
+
+def effective_weight(theta: jnp.ndarray, sign: jnp.ndarray) -> jnp.ndarray:
+    """w = theta * sign * 1(theta > 0).
+
+    The indicator gates the gradient too: d w / d theta = sign for active
+    connections and 0 for inactive ones, which is exactly the paper's
+    "only active connections are updated" rule (Alg. 2 line 5).
+    """
+    active = (theta > 0).astype(theta.dtype)
+    return theta * sign * active
+
+
+def init_theta_layer(key: jax.Array, n_in: int, n_out: int,
+                     initial_fan_in: Optional[int] = None) -> ThetaLayer:
+    """Alg. 1: theta = |W0| ⊙ is_con with F_i random connections/neuron.
+
+    ``initial_fan_in=None`` (or >= n_in) starts dense — the paper's
+    recommended dense-to-sparse configuration (F_i = N).
+    """
+    k_w, k_s, k_c = jax.random.split(key, 3)
+    w0 = jax.random.normal(k_w, (n_in, n_out), jnp.float32)
+    theta = jnp.abs(w0)
+    if initial_fan_in is not None and initial_fan_in < n_in:
+        # per output neuron, keep F_i random connections active
+        scores = jax.random.uniform(k_c, (n_in, n_out))
+        # rank along axis 0: rank r means r inputs have higher score
+        order = jnp.argsort(-scores, axis=0)
+        ranks = jnp.argsort(order, axis=0)
+        is_con = (ranks < initial_fan_in).astype(jnp.float32)
+        theta = theta * is_con
+    sign = jnp.where(
+        jax.random.bernoulli(k_s, 0.5, (n_in, n_out)), 1.0, -1.0
+    ).astype(jnp.float32)
+    return ThetaLayer(theta=theta, sign=sign, bias=jnp.zeros((n_out,), jnp.float32))
+
+
+def random_mask(key: jax.Array, n_in: int, n_out: int, fan_in: int) -> jnp.ndarray:
+    """The baseline the paper compares against: fixed random sparsity
+    with exactly ``fan_in`` connections per output neuron."""
+    scores = jax.random.uniform(key, (n_in, n_out))
+    order = jnp.argsort(-scores, axis=0)
+    ranks = jnp.argsort(order, axis=0)
+    return (ranks < min(fan_in, n_in)).astype(jnp.float32)
+
+
+def mask_to_indices(mask: jnp.ndarray, fan_in: int) -> jnp.ndarray:
+    """Convert a {0,1} mask (n_in, n_out) with <= fan_in actives per
+    column into a dense connection-index table (n_out, fan_in).
+
+    Columns with fewer than ``fan_in`` actives repeat their first active
+    index (harmless: gather duplicates, weights on duplicates are zero).
+    Used by the gather-based training layers and the LUT synthesiser.
+    """
+    n_in, n_out = mask.shape
+    # top-fan_in by mask value, tie-broken by input index for determinism
+    tie = -jnp.arange(n_in, dtype=jnp.float32)[:, None] / (2.0 * n_in)
+    score = mask + tie
+    order = jnp.argsort(-score, axis=0)  # (n_in, n_out)
+    idx = order[:fan_in, :].T  # (n_out, fan_in)
+    # replace indices that point at inactive rows with the first (active) one
+    picked_active = jnp.take_along_axis(mask.T, idx, axis=1) > 0
+    first = idx[:, :1]
+    return jnp.where(picked_active, idx, first).astype(jnp.int32)
+
+
+def final_mask(theta: jnp.ndarray, target_fan_in: int) -> jnp.ndarray:
+    """Alg. 2 line 21 with a hard guarantee: the returned feature mask M
+    has EXACTLY min(F_o, n_in) actives per output neuron — the top-F_o
+    thetas (ties broken deterministically)."""
+    n_in, _ = theta.shape
+    f = min(target_fan_in, n_in)
+    tie = -jnp.arange(n_in, dtype=jnp.float32)[:, None] / (2.0 * n_in)
+    order = jnp.argsort(-(theta + tie * 1e-9), axis=0)
+    ranks = jnp.argsort(order, axis=0)
+    return (ranks < f).astype(jnp.float32)

@@ -1,0 +1,64 @@
+"""Monomial feature expansion for PolyLUT neurons.
+
+PolyLUT replaces each neuron's linear form with a multivariate
+polynomial of its F fan-in inputs: all monomials of total degree <= D
+(including the constant term handled by the bias).  The expansion is a
+static, trace-time construction — exponent tuples are enumerated with
+itertools and baked into the jaxpr, so the compiled code is a fixed
+sequence of multiplies.
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+from typing import Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+
+@functools.lru_cache(maxsize=None)
+def monomial_exponents(fan_in: int, degree: int) -> np.ndarray:
+    """Exponent matrix E of shape (n_mono, fan_in).
+
+    Row m gives the per-input exponents of monomial m; total degree in
+    [1, degree] (degree-0 constant is the bias, not a feature).  Order is
+    deterministic: degree-1 terms first (so D=1 reduces exactly to the
+    linear/LogicNets case with identity expansion), then higher degrees
+    lexicographically.
+    """
+    if fan_in <= 0:
+        raise ValueError("fan_in must be positive")
+    if degree < 1:
+        raise ValueError("degree must be >= 1")
+    rows = []
+    for total in range(1, degree + 1):
+        # compositions of `total` into fan_in non-negative parts
+        for combo in itertools.combinations_with_replacement(range(fan_in), total):
+            e = np.zeros((fan_in,), dtype=np.int32)
+            for i in combo:
+                e[i] += 1
+            rows.append(e)
+    return np.stack(rows, axis=0)
+
+
+def num_monomials(fan_in: int, degree: int) -> int:
+    return monomial_exponents(fan_in, degree).shape[0]
+
+
+def expand(x: jnp.ndarray, degree: int) -> jnp.ndarray:
+    """Monomial-expand the trailing axis.
+
+    x: (..., F)  ->  (..., n_mono) where n_mono = C(F + D, D) - 1.
+    For degree 1 this is the identity (returns x itself).
+    """
+    fan_in = x.shape[-1]
+    if degree == 1:
+        return x
+    E = jnp.asarray(monomial_exponents(fan_in, degree))  # (M, F)
+    # x: (..., 1, F) ** (M, F) -> prod over F -> (..., M)
+    return jnp.prod(x[..., None, :] ** E, axis=-1)
+
+
+def expand_shape(in_shape: Tuple[int, ...], degree: int) -> Tuple[int, ...]:
+    return in_shape[:-1] + (num_monomials(in_shape[-1], degree),)

@@ -1,0 +1,131 @@
+"""Quantization-aware-training primitives for LUT-DNNs.
+
+The FPGA toolflow in the paper uses Brevitas QAT; here we implement the
+same uniform affine quantizers in pure JAX with straight-through
+estimators (STE).  Every activation edge in a LUT-DNN carries a
+``QuantSpec`` so that the truth-table synthesiser (``lut_synth``) can
+enumerate exactly the codes the hardware would see.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """A uniform quantizer over a fixed range.
+
+    ``bits`` output levels span ``[low, high]`` inclusive.  ``signed`` is
+    only metadata (code interpretation); the value grid is what matters.
+    """
+
+    bits: int
+    low: float = 0.0
+    high: float = 1.0
+
+    @property
+    def levels(self) -> int:
+        return 2 ** self.bits
+
+    @property
+    def step(self) -> float:
+        return (self.high - self.low) / (self.levels - 1)
+
+    def clip(self, x: jnp.ndarray) -> jnp.ndarray:
+        return jnp.clip(x, self.low, self.high)
+
+    def to_code(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Real value -> integer code in [0, 2**bits)."""
+        xc = self.clip(x)
+        return jnp.round((xc - self.low) / self.step).astype(jnp.int32)
+
+    def from_code(self, code: jnp.ndarray) -> jnp.ndarray:
+        """Integer code -> real grid value."""
+        return code.astype(jnp.float32) * self.step + self.low
+
+    def quantize(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Fake-quantize with STE: forward = grid value, grad = identity."""
+        q = self.from_code(self.to_code(x))
+        return x + jax.lax.stop_gradient(q - x)
+
+    def all_codes(self) -> jnp.ndarray:
+        return jnp.arange(self.levels, dtype=jnp.int32)
+
+    def all_values(self) -> jnp.ndarray:
+        return self.from_code(self.all_codes())
+
+
+def input_quant(bits: int) -> QuantSpec:
+    """Input quantizer: signed range [-1, 1] (paper quantizes inputs to
+    beta bits over a symmetric range)."""
+    return QuantSpec(bits=bits, low=-1.0, high=1.0)
+
+
+def act_quant(bits: int) -> QuantSpec:
+    """Post-ReLU activation quantizer: non-negative range [0, 1].
+
+    The paper notes ReLU outputs can drop the sign bit; we keep *bits*
+    levels over [0, 1].
+    """
+    return QuantSpec(bits=bits, low=0.0, high=1.0)
+
+
+def adder_quant(bits: int, fan_in: int) -> QuantSpec:
+    """Sub-neuron output quantizer feeding the A-input adder.
+
+    Internal word length is (bits + 1) per the paper to avoid overflow;
+    range widened to [-A, A] at the adder output is handled by the
+    adder-layer BN, so the per-sub-neuron spec stays [-1, 1] with an
+    extra bit of resolution.
+    """
+    del fan_in
+    return QuantSpec(bits=bits + 1, low=-1.0, high=1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchNormParams:
+    """Inference-folded batch-norm: y = x * scale + offset."""
+
+    scale: jnp.ndarray
+    offset: jnp.ndarray
+
+    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        return x * self.scale + self.offset
+
+
+def bn_init(n: int) -> dict:
+    return {
+        "gamma": jnp.ones((n,), jnp.float32),
+        "beta": jnp.zeros((n,), jnp.float32),
+        "mean": jnp.zeros((n,), jnp.float32),
+        "var": jnp.ones((n,), jnp.float32),
+    }
+
+
+def bn_apply_train(p: dict, x: jnp.ndarray, momentum: float = 0.9,
+                   eps: float = 1e-5) -> Tuple[jnp.ndarray, dict]:
+    """Training-mode batch norm over leading axes; returns output and
+    updated running stats."""
+    axes = tuple(range(x.ndim - 1))
+    mean = jnp.mean(x, axis=axes)
+    var = jnp.var(x, axis=axes)
+    y = (x - mean) / jnp.sqrt(var + eps) * p["gamma"] + p["beta"]
+    new_p = dict(p)
+    new_p["mean"] = momentum * p["mean"] + (1 - momentum) * mean
+    new_p["var"] = momentum * p["var"] + (1 - momentum) * var
+    return y, new_p
+
+
+def bn_apply_eval(p: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    return (x - p["mean"]) / jnp.sqrt(p["var"] + eps) * p["gamma"] + p["beta"]
+
+
+def bn_fold(p: dict, eps: float = 1e-5) -> BatchNormParams:
+    """Fold running stats into an affine (scale, offset) pair for the
+    truth-table synthesiser."""
+    inv = p["gamma"] / jnp.sqrt(p["var"] + eps)
+    return BatchNormParams(scale=inv, offset=p["beta"] - p["mean"] * inv)

@@ -1,0 +1,150 @@
+"""Algorithm 2 — SparseLUT non-greedy connectivity training.
+
+Fully vectorized JAX implementation of the per-step connectivity
+control.  The gradient step itself is delegated to the optimizer (the
+theta -> w indicator already routes gradients only to active
+connections); this module applies, per training step:
+
+  * L1 shrinkage (eta * alpha) and random-walk noise (eta * v,
+    v ~ N(0, G^2)) to active connections                 [Alg. 2 line 6]
+  * implicit deactivation of sign-flipped thetas          [line 7]
+  * regrowth of |R| random inactive connections at eps1   [lines 9-11]
+  * progressive phase (t < T): -eps2 penalty on the |R|
+    lowest-ranked active connections                      [lines 13-16]
+  * fine-tuning phase (t >= T): hard deactivation of the
+    |R| lowest-ranked active connections                  [lines 17-20]
+
+Everything is argsort-based per output-neuron column, so a whole layer
+is one fused XLA program; no Python loops over connections.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.masking import ThetaLayer, final_mask
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsityConfig:
+    """Hyper-parameters of Alg. 2 (paper Section IV-C defaults)."""
+
+    target_fan_in: int          # F_o
+    phase_boundary: int         # T, in steps; t < T => progressive phase
+    eps1: float = 1e-12         # regrow initialisation
+    eps2: float = 5e-5          # progressive-phase penalty
+    noise_std: float = 1e-5     # G, random-walk scale
+    l1: float = 1e-5            # alpha, shrinkage
+
+
+def _ranks_desc(score: jnp.ndarray) -> jnp.ndarray:
+    """Per-column dense ranks: 0 = largest score (along axis 0)."""
+    order = jnp.argsort(-score, axis=0)
+    return jnp.argsort(order, axis=0)
+
+
+def sparse_control(theta: jnp.ndarray, key: jax.Array, step: jnp.ndarray,
+                   cfg: SparsityConfig, lr: float) -> jnp.ndarray:
+    """One Alg.-2 control step on a (n_in, n_out) theta matrix.
+
+    ``step`` may be a traced scalar so the two phases live in one jitted
+    program (jnp.where, not Python if).
+    """
+    n_in, n_out = theta.shape
+    k_noise, k_grow = jax.random.split(key)
+
+    # --- line 6 (regularizer + random walk) on active connections ------
+    active = theta > 0
+    noise = jax.random.normal(k_noise, theta.shape) * cfg.noise_std
+    theta = jnp.where(active, theta - lr * cfg.l1 + lr * noise, theta)
+
+    # line 7: theta < 0 is now implicitly non-active
+    active = theta > 0
+    n_active = jnp.sum(active, axis=0)                     # (n_out,)
+    target = jnp.minimum(cfg.target_fan_in, n_in)
+    r = n_active - target                                   # R per neuron
+
+    # --- lines 9-11: regrow |R| random inactive connections ------------
+    grow_needed = jnp.maximum(-r, 0)                        # (n_out,)
+    grow_score = jnp.where(active, -jnp.inf,
+                           jax.random.uniform(k_grow, theta.shape))
+    grow_rank = _ranks_desc(grow_score)
+    grow_sel = (grow_rank < grow_needed[None, :]) & (~active)
+    theta = jnp.where(grow_sel, cfg.eps1, theta)
+
+    # --- lines 13-20: shed |R| excess active connections ----------------
+    excess = jnp.maximum(r, 0)
+    # ascending theta among actives: rank 0 = smallest active theta
+    prune_rank = _ranks_desc(jnp.where(active, -theta, -jnp.inf))
+    prune_sel = (prune_rank < excess[None, :]) & active
+    progressive = step < cfg.phase_boundary
+    theta = jnp.where(
+        prune_sel,
+        jnp.where(progressive, theta - cfg.eps2, 0.0),
+        theta,
+    )
+    return theta
+
+
+def deepr_control(theta: jnp.ndarray, key: jax.Array,
+                  cfg: SparsityConfig, lr: float) -> jnp.ndarray:
+    """DeepR* — the paper's fixed-fan-in adaptation of DeepR [10], used
+    as the comparison baseline (Fig. 9 / Table VI).
+
+    Differences from SparseLUT's Alg. 2: connections die ONLY by sign
+    flip (theta <= 0 after the gradient step); each step regrows exactly
+    enough random connections to restore the target fan-in — the
+    drop/regrow counts always match (greedy, no progressive phase).
+    """
+    n_in, n_out = theta.shape
+    k_noise, k_grow = jax.random.split(key)
+    active = theta > 0
+    noise = jax.random.normal(k_noise, theta.shape) * cfg.noise_std
+    theta = jnp.where(active, theta - lr * cfg.l1 + lr * noise, theta)
+    active = theta > 0
+    target = jnp.minimum(cfg.target_fan_in, n_in)
+    grow_needed = jnp.maximum(target - jnp.sum(active, axis=0), 0)
+    grow_score = jnp.where(active, -jnp.inf,
+                           jax.random.uniform(k_grow, theta.shape))
+    grow_rank = _ranks_desc(grow_score)
+    grow_sel = (grow_rank < grow_needed[None, :]) & (~active)
+    return jnp.where(grow_sel, cfg.eps1, theta)
+
+
+def sparse_control_layer(layer: ThetaLayer, key: jax.Array, step: jnp.ndarray,
+                         cfg: SparsityConfig, lr: float) -> ThetaLayer:
+    return ThetaLayer(
+        theta=sparse_control(layer.theta, key, step, cfg, lr),
+        sign=layer.sign,
+        bias=layer.bias,
+    )
+
+
+def sparse_control_tree(layers: Sequence[ThetaLayer], key: jax.Array,
+                        step: jnp.ndarray, cfgs: Sequence[SparsityConfig],
+                        lr: float) -> list:
+    keys = jax.random.split(key, len(layers))
+    return [
+        sparse_control_layer(l, k, step, c, lr)
+        for l, k, c in zip(layers, keys, cfgs)
+    ]
+
+
+def extract_masks(layers: Sequence[ThetaLayer],
+                  cfgs: Sequence[SparsityConfig]) -> list:
+    """Alg. 2 line 21 — final feature masks M, hard-truncated to exactly
+    F_o actives per neuron (ranked by theta)."""
+    return [final_mask(l.theta, c.target_fan_in) for l, c in zip(layers, cfgs)]
+
+
+def fan_in_violation(layers: Sequence[ThetaLayer],
+                     cfgs: Sequence[SparsityConfig]) -> jnp.ndarray:
+    """Max over neurons of (active_count - F_o); <= 0 means the fan-in
+    constraint holds everywhere.  Used by tests and the runtime monitor."""
+    worst = jnp.asarray(-(10 ** 9))
+    for l, c in zip(layers, cfgs):
+        worst = jnp.maximum(worst, jnp.max(l.fan_in() - c.target_fan_in))
+    return worst

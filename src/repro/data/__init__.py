@@ -1,0 +1,4 @@
+from repro.data.synthetic import (make_dataset, mnist_like, jsc_like,
+                                  cifar10_like)
+from repro.data.loader import batch_iterator, train_test_split
+from repro.data.tokens import synthetic_token_stream, lm_batch_iterator

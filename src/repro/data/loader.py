@@ -1,0 +1,47 @@
+"""Batch iteration and (optionally sharded) host->device feeding."""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def train_test_split(data: Dict[str, np.ndarray], test_frac: float = 0.2,
+                     seed: int = 0) -> Dict[str, Dict[str, np.ndarray]]:
+    """Deterministic shuffle-split: {"train": {...}, "test": {...}}."""
+    n = data["x"].shape[0]
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    n_test = int(n * test_frac)
+    te, tr = perm[:n_test], perm[n_test:]
+    take = lambda idx: {k: v[idx] for k, v in data.items()}
+    return {"train": take(tr), "test": take(te)}
+
+
+def batch_iterator(data: Dict[str, np.ndarray], batch_size: int,
+                   seed: int = 0,
+                   sharding: Optional[NamedSharding] = None
+                   ) -> Iterator[Dict[str, jnp.ndarray]]:
+    """Infinite shuffled epochs.  With ``sharding`` the batch dimension
+    is laid out over the mesh's data axes before compute (the standard
+    per-host feeding pattern; on multi-host each process would feed its
+    addressable shard)."""
+    n = data["x"].shape[0]
+    rng = np.random.default_rng(seed)
+    while True:
+        perm = rng.permutation(n)
+        for i in range(0, n - batch_size + 1, batch_size):
+            idx = perm[i:i + batch_size]
+            batch = {k: jnp.asarray(v[idx]) for k, v in data.items()}
+            if sharding is not None:
+                batch = jax.device_put(batch, sharding)
+            yield batch
+
+
+def data_sharding(mesh: Mesh, *, batch_axes: Tuple[str, ...] = ("data",)
+                  ) -> NamedSharding:
+    axes = tuple(a for a in batch_axes if a in mesh.axis_names)
+    return NamedSharding(mesh, P(axes if len(axes) > 1 else axes[0]))

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel ships three files: <name>.py (pl.pallas_call + BlockSpec),
+ops.py (dispatching wrapper; interpret mode on CPU), ref.py (pure-jnp
+oracle).  tests/test_kernels.py sweeps shapes/dtypes and asserts
+allclose against the oracles.
+
+  lut_gather     LUT-mode inference (the paper's primitive on TPU)
+  masked_matmul  fan-in-sparse matmul (training hot-spot; MXU one-hot trick)
+  wkv6           RWKV6 chunked linear-attention recurrence (assigned arch)
+"""

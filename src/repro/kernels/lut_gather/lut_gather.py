@@ -1,0 +1,119 @@
+"""Pallas TPU kernel for LUT-mode inference (truth-table gather).
+
+This is the TPU re-think of the paper's inference substrate.  On the
+FPGA, each neuron's transfer function is *burned into* 6-LUT fabric:
+lookup is free, routing is free, and the cost is area.  On a TPU the
+same artefact — per-neuron truth tables — becomes data resident in
+HBM/VMEM, and inference becomes integer gathers:
+
+  1. gather the F fan-in codes per (neuron, sub-neuron)   [routing]
+  2. bit-pack them into a table index (slot 0 = low bits) [address]
+  3. per-neuron table lookup                              [the LUT]
+  4. A > 1: pack the A sub-codes, look up the adder table [PolyLUT-Add]
+
+Blocking: grid over (batch tiles, neuron tiles).  A (TB, n_in) code
+block is re-used by every neuron tile (it stays in VMEM across the
+inner grid dim), and each neuron tile brings its own (TN, A, K) table
+slab.  K = 2**(b_in * F) is the whole point of the paper: PolyLUT-Add
+keeps K small (A * 2**(b*F) + 2**(A(b+1)) instead of 2**(b*F*A)), which
+is precisely what makes the per-tile table slab fit VMEM:
+
+    beta=2, F=6, A=2, TN=32: 32*2*4096*4 B = 1.0 MB   (fits)
+    equivalent fan-in 12 without Add: 32 * 2**24 * 4 = 2 GB   (cannot)
+
+So the architectural contribution of the paper maps 1:1 onto the TPU
+memory hierarchy: the Add-structure is what keeps truth tables
+VMEM-resident.  Steps 1 and 3 use vector gathers (VPU); step 2 is
+shift/add; there is no MXU work — LUT inference is gather-bound on TPU,
+and the roofline comparison LUT-vs-matmul inference is reported by
+benchmarks/table8_cost_model.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lut_kernel(codes_ref, conn_ref, sub_ref, add_ref, out_ref,
+                *, in_bits: int, sub_bits: int, use_adder: bool):
+    codes = codes_ref[...]                     # (TB, n_in) int32
+    conn = conn_ref[...]                       # (TN, A, F) int32
+    sub_t = sub_ref[...]                       # (TN, A, K)
+    TB = codes.shape[0]
+    TN, A, F = conn.shape
+
+    # 1) route: gather fan-in codes -> (TB, TN, A, F)
+    gathered = jnp.take(codes, conn.reshape(-1), axis=1).reshape(
+        TB, TN, A, F)
+    # 2) pack the table address (slot 0 = low bits)
+    shifts = (in_bits * jax.lax.broadcasted_iota(
+        jnp.int32, (1, 1, 1, F), 3))
+    idx = jnp.sum(gathered << shifts, axis=-1)            # (TB, TN, A)
+    # 3) the LUT: per-(neuron, sub-neuron) table gather
+    sub = jnp.take_along_axis(
+        jnp.broadcast_to(sub_t[None], (TB, TN, A, sub_t.shape[-1])),
+        idx[..., None], axis=-1)[..., 0]                  # (TB, TN, A)
+    if use_adder:
+        add_t = add_ref[...]                              # (TN, Ka)
+        ashift = (sub_bits * jax.lax.broadcasted_iota(
+            jnp.int32, (1, 1, A), 2))
+        aidx = jnp.sum(sub << ashift, axis=-1)            # (TB, TN)
+        out = jnp.take_along_axis(
+            jnp.broadcast_to(add_t[None], (TB,) + add_t.shape),
+            aidx[..., None], axis=-1)[..., 0]
+    else:
+        out = sub[..., 0]
+    out_ref[...] = out.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("in_bits", "sub_bits",
+                                             "block_b", "block_n",
+                                             "interpret"))
+def lut_gather_pallas(codes: jnp.ndarray, conn: jnp.ndarray,
+                      sub_table: jnp.ndarray, add_table: jnp.ndarray,
+                      in_bits: int, sub_bits: int,
+                      block_b: int = 256, block_n: int = 32,
+                      interpret: bool = False) -> jnp.ndarray:
+    """codes: (B, n_in) int32 activation codes on this layer's grid;
+    conn: (n_out, A, F); sub_table: (n_out, A, K); add_table: (n_out, Ka)
+    (Ka == 0 disables the adder path).  Returns (B, n_out) int32."""
+    B, n_in = codes.shape
+    n_out, A, F = conn.shape
+    use_adder = add_table.shape[-1] > 0
+
+    TB = min(block_b, B)
+    TN = min(block_n, n_out)
+    pad_b = (-B) % TB
+    pad_n = (-n_out) % TN
+    if pad_b:
+        codes = jnp.pad(codes, ((0, pad_b), (0, 0)))
+    if pad_n:
+        conn = jnp.pad(conn, ((0, pad_n), (0, 0), (0, 0)))
+        sub_table = jnp.pad(sub_table, ((0, pad_n), (0, 0), (0, 0)))
+        if use_adder:
+            add_table = jnp.pad(add_table, ((0, pad_n), (0, 0)))
+    if not use_adder:      # give the kernel a non-empty ref to bind
+        add_table = jnp.zeros((n_out + pad_n, 1), jnp.int32)
+    Bp, Np = B + pad_b, n_out + pad_n
+
+    kernel = functools.partial(_lut_kernel, in_bits=in_bits,
+                               sub_bits=sub_bits, use_adder=use_adder)
+    out = pl.pallas_call(
+        kernel,
+        grid=(Bp // TB, Np // TN),
+        in_specs=[
+            pl.BlockSpec((TB, n_in), lambda i, j: (i, 0)),
+            pl.BlockSpec((TN, A, F), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((TN, A, sub_table.shape[-1]),
+                         lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((TN, add_table.shape[-1]), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((TB, TN), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Bp, Np), jnp.int32),
+        interpret=interpret,
+    )(codes, conn, sub_table, add_table)
+    return out[:B, :n_out]

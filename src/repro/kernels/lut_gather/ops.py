@@ -1,0 +1,43 @@
+"""Public entry point for LUT-mode inference.
+
+``lut_layer`` runs one synthesised layer; ``lut_network`` runs a whole
+synthesised LUT-DNN (list of core/lut_synth.LayerTables) and matches
+core/lut_synth.lut_forward bit-exactly (tested).
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lut_gather.lut_gather import lut_gather_pallas
+from repro.kernels.lut_gather import ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def lut_layer(codes: jnp.ndarray, conn: jnp.ndarray,
+              sub_table: jnp.ndarray, add_table: jnp.ndarray,
+              in_bits: int, sub_bits: int,
+              force_interpret: Optional[bool] = None) -> jnp.ndarray:
+    interpret = (not _on_tpu()) if force_interpret is None else force_interpret
+    return lut_gather_pallas(codes, conn, sub_table, add_table,
+                             in_bits=in_bits, sub_bits=sub_bits,
+                             interpret=interpret)
+
+
+def lut_network(tables: List, codes: jnp.ndarray,
+                force_interpret: Optional[bool] = None) -> jnp.ndarray:
+    """tables: List[core.lut_synth.LayerTables]; codes: (B, n_in) int32.
+    Returns the final layer's int32 output codes."""
+    for t in tables:
+        codes = lut_layer(codes, t.conn, t.sub_table, t.add_table,
+                          t.in_bits, t.sub_bits,
+                          force_interpret=force_interpret)
+    return codes
+
+
+lut_layer_reference = ref.lut_layer

@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for LUT-mode inference (the paper's primitive).
+
+A synthesised LUT-DNN layer is three integer artefacts per neuron
+(core/lut_synth.py):
+
+    conn       (n_out, A, F)  — which input codes feed each sub-neuron
+    sub_table  (n_out, A, 2**(b_in * F)) — sub-neuron truth tables
+    add_table  (n_out, 2**(A * b_sub))   — adder+BN+act truth tables
+                                           (empty when A == 1)
+
+Inference is pure integer work: gather the F fan-in codes, bit-pack
+them into a table index (slot 0 = LOW bits — the convention shared with
+core/lut_synth and the Pallas kernel), look up the sub-neuron output
+code, then (A > 1) pack the A sub-codes and look up the adder table.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pack_index(codes: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """(..., F) int codes -> packed index; slot 0 occupies the low bits."""
+    f = codes.shape[-1]
+    shifts = jnp.asarray([bits * i for i in range(f)], jnp.int32)
+    return jnp.sum(codes.astype(jnp.int32) << shifts, axis=-1)
+
+
+def lut_layer(codes: jnp.ndarray, conn: jnp.ndarray, sub_table: jnp.ndarray,
+              add_table: jnp.ndarray, in_bits: int, sub_bits: int
+              ) -> jnp.ndarray:
+    """codes: (B, n_in) int32 -> (B, n_out) int32 output codes."""
+    gathered = codes[:, conn]                         # (B, n_out, A, F)
+    idx = pack_index(gathered, in_bits)               # (B, n_out, A)
+    B = codes.shape[0]
+    n_out, A, _ = conn.shape
+    sub = jnp.take_along_axis(
+        jnp.broadcast_to(sub_table[None], (B,) + sub_table.shape),
+        idx[..., None], axis=-1)[..., 0]              # (B, n_out, A)
+    if add_table.shape[-1] == 0:
+        return sub[..., 0]
+    aidx = pack_index(sub, sub_bits)                  # (B, n_out)
+    out = jnp.take_along_axis(
+        jnp.broadcast_to(add_table[None], (B,) + add_table.shape),
+        aidx[..., None], axis=-1)[..., 0]
+    return out

@@ -1,0 +1,94 @@
+"""Pallas TPU kernel for the fan-in-sparse masked matmul.
+
+Hardware adaptation (FPGA -> TPU, the heart of this repo's co-design):
+the paper's a-priori fan-in sparsity maps each output neuron to F
+arbitrary input wires — free routing on an FPGA, but a *gather* on a
+TPU, and the VPU's cross-lane gather is the wrong tool for a
+compute-bound training loop.  We instead turn routing into MXU work:
+
+  * each (TB x TN) output tile builds the one-hot selection matrix
+    sel[n, f, i] = (conn[n, f] == i) on the fly with a lane-iota
+    compare (VPU, no memory traffic);
+  * the gather becomes x_tile @ sel^T — a dense (TB, n_in) x
+    (n_in, TN*F) matmul on the MXU;
+  * the weighted fan-in reduction folds into the same tile as an
+    elementwise multiply + F-axis sum.
+
+n_in for LUT-DNN layers is small (<= a few thousand), so the one-hot
+trick costs n_in/F more MACs than the math minimum but runs at MXU
+rates instead of gather rates — the classic FPGA-routing -> TPU-matmul
+trade recorded in DESIGN.md.
+
+VMEM per tile (TB=128, TN=64, F=8, n_in=1024, fp32):
+x 512 KB + sel 2 MB + out 32 KB — comfortably inside ~16 MB.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mm_kernel(x_ref, conn_ref, w_ref, b_ref, y_ref):
+    """Blocks: x (TB, n_in); conn (TN, F) int32; w (TN, F); b (TN,);
+    y (TB, TN)."""
+    x = x_ref[...]                                    # (TB, n_in)
+    conn = conn_ref[...]                              # (TN, F)
+    w = w_ref[...]                                    # (TN, F)
+    n_in = x.shape[1]
+    TN, F = conn.shape
+
+    # one-hot selection: (TN, F, n_in) — lane-iota compare, no gather
+    iota = jax.lax.broadcasted_iota(jnp.int32, (TN, F, n_in), 2)
+    sel = (iota == conn[:, :, None]).astype(x.dtype)
+
+    # route on the MXU: (TB, n_in) @ (n_in, TN*F)
+    gathered = jnp.dot(x, sel.reshape(TN * F, n_in).T,
+                       preferred_element_type=jnp.float32)
+    gathered = gathered.reshape(x.shape[0], TN, F)
+
+    y = jnp.sum(gathered * w[None], axis=-1)          # (TB, TN)
+    y_ref[...] = (y + b_ref[...][None]).astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_b", "block_n", "interpret"))
+def masked_matmul_pallas(x: jnp.ndarray, conn: jnp.ndarray, w: jnp.ndarray,
+                         bias: Optional[jnp.ndarray] = None,
+                         block_b: int = 128, block_n: int = 64,
+                         interpret: bool = False) -> jnp.ndarray:
+    """x: (B, n_in); conn: (n_out, F) int32; w: (n_out, F); bias (n_out,).
+    Returns (B, n_out) fp32."""
+    B, n_in = x.shape
+    n_out, F = conn.shape
+    if bias is None:
+        bias = jnp.zeros((n_out,), jnp.float32)
+
+    TB = min(block_b, B)
+    TN = min(block_n, n_out)
+    pad_b = (-B) % TB
+    pad_n = (-n_out) % TN
+    xp = jnp.pad(x, ((0, pad_b), (0, 0))) if pad_b else x
+    cp = jnp.pad(conn, ((0, pad_n), (0, 0))) if pad_n else conn
+    wp = jnp.pad(w, ((0, pad_n), (0, 0))) if pad_n else w
+    bp = jnp.pad(bias, (0, pad_n)) if pad_n else bias
+    Bp, Np = B + pad_b, n_out + pad_n
+
+    y = pl.pallas_call(
+        _mm_kernel,
+        grid=(Bp // TB, Np // TN),
+        in_specs=[
+            pl.BlockSpec((TB, n_in), lambda i, j: (i, 0)),
+            pl.BlockSpec((TN, F), lambda i, j: (j, 0)),
+            pl.BlockSpec((TN, F), lambda i, j: (j, 0)),
+            pl.BlockSpec((TN,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((TB, TN), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Bp, Np), jnp.float32),
+        interpret=interpret,
+    )(xp.astype(jnp.float32), cp, wp.astype(jnp.float32),
+      bp.astype(jnp.float32))
+    return y[:B, :n_out]

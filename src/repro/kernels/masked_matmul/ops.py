@@ -1,0 +1,27 @@
+"""Public entry point for the fan-in-sparse masked matmul kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.masked_matmul.masked_matmul import masked_matmul_pallas
+from repro.kernels.masked_matmul import ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def masked_matmul(x: jnp.ndarray, conn: jnp.ndarray, w: jnp.ndarray,
+                  bias: Optional[jnp.ndarray] = None,
+                  block_b: int = 128, block_n: int = 64,
+                  force_interpret: Optional[bool] = None) -> jnp.ndarray:
+    """y[b, n] = sum_f x[b, conn[n, f]] * w[n, f] (+ bias[n])."""
+    interpret = (not _on_tpu()) if force_interpret is None else force_interpret
+    return masked_matmul_pallas(x, conn, w, bias, block_b=block_b,
+                                block_n=block_n, interpret=interpret)
+
+
+masked_matmul_reference = ref.masked_matmul

@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for the fan-in-sparse masked matmul.
+
+The LUT-DNN training hot-spot: every output neuron reads exactly F
+inputs selected by an integer connectivity table (SparseLUT's learned
+mask, or the random baseline).  Connectivity is *data*, not structure —
+the same kernel serves random and optimized masks.
+
+    y[b, n] = act( sum_f w[n, f] * x[b, conn[n, f]] + bias[n] )
+
+The PolyLUT degree-D generalization expands the gathered fan-in vector
+into monomial features first (see core/poly); the kernel handles the
+linear (D=1, LogicNets) case which dominates training time — degree
+expansion composes on top of the gather output.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def masked_matmul(x: jnp.ndarray, conn: jnp.ndarray, w: jnp.ndarray,
+                  bias: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """x: (B, n_in); conn: (n_out, F) int32; w: (n_out, F).
+
+    Returns (B, n_out) = sum_f x[:, conn[n, f]] * w[n, f] (+ bias).
+    """
+    gathered = x[:, conn]                    # (B, n_out, F)
+    y = jnp.einsum("bnf,nf->bn", gathered, w)
+    if bias is not None:
+        y = y + bias
+    return y
+
+
+def masked_matmul_dense(x: jnp.ndarray, conn: jnp.ndarray, w: jnp.ndarray,
+                        n_in: int,
+                        bias: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Equivalent dense form: scatter (conn, w) into a (n_in, n_out)
+    matrix and matmul — the 'sparse-large' formulation the gather
+    kernel replaces (used by tests as a second oracle)."""
+    n_out, F = conn.shape
+    dense = jnp.zeros((n_in, n_out), w.dtype)
+    cols = jnp.broadcast_to(jnp.arange(n_out)[:, None], (n_out, F))
+    dense = dense.at[conn.reshape(-1), cols.reshape(-1)].add(w.reshape(-1))
+    y = x @ dense
+    if bias is not None:
+        y = y + bias
+    return y

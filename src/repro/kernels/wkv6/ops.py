@@ -1,0 +1,37 @@
+"""Public entry point for the WKV6 kernel.
+
+``wkv6(...)`` dispatches to the Pallas TPU kernel on TPU backends and
+to interpret mode elsewhere (this container is CPU-only: interpret mode
+executes the kernel body in Python, which is how the kernel is
+validated against the pure-jnp oracle — see tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wkv6.wkv6 import wkv6_pallas, DEFAULT_CHUNK
+from repro.kernels.wkv6 import ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def wkv6(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+         logw: jnp.ndarray, u: jnp.ndarray,
+         s0: Optional[jnp.ndarray] = None,
+         chunk: int = DEFAULT_CHUNK,
+         force_interpret: Optional[bool] = None
+         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """RWKV6 WKV recurrence: (o, s_end) — see kernels/wkv6/ref.py."""
+    interpret = (not _on_tpu()) if force_interpret is None else force_interpret
+    return wkv6_pallas(r, k, v, logw, u, s0, chunk=chunk,
+                       interpret=interpret)
+
+
+def wkv6_reference(r, k, v, logw, u, s0=None, chunk: int = DEFAULT_CHUNK):
+    """Chunked jnp oracle (differentiable; used for training fallback)."""
+    return ref.wkv_chunked(r, k, v, logw, u, s0, chunk=chunk)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the RWKV6 (Finch) WKV recurrence.
+
+State S_t in R^{K x V} per (batch, head):
+
+    o_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T ,   w_t = exp(logw_t) in (0, 1]
+
+``wkv_naive`` is the exact sequential definition (the ground truth the
+kernel and the chunked form are tested against); ``wkv_chunked`` is the
+factored q~/k~ chunk-parallel algorithm the Pallas kernel mirrors
+block-for-block.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.recurrent import wkv_chunked_ref, wkv_naive  # re-export
+
+wkv_chunked = wkv_chunked_ref
+
+__all__ = ["wkv_naive", "wkv_chunked"]

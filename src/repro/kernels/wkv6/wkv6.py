@@ -1,0 +1,130 @@
+"""Pallas TPU kernel for the RWKV6 chunked WKV recurrence.
+
+TPU adaptation of the (GPU-targeted) RWKV6 CUDA kernel: instead of one
+thread-block per (b, h) marching token-by-token through shared memory,
+we re-block the recurrence for the MXU:
+
+  * the sequence is cut into chunks of C tokens; within a chunk the
+    intra-token interaction is a (C x C) lower-triangular matmul and
+    the state interaction is a (C x K) @ (K x K) matmul — both MXU
+    shapes (C = 128 or 256, K = head dim 64);
+  * the chunk loop is the innermost ("arbitrary") grid dimension, so
+    the running state S (K x V fp32) lives in a VMEM scratch register
+    file across grid steps — the TPU analogue of persistent shared
+    memory;
+  * (batch, head) ride the outer parallel grid dims.
+
+VMEM working set per grid step: 4 x (C x K) inputs + (C x C) intra
+matrix + (K x K) state ~ 0.4 MB at C=256, K=64 — far inside the ~16 MB
+VMEM budget, leaving room for Mosaic's double buffering.
+
+Everything is computed in fp32 (the recurrence's exp() factorization is
+precision-sensitive; see models/recurrent.py LOG_DECAY_MIN contract).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 128
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref,
+                o_ref, sT_ref, state):
+    """Grid = (B, H, S // C); C-token chunk per step.
+
+    Refs (per block):
+      r,k,v,lw: (1, C, 1, K)   u: (1, K)   s0: (1, 1, K, K)
+      o: (1, C, 1, K)          sT: (1, 1, K, K)
+      state: VMEM scratch (K, K) fp32 — persists across the chunk loop.
+    """
+    c = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(c == 0)
+    def _init():
+        state[...] = s0_ref[0, 0]
+
+    rc = r_ref[0, :, 0, :]            # (C, K)
+    kc = k_ref[0, :, 0, :]
+    vc = v_ref[0, :, 0, :]
+    lwc = lw_ref[0, :, 0, :]
+    u = u_ref[0]                      # (K,)
+    s = state[...]                    # (K, V=K)
+
+    C = rc.shape[0]
+    cum = jnp.cumsum(lwc, axis=0)     # inclusive prefix log-decay
+    cum_ex = cum - lwc                # exclusive
+    total = cum[-1]                   # (K,)
+
+    q_t = rc * jnp.exp(cum_ex)        # queries see decay before them
+    k_t = kc * jnp.exp(-cum)          # keys carry inverse decay
+    inter = jnp.dot(q_t, s, preferred_element_type=jnp.float32)   # (C, V)
+
+    a = jnp.dot(q_t, k_t.T, preferred_element_type=jnp.float32)   # (C, C)
+    row = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    a = jnp.where(row > col, a, 0.0)  # strictly-causal intra-chunk
+    intra = jnp.dot(a, vc, preferred_element_type=jnp.float32)    # (C, V)
+
+    bonus = jnp.sum(rc * u[None, :] * kc, axis=-1, keepdims=True)  # (C, 1)
+    o_ref[0, :, 0, :] = inter + intra + bonus * vc
+
+    k_dec = kc * jnp.exp(total[None, :] - cum)  # decays after each token
+    state[...] = s * jnp.exp(total)[:, None] + jnp.dot(
+        k_dec.T, vc, preferred_element_type=jnp.float32)
+
+    @pl.when(c == nc - 1)
+    def _final():
+        sT_ref[0, 0] = state[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_pallas(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                logw: jnp.ndarray, u: jnp.ndarray,
+                s0: Optional[jnp.ndarray] = None,
+                chunk: int = DEFAULT_CHUNK,
+                interpret: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """r,k,v,logw: (B, S, H, K); u: (H, K); s0: (B, H, K, K) or None.
+
+    Returns (o (B, S, H, K) fp32, s_end (B, H, K, K) fp32).
+    S is padded to a multiple of ``chunk`` (pad tokens have logw=0,
+    k=0 — they leave the state untouched and their outputs are cropped).
+    """
+    B, S, H, K = r.shape
+    C = min(chunk, max(S, 1))
+    pad = (-S) % C
+    f32 = lambda t: t.astype(jnp.float32)
+    r, k, v, logw = f32(r), f32(k), f32(v), f32(logw)
+    if pad:
+        zpad = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v, logw = zpad(r), zpad(k), zpad(v), zpad(logw)
+    Sp = S + pad
+    if s0 is None:
+        s0 = jnp.zeros((B, H, K, K), jnp.float32)
+    s0 = f32(s0)
+    u = f32(u)
+
+    n_chunks = Sp // C
+    grid = (B, H, n_chunks)
+    seq_spec = pl.BlockSpec((1, C, 1, K), lambda b, h, c: (b, c, h, 0))
+    state_spec = pl.BlockSpec((1, 1, K, K), lambda b, h, c: (b, h, 0, 0))
+
+    o, sT = pl.pallas_call(
+        _wkv_kernel,
+        grid=grid,
+        in_specs=[seq_spec, seq_spec, seq_spec, seq_spec,
+                  pl.BlockSpec((1, K), lambda b, h, c: (h, 0)),
+                  state_spec],
+        out_specs=[seq_spec, state_spec],
+        out_shape=[jax.ShapeDtypeStruct((B, Sp, H, K), jnp.float32),
+                   jax.ShapeDtypeStruct((B, H, K, K), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((K, K), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, logw, u, s0)
+    return o[:, :S], sT

@@ -1,0 +1,313 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_XLA_EXTRA", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# Only this dry-run entry point requests 512 placeholder devices; smoke
+# tests and benchmarks see the real single CPU device.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves, without hardware:
+  * the sharding config is coherent (GSPMD partitions the step function
+    over the production mesh without errors);
+  * the memory footprint per device (``compiled.memory_analysis()``);
+  * the FLOP/byte/collective profile for the roofline analysis
+    (``compiled.cost_analysis()`` + HLO collective parsing).
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen2.5-3b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --driver --out runs/dryrun   # all cells
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+
+from repro.launch import roofline as RL
+from repro.launch.mesh import make_mesh, mesh_chip_count
+from repro.models import registry as R
+
+
+def _compile_cell(mesh, arch, shape, smoke, fsdp, remat, seq_on_model,
+                  donate, depth_groups=None, accum=1, overrides=None):
+    fn, args, meta = R.dryrun_cell(arch, shape, mesh=mesh, smoke=smoke,
+                                   fsdp=fsdp, remat=remat,
+                                   seq_on_model=seq_on_model,
+                                   depth_groups=depth_groups,
+                                   accum=accum, overrides=overrides)
+    donate_argnums = ()
+    if donate and meta["kind"] == "train":
+        donate_argnums = (0,)           # donate the state buffer
+    elif donate and meta["kind"] == "decode":
+        donate_argnums = (1,)           # donate the cache
+    with mesh:
+        compiled = jax.jit(
+            fn, donate_argnums=donate_argnums).lower(*args).compile()
+    return compiled, meta
+
+
+def _memory_record(compiled) -> Dict:
+    mem = compiled.memory_analysis()
+    rec: Dict = {}
+    if mem is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                rec[k] = int(v)
+    # peak per-device HBM estimate: live args + outputs(not aliased) + temps
+    args_b = rec.get("argument_size_in_bytes", 0)
+    out_b = rec.get("output_size_in_bytes", 0)
+    tmp_b = rec.get("temp_size_in_bytes", 0)
+    alias_b = rec.get("alias_size_in_bytes", 0)
+    rec["peak_bytes_per_device"] = args_b + max(out_b - alias_b, 0) + tmp_b
+    rec["fits_hbm_16g"] = rec["peak_bytes_per_device"] <= RL.HBM_GB * 1e9
+    return rec
+
+
+def _cost_record(compiled) -> Dict:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):          # older jax returns [dict]
+        cost = cost[0]
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0))}
+
+
+def run_cell(arch: str, shape: str, mesh_spec: str = "single",
+             smoke: bool = False, fsdp: Optional[bool] = None,
+             remat: bool = True, seq_on_model: bool = False,
+             donate: bool = True, save_hlo: Optional[str] = None,
+             exact: bool = False, accum: int = 1,
+             overrides: Optional[Dict] = None,
+             top_ops: bool = False) -> Dict:
+    """Lower + compile one cell; returns the JSON-able record.
+
+    Protocol (3 compiles, all fast):
+      1. the REAL deployable program (scan-over-layer-groups) — proves
+         sharding coherence and gives memory_analysis();
+      2+3. shallow fully-unrolled depth variants (1 and 2 periods) —
+         XLA cost analysis counts while bodies once, so FLOPs / bytes /
+         collective counts are extrapolated linearly in depth, which is
+         exact because periods are structurally identical.
+    ``exact=True`` instead fully unrolls the real depth (slow compile;
+    used for spot-validation of the extrapolation).
+    """
+    t0 = time.time()
+    mesh = make_mesh(mesh_spec)
+    chips = mesh_chip_count(mesh)
+
+    compiled, meta = _compile_cell(mesh, arch, shape, smoke, fsdp, remat,
+                                   seq_on_model, donate, accum=accum,
+                                   overrides=overrides)
+    mem_rec = _memory_record(compiled)
+    hlo = compiled.as_text()
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+    coll_scan = RL.parse_collectives(hlo)
+    t_main = time.time() - t0
+
+    # Cost lowers always use accum=1: the microbatch loop is a scan
+    # whose body XLA counts once; per-optimizer-step work is identical,
+    # so accum=1 gives the correct totals while the accum build above
+    # provides the real (reduced) memory peak.
+    G = meta["scan_groups_full"]
+    if exact and G:
+        # fully unroll the real depth (slow; validates the extrapolation)
+        c_ex, _ = _compile_cell(mesh, arch, shape, smoke, fsdp, remat,
+                                seq_on_model, donate, depth_groups=G,
+                                accum=1, overrides=overrides)
+        cost = _cost_record(c_ex)
+        coll = RL.parse_collectives(c_ex.as_text())
+        flops, bytes_acc = cost["flops"], cost["bytes"]
+        method = "exact-unroll"
+    elif G and not R.is_encdec(R.get_config(arch, smoke=smoke)):
+        # depths 2 and 3 (not 1 and 2): a depth-1 program puts its only
+        # period adjacent to both embedding and head, which XLA can
+        # fuse/partition differently — the slope then misestimates an
+        # interior period.  Guards: per-period slope clamped >= 0 and
+        # the total never below the measured shallow program.
+        d1, d2 = (2, 3) if G >= 3 else (1, max(G, 1))
+        c1, _ = _compile_cell(mesh, arch, shape, smoke, fsdp, remat,
+                              seq_on_model, donate, depth_groups=d1,
+                              accum=1, overrides=overrides)
+        c2, _ = _compile_cell(mesh, arch, shape, smoke, fsdp, remat,
+                              seq_on_model, donate, depth_groups=d2,
+                              accum=1, overrides=overrides)
+        f1, f2 = _cost_record(c1), _cost_record(c2)
+        k1 = RL.parse_collectives(c1.as_text())
+        k2 = RL.parse_collectives(c2.as_text())
+        span = max(d2 - d1, 1)
+
+        def ext(a, b):
+            slope = max((b - a) / span, 0.0)
+            return max(a + (G - d1) * slope, a)
+
+        flops = ext(f1["flops"], f2["flops"])
+        bytes_acc = ext(f1["bytes"], f2["bytes"])
+        coll = RL.extrapolate_collectives(k1, k2, G, d1=d1, d2=d2)
+        method = f"depth-extrapolated({d1},{d2})"
+    else:
+        cost = _cost_record(compiled)
+        flops, bytes_acc = cost["flops"], cost["bytes"]
+        coll = coll_scan
+        method = "direct"
+
+    if top_ops:
+        print("top HLO ops by result bytes (per chip, scanned program):")
+        for name, b, n in RL.top_ops_by_bytes(hlo, k=15):
+            print(f"  {name:<28s} {b/1e9:10.2f} GB  x{n}")
+        print("top collectives (scanned program, per chip):")
+        for op, b, snippet in RL.top_collectives(hlo, k=12):
+            print(f"  {op:<20s} {b/1e9:10.3f} GB  {snippet}")
+
+    roof = RL.roofline_terms(flops, bytes_acc, coll, chips,
+                             meta["model_flops"])
+    record = {
+        "arch": arch, "shape": shape, "mesh": mesh_spec, "chips": chips,
+        "smoke": smoke, "remat": remat, "fsdp": meta["fsdp"],
+        "seq_on_model": seq_on_model, "cost_method": method,
+        "accum": accum, "overrides": overrides or {},
+        "params_total": meta["params_total"],
+        "params_active": meta["params_active"],
+        "model_flops": meta["model_flops"],
+        "memory": mem_rec,
+        "cost": {"flops_per_chip": flops, "bytes_per_chip": bytes_acc},
+        "collectives": coll.to_dict(),
+        "roofline": roof.to_dict(),
+        "timing": {"total_s": round(time.time() - t0, 2),
+                   "main_compile_s": round(t_main, 2)},
+        "status": "ok",
+    }
+    return record
+
+
+def all_cells(include_skipped: bool = False):
+    for arch in R.ARCHS:
+        for shape in R.SHAPES:
+            reason = R.cell_is_skipped(arch, shape)
+            if reason and not include_skipped:
+                yield arch, shape, reason
+            else:
+                yield arch, shape, None
+
+
+def driver(out_dir: str, mesh_specs, smoke: bool, force: bool,
+           timeout_s: int = 3600) -> int:
+    """Run every cell in a fresh subprocess (isolation: one bad cell
+    cannot take down the sweep; each gets a clean XLA)."""
+    os.makedirs(out_dir, exist_ok=True)
+    failures = 0
+    for mesh_spec in mesh_specs:
+        for arch, shape, skip_reason in all_cells():
+            name = f"{arch}__{shape}__{mesh_spec}".replace("/", "_")
+            path = os.path.join(out_dir, name + ".json")
+            if skip_reason:
+                rec = {"arch": arch, "shape": shape, "mesh": mesh_spec,
+                       "status": "skipped", "reason": skip_reason}
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                print(f"SKIP {name}: {skip_reason}")
+                continue
+            if os.path.exists(path) and not force:
+                with open(path) as f:
+                    if json.load(f).get("status") == "ok":
+                        print(f"CACHED {name}")
+                        continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--mesh", mesh_spec,
+                   "--out", path]
+            if smoke:
+                cmd.append("--smoke")
+            t0 = time.time()
+            try:
+                r = subprocess.run(cmd, capture_output=True, text=True,
+                                   timeout=timeout_s)
+                ok = r.returncode == 0
+            except subprocess.TimeoutExpired:
+                ok, r = False, None
+            if not ok:
+                failures += 1
+                err = (r.stderr[-2000:] if r else "timeout")
+                with open(path, "w") as f:
+                    json.dump({"arch": arch, "shape": shape,
+                               "mesh": mesh_spec, "status": "failed",
+                               "error": err}, f, indent=1)
+                print(f"FAIL {name} ({time.time()-t0:.0f}s): {err[-300:]}")
+            else:
+                print(f"OK   {name} ({time.time()-t0:.0f}s)")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    help="single | multi | NxM | PxNxM")
+    ap.add_argument("--out", default=None, help="JSON output path/dir")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--seq-on-model", action="store_true",
+                    help="sequence-parallel activations")
+    ap.add_argument("--fsdp", choices=["auto", "on", "off"], default="auto")
+    ap.add_argument("--save-hlo", default=None)
+    ap.add_argument("--accum", type=int, default=1,
+                    help="gradient-accumulation microbatches (train)")
+    ap.add_argument("--override", action="append", default=[],
+                    help="config field override key=value (repeatable)")
+    ap.add_argument("--top-ops", action="store_true",
+                    help="print top HLO ops by result bytes")
+    ap.add_argument("--exact", action="store_true",
+                    help="fully unroll the real depth (slow; validates "
+                         "the depth extrapolation)")
+    ap.add_argument("--driver", action="store_true",
+                    help="run ALL cells x {single,multi} via subprocesses")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    if args.driver:
+        out = args.out or "runs/dryrun"
+        n_fail = driver(out, ["single", "multi"], args.smoke, args.force)
+        sys.exit(1 if n_fail else 0)
+
+    fsdp = {"auto": None, "on": True, "off": False}[args.fsdp]
+    overrides = {}
+    for kv in args.override:
+        k, _, v = kv.partition("=")
+        try:
+            overrides[k] = int(v)
+        except ValueError:
+            try:
+                overrides[k] = float(v)
+            except ValueError:
+                overrides[k] = {"true": True, "false": False}.get(v, v)
+    try:
+        rec = run_cell(args.arch, args.shape, args.mesh, smoke=args.smoke,
+                       fsdp=fsdp, remat=not args.no_remat,
+                       seq_on_model=args.seq_on_model,
+                       save_hlo=args.save_hlo, exact=args.exact,
+                       accum=args.accum, overrides=overrides or None,
+                       top_ops=args.top_ops)
+    except Exception:
+        traceback.print_exc()
+        sys.exit(1)
+    print(RL.summarize_cell(rec))
+    print(json.dumps({k: rec[k] for k in ("memory", "cost", "collectives",
+                                          "timing")}, indent=1))
+    if args.out:
+        out = args.out
+        if os.path.isdir(out):
+            out = os.path.join(
+                out, f"{args.arch}__{args.shape}__{args.mesh}.json")
+        with open(out, "w") as f:
+            json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

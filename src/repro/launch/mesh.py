@@ -1,0 +1,62 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state — device count is
+locked on first jax init, and only the dry-run process requests 512
+placeholder devices via XLA_FLAGS (see launch/dryrun.py lines 1-2).
+
+Mesh layout
+-----------
+* single-pod:  (16, 16)        axes ("data", "model")   = 256 chips
+* multi-pod:   (2, 16, 16)     axes ("pod", "data", "model") = 512 chips
+
+``pod`` x ``data`` jointly form the data-parallel domain; ``model``
+carries tensor/expert parallelism.  On real hardware the `model` axis
+maps onto the intra-pod ICI torus dimension with the highest bisection
+bandwidth and `pod` onto DCN; `jax.make_mesh` receives the axis order
+that makes the trailing axis innermost (fastest) on the device grid.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(spec: str = "single") -> Mesh:
+    """CLI helper: 'single' | 'multi' | 'NxM' | 'PxNxM' custom."""
+    if spec == "single":
+        return make_production_mesh(multi_pod=False)
+    if spec == "multi":
+        return make_production_mesh(multi_pod=True)
+    dims = tuple(int(x) for x in spec.split("x"))
+    if len(dims) == 2:
+        return jax.make_mesh(dims, ("data", "model"))
+    if len(dims) == 3:
+        return jax.make_mesh(dims, ("pod", "data", "model"))
+    raise ValueError(f"bad mesh spec {spec!r}")
+
+
+def mesh_chip_count(mesh: Mesh) -> int:
+    n = 1
+    for s in mesh.shape.values():
+        n *= s
+    return n
+
+
+def host_device_count_needed(spec: str = "single") -> int:
+    if spec == "single":
+        return 256
+    if spec == "multi":
+        return 512
+    n = 1
+    for x in spec.split("x"):
+        n *= int(x)
+    return n

@@ -1,0 +1,273 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+Three terms, in seconds, per the hardware constants of the target
+(TPU v5e-class chip):
+
+    compute    = HLO_FLOPs_per_chip   / PEAK_FLOPS
+    memory     = HLO_bytes_per_chip   / HBM_BW
+    collective = collective_bytes_per_chip / LINK_BW
+
+``cost_analysis()`` reports per-partition (per-chip) numbers for an
+SPMD module, so no further division by chip count is needed for the
+first two terms.  Collective bytes are NOT in cost_analysis: we parse
+the optimized HLO text and sum the shape bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute op
+(tuple shapes included).  Those shapes are the per-chip shard shapes in
+the partitioned module; wire cost per chip is modeled per op type with
+standard ring-algorithm factors over the participating group size.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+# hardware constants (per instructions): TPU v5e-class target
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+HBM_GB = 16.0              # v5e HBM capacity (for fit reporting)
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_REPLICA_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_RG_SIZE_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def shape_bytes(dtype: str, dims_str: str) -> float:
+    if dtype not in _DTYPE_BYTES:
+        return 0.0
+    n = 1
+    if dims_str.strip():
+        for d in dims_str.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _group_size(line: str) -> int:
+    """Participants per replica group of a collective (ring size)."""
+    m = _RG_SIZE_RE.search(line)
+    if m:  # iota form replica_groups=[ngroups,group_size]<=...
+        return int(m.group(2))
+    m = _REPLICA_GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0].strip("{} ")
+        if first:
+            return len([x for x in first.split(",") if x.strip() != ""])
+    return 2
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    bytes_by_type: Dict[str, float]     # summed result-shape bytes (per chip)
+    wire_bytes_by_type: Dict[str, float]  # modeled ring wire bytes per chip
+    total_bytes: float
+    total_wire_bytes: float
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def _wire_factor(op: str, group: int) -> float:
+    """Ring-algorithm bytes-on-wire per chip, as a multiple of the
+    op's result-shape bytes (the per-chip shard)."""
+    g = max(group, 2)
+    if op == "all-reduce":
+        return 2.0 * (g - 1) / g        # reduce-scatter + all-gather
+    if op == "all-gather":
+        return (g - 1) / g              # result is the gathered tensor
+    if op == "reduce-scatter":
+        return float(g - 1)             # result is the scattered shard
+    if op == "all-to-all":
+        return (g - 1) / g
+    if op == "collective-permute":
+        return 1.0
+    return 1.0
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: Dict[str, int] = {op: 0 for op in COLLECTIVE_OPS}
+    by_type: Dict[str, float] = {op: 0.0 for op in COLLECTIVE_OPS}
+    wire: Dict[str, float] = {op: 0.0 for op in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        lhs, _, rhs = s.partition(" = ")
+        op_found = None
+        for op in COLLECTIVE_OPS:
+            # op name begins the rhs after the result shape, e.g.
+            # "bf16[256,1712]{1,0} all-gather(...)" — also match
+            # async pairs ("all-gather-start") once (skip -done).
+            if re.search(rf"\)?\s{op}(-start)?\(", " " + rhs) or \
+               rhs.startswith(f"{op}(") or rhs.find(f" {op}(") >= 0 or \
+               rhs.find(f" {op}-start(") >= 0:
+                op_found = op
+                break
+        if op_found is None:
+            continue
+        if f"{op_found}-done" in rhs:
+            continue
+        # result shape(s): all dtype[dims] groups BEFORE the op token
+        pre = rhs.split(op_found)[0]
+        nbytes = sum(shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(pre))
+        if nbytes == 0.0:
+            continue
+        g = _group_size(rhs)
+        counts[op_found] += 1
+        by_type[op_found] += nbytes
+        wire[op_found] += nbytes * _wire_factor(op_found, g)
+    return CollectiveStats(
+        counts=counts, bytes_by_type=by_type, wire_bytes_by_type=wire,
+        total_bytes=sum(by_type.values()),
+        total_wire_bytes=sum(wire.values()))
+
+
+def top_collectives(hlo_text: str, k: int = 15
+                    ) -> List[Tuple[str, float, str]]:
+    """Individual collective ops sorted by result bytes, with a shape
+    snippet — the 'who is talking' view for collective-bound cells."""
+    rows = []
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if " = " not in s:
+            continue
+        _, _, rhs = s.partition(" = ")
+        for op in COLLECTIVE_OPS:
+            if f" {op}(" in " " + rhs or f" {op}-start(" in " " + rhs:
+                pre = rhs.split(op)[0]
+                nbytes = sum(shape_bytes(d, dims)
+                             for d, dims in _SHAPE_RE.findall(pre))
+                rows.append((op, nbytes, pre.strip()[:80]))
+                break
+    rows.sort(key=lambda r: -r[1])
+    return rows[:k]
+
+
+def top_ops_by_bytes(hlo_text: str, k: int = 20) -> List[Tuple[str, float, int]]:
+    """Aggregate result-shape bytes by op name — the dry-run 'profile'.
+
+    Returns [(op_kind, total_bytes, count)] sorted desc.  This is what
+    the perf loop reads instead of a wall-clock trace: the biggest
+    byte producers are the fusion/layout/remat suspects.
+    """
+    agg: Dict[str, List[float]] = {}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if not s.startswith("%") and " = " not in s:
+            continue
+        lhs, _, rhs = s.partition(" = ")
+        m = re.match(r"\s*([a-z0-9]+)\[([0-9,]*)\]", rhs)
+        if not m:
+            continue
+        nbytes = shape_bytes(m.group(1), m.group(2))
+        op = re.search(r"\)?\s([a-z][a-z0-9-]*)\(", " " + rhs)
+        name = op.group(1) if op else "unknown"
+        cur = agg.setdefault(name, [0.0, 0])
+        cur[0] += nbytes
+        cur[1] += 1
+    rows = [(name, v[0], v[1]) for name, v in agg.items()]
+    rows.sort(key=lambda r: -r[1])
+    return rows[:k]
+
+
+def extrapolate_collectives(k1: CollectiveStats, k2: CollectiveStats,
+                            groups: int, d1: int = 1, d2: int = 2
+                            ) -> CollectiveStats:
+    """Linear depth extrapolation from measurements at depths d1 < d2:
+    total = k1 + (G - d1) * max(k2 - k1, 0) / (d2 - d1).
+
+    Exact when each scanned period contributes identical collectives
+    (structurally true by construction of the depth variants); the
+    clamp guards against XLA partitioning shallow programs differently
+    at the boundaries."""
+    span = max(d2 - d1, 1)
+    g = max(groups - d1, 0)
+
+    def ext(a, b):
+        return {k: max(a[k] + g * max(b[k] - a[k], 0.0) / span, a[k])
+                for k in a}
+
+    counts = {k: int(round(v))
+              for k, v in ext(k1.counts, k2.counts).items()}
+    by_type = ext(k1.bytes_by_type, k2.bytes_by_type)
+    wire = ext(k1.wire_bytes_by_type, k2.wire_bytes_by_type)
+    return CollectiveStats(
+        counts=counts, bytes_by_type=by_type, wire_bytes_by_type=wire,
+        total_bytes=sum(by_type.values()),
+        total_wire_bytes=sum(wire.values()))
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    coll_wire_bytes_per_chip: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops_global: float
+    chips: int
+    useful_ratio: float         # MODEL_FLOPS / (HLO_FLOPs * chips)
+    roofline_fraction: float    # best-possible time / bound time
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def roofline_terms(flops_per_chip: float, bytes_per_chip: float,
+                   coll: CollectiveStats, chips: int,
+                   model_flops_global: float) -> Roofline:
+    compute_s = flops_per_chip / PEAK_FLOPS
+    memory_s = bytes_per_chip / HBM_BW
+    collective_s = coll.total_wire_bytes / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    hlo_global = flops_per_chip * chips
+    useful = model_flops_global / hlo_global if hlo_global else 0.0
+    # roofline fraction: time the USEFUL flops would take at peak vs the
+    # bound (max of the three terms) — the score we hillclimb.
+    ideal_s = model_flops_global / (chips * PEAK_FLOPS)
+    bound_s = max(terms.values())
+    frac = ideal_s / bound_s if bound_s > 0 else 0.0
+    return Roofline(
+        flops_per_chip=flops_per_chip, bytes_per_chip=bytes_per_chip,
+        coll_bytes_per_chip=coll.total_bytes,
+        coll_wire_bytes_per_chip=coll.total_wire_bytes,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops_global=model_flops_global,
+        chips=chips, useful_ratio=useful, roofline_fraction=frac)
+
+
+def summarize_cell(record: Dict) -> str:
+    r = record["roofline"]
+    return (f"{record['arch']:>22s} x {record['shape']:<12s} "
+            f"[{record['mesh']}] "
+            f"comp={r['compute_s']*1e3:9.3f}ms "
+            f"mem={r['memory_s']*1e3:9.3f}ms "
+            f"coll={r['collective_s']*1e3:9.3f}ms "
+            f"dom={r['dominant']:<10s} "
+            f"useful={r['useful_ratio']:6.1%} "
+            f"roofline={r['roofline_fraction']:6.1%}")
+
+
+def load_records(paths: List[str]) -> List[Dict]:
+    out = []
+    for p in paths:
+        with open(p) as f:
+            out.append(json.load(f))
+    return out

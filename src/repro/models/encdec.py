@@ -1,0 +1,205 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv audio frontend is a STUB per the assignment: ``input_specs()``
+feeds precomputed frame embeddings (B, S_audio, D) directly to the
+encoder (the real model's two conv1d+GELU layers live outside the
+backbone contract).  Positions use learned embeddings like Whisper.
+
+Decoder supports train (teacher forcing), prefill, and single-token
+decode with a self-attention KV cache; cross-attention K/V are computed
+once from the encoder output and carried in the cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as NN
+from repro.models.layers import AttnSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    name: str
+    n_enc_layers: int
+    n_dec_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    vocab: int
+    max_source: int = 1500          # whisper: 30s of 20ms frames
+    max_target: int = 448
+    dtype: Any = jnp.bfloat16
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def attn_spec(self, causal: bool) -> AttnSpec:
+        return AttnSpec(d_model=self.d_model, n_heads=self.n_heads,
+                        n_kv_heads=self.n_heads, head_dim=self.head_dim,
+                        qkv_bias=True, causal=causal, use_rope=False)
+
+
+def param_count(cfg: EncDecConfig) -> Tuple[int, int]:
+    D = cfg.d_model
+    attn = 4 * D * D
+    ffn = 2 * D * cfg.d_ff
+    enc = cfg.n_enc_layers * (attn + ffn)
+    dec = cfg.n_dec_layers * (2 * attn + ffn)
+    total = enc + dec + cfg.vocab * D + (cfg.max_source + cfg.max_target) * D
+    return total, total
+
+
+def _ln_init(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def _ln(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    return NN.layer_norm(x, p["scale"], p["bias"])
+
+
+def init_params(key: jax.Array, cfg: EncDecConfig) -> dict:
+    D = cfg.d_model
+    n_keys = 2 * cfg.n_enc_layers + 3 * cfg.n_dec_layers + 4
+    keys = jax.random.split(key, n_keys)
+    ki = iter(range(n_keys))
+    sd = 1.0 / math.sqrt(D)
+
+    def enc_layer():
+        return {
+            "ln1": _ln_init(D),
+            "attn": NN.attn_init(keys[next(ki)], cfg.attn_spec(False),
+                                 cfg.dtype),
+            "ln2": _ln_init(D),
+            "ffn": NN.ffn_init(keys[next(ki)], D, cfg.d_ff, "gelu",
+                               cfg.dtype),
+        }
+
+    def dec_layer():
+        return {
+            "ln1": _ln_init(D),
+            "self_attn": NN.attn_init(keys[next(ki)], cfg.attn_spec(True),
+                                      cfg.dtype),
+            "ln_x": _ln_init(D),
+            "cross_attn": NN.attn_init(keys[next(ki)], cfg.attn_spec(False),
+                                       cfg.dtype),
+            "ln2": _ln_init(D),
+            "ffn": NN.ffn_init(jax.random.fold_in(keys[0], next(ki)),
+                               D, cfg.d_ff, "gelu", cfg.dtype),
+        }
+
+    return {
+        "embed": {"table": (jax.random.normal(keys[next(ki)],
+                                              (cfg.vocab, D)) * sd
+                            ).astype(cfg.dtype)},
+        "pos_enc": (jax.random.normal(keys[next(ki)],
+                                      (cfg.max_source, D)) * 0.01
+                    ).astype(cfg.dtype),
+        "pos_dec": (jax.random.normal(keys[next(ki)],
+                                      (cfg.max_target, D)) * 0.01
+                    ).astype(cfg.dtype),
+        "enc": [enc_layer() for _ in range(cfg.n_enc_layers)],
+        "dec": [dec_layer() for _ in range(cfg.n_dec_layers)],
+        "ln_enc": _ln_init(D),
+        "ln_dec": _ln_init(D),
+    }
+
+
+def encode(params: dict, cfg: EncDecConfig,
+           frames: jnp.ndarray) -> jnp.ndarray:
+    """frames: (B, S_audio, D) precomputed frame embeddings (stub)."""
+    S = frames.shape[1]
+    x = frames.astype(cfg.dtype) + params["pos_enc"][:S]
+    positions = jnp.arange(S)
+    spec = cfg.attn_spec(False)
+    for lp in params["enc"]:
+        h, _ = NN.attn_apply(lp["attn"], spec, _ln(lp["ln1"], x), positions)
+        x = x + h
+        x = x + NN.ffn_apply(lp["ffn"], "gelu", _ln(lp["ln2"], x))
+    return _ln(params["ln_enc"], x)
+
+
+def decode_train(params: dict, cfg: EncDecConfig, enc_out: jnp.ndarray,
+                 tokens: jnp.ndarray) -> jnp.ndarray:
+    """Teacher-forced decoder pass.  tokens: (B, S_t) -> logits."""
+    S = tokens.shape[1]
+    # clip into the learned positional table (long-decode shapes wrap)
+    pos_ids = jnp.mod(jnp.arange(S), cfg.max_target)
+    x = params["embed"]["table"][tokens] + params["pos_dec"][pos_ids]
+    positions = jnp.arange(S)
+    self_spec = cfg.attn_spec(True)
+    cross_spec = cfg.attn_spec(False)
+    for lp in params["dec"]:
+        h, _ = NN.attn_apply(lp["self_attn"], self_spec,
+                             _ln(lp["ln1"], x), positions)
+        x = x + h
+        h, _ = NN.attn_apply(lp["cross_attn"], cross_spec,
+                             _ln(lp["ln_x"], x), positions, kv_x=enc_out)
+        x = x + h
+        x = x + NN.ffn_apply(lp["ffn"], "gelu", _ln(lp["ln2"], x))
+    x = _ln(params["ln_dec"], x)
+    return jnp.einsum("bsd,vd->bsv", x, params["embed"]["table"]
+                      ).astype(jnp.float32)
+
+
+def init_dec_cache(params: dict, cfg: EncDecConfig, enc_out: jnp.ndarray,
+                   batch: int, max_len: int) -> dict:
+    """Self-attn KV cache + precomputed cross K/V per decoder layer."""
+    spec = cfg.attn_spec(False)
+    layers = []
+    for lp in params["dec"]:
+        ck = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross_attn"]["wk"])
+        cv = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross_attn"]["wv"])
+        ck = ck + lp["cross_attn"]["bk"]
+        cv = cv + lp["cross_attn"]["bv"]
+        layers.append({
+            "self": NN.attn_cache_init(spec, batch, max_len, cfg.dtype),
+            "cross_k": ck, "cross_v": cv,
+        })
+    return {"layers": layers}
+
+
+def decode_step(params: dict, cfg: EncDecConfig, cache: dict,
+                token: jnp.ndarray, pos: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, dict]:
+    """Single-token decode.  token: (B, 1); pos scalar."""
+    pos_id = jnp.mod(pos, cfg.max_target)
+    x = params["embed"]["table"][token] + params["pos_dec"][pos_id][None, None]
+    positions = jnp.full((1,), pos, jnp.int32)
+    self_spec = cfg.attn_spec(True)
+    new_layers = []
+    for lp, lc in zip(params["dec"], cache["layers"]):
+        h, nc = NN.attn_apply(lp["self_attn"], self_spec,
+                              _ln(lp["ln1"], x), positions,
+                              cache=lc["self"], cache_pos=pos)
+        x = x + h
+        # cross-attention against the precomputed encoder K/V
+        q = jnp.einsum("bsd,dhk->bshk", _ln(lp["ln_x"], x),
+                       lp["cross_attn"]["wq"]) + lp["cross_attn"]["bq"]
+        S_src = lc["cross_k"].shape[1]
+        o = NN.attention(q, lc["cross_k"], lc["cross_v"], positions,
+                         jnp.arange(S_src), causal=False)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, lp["cross_attn"]["wo"])
+        x = x + NN.ffn_apply(lp["ffn"], "gelu", _ln(lp["ln2"], x))
+        new_layers.append({"self": nc, "cross_k": lc["cross_k"],
+                           "cross_v": lc["cross_v"]})
+    x = _ln(params["ln_dec"], x)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["table"]
+                        ).astype(jnp.float32)
+    return logits[:, 0], {"layers": new_layers}
+
+
+def encdec_loss(params: dict, cfg: EncDecConfig, frames: jnp.ndarray,
+                tokens: jnp.ndarray, labels: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, Dict]:
+    from repro.models.lm import softmax_xent
+    enc_out = encode(params, cfg, frames)
+    logits = decode_train(params, cfg, enc_out, tokens)
+    loss = jnp.mean(softmax_xent(logits, labels))
+    return loss, {"loss": loss}

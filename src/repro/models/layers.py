@@ -1,0 +1,485 @@
+"""Transformer layer primitives shared by every assigned architecture.
+
+Conventions
+-----------
+* weights are stored "math-shaped" (no fused qkv): wq (D, H, hd),
+  wk/wv (D, KH, hd), wo (H, hd, D), FFN w_in/w_gate (D, F), w_out (F, D)
+  — these names are what parallel/sharding.py rules match on;
+* activations are (B, S, D), compute dtype bf16, reductions fp32;
+* attention is **query-chunked** with an on-the-fly causal/sliding mask
+  so the (B, H, S, S) score tensor never materializes — per-step temp
+  is (B, H, q_chunk, S_kv), which keeps 32k prefill inside HBM;
+* decode is the same kernel with S_q == 1 against a KV cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# norms / rope / embeddings
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    nrm = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (nrm * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, hd); positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        ang = positions.astype(jnp.float32)[None, :, None] * freq[None, None, :]
+        ang = ang[:, :, None, :]                       # (1, S, 1, half)
+    else:
+        ang = positions.astype(jnp.float32)[..., None] * freq
+        ang = ang[:, :, None, :]
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def _mask_bias(q_pos: jnp.ndarray, kv_pos: jnp.ndarray, causal: bool,
+               window: Optional[int]) -> jnp.ndarray:
+    """(Sq, Skv) additive bias: 0 allowed / -inf masked.
+
+    Negative kv positions are always masked — ring-buffer KV caches use
+    kv_pos < 0 to mark not-yet-written slots."""
+    ok = kv_pos[None, :] >= 0
+    if causal:
+        ok &= kv_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        ok &= kv_pos[None, :] > (q_pos[:, None] - window)
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              q_positions: jnp.ndarray, kv_positions: jnp.ndarray,
+              causal: bool = True, window: Optional[int] = None,
+              q_chunk: int = 512, scale: Optional[float] = None
+              ) -> jnp.ndarray:
+    """Grouped-query attention, query-chunked.
+
+    q: (B, Sq, H, hd); k, v: (B, Skv, KH, hd); H % KH == 0.
+    Returns (B, Sq, H, hd).
+    """
+    B, Sq, H, hd = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, Sq, KH, G, hd)
+
+    def block(q_blk, qpos_blk):
+        # q_blk: (B, C, KH, G, hd).  Operands stay in their storage
+        # dtype (bf16) with fp32 MXU accumulation — pre-casting k/v to
+        # fp32 would materialize a full-cache fp32 copy (3x the HBM
+        # traffic of the cache itself; dominant at decode shapes).
+        s = jnp.einsum("bqkgh,bskh->bkgqs", q_blk, k,
+                       preferred_element_type=jnp.float32) * scale
+        s = s + _mask_bias(qpos_blk, kv_positions, causal, window)[None, None, None]
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v,
+                       preferred_element_type=jnp.float32)
+        return o.astype(q.dtype)
+
+    if Sq <= q_chunk:
+        out = block(qg, q_positions)
+        return out.reshape(B, Sq, H, hd)
+
+    pad = (-Sq) % q_chunk
+    if pad:
+        qg = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, (0, pad))
+    n_blk = qg.shape[1] // q_chunk
+    qg_b = qg.reshape(B, n_blk, q_chunk, KH, G, hd).swapaxes(0, 1)
+    pos_b = q_positions.reshape(n_blk, q_chunk)
+
+    def body(_, xs):
+        q_blk, p_blk = xs
+        return None, block(q_blk, p_blk)
+
+    _, outs = jax.lax.scan(body, None, (qg_b, pos_b))
+    out = outs.swapaxes(0, 1).reshape(B, n_blk * q_chunk, H, hd)
+    return out[:, :Sq]
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    causal: bool = True
+    window: Optional[int] = None
+    use_rope: bool = True
+
+
+def attn_init(key: jax.Array, s: AttnSpec, dtype=jnp.bfloat16) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    D, H, KH, hd = s.d_model, s.n_heads, s.n_kv_heads, s.head_dim
+    sd = 1.0 / math.sqrt(D)
+    p = {
+        "wq": (jax.random.normal(kq, (D, H, hd)) * sd).astype(dtype),
+        "wk": (jax.random.normal(kk, (D, KH, hd)) * sd).astype(dtype),
+        "wv": (jax.random.normal(kv, (D, KH, hd)) * sd).astype(dtype),
+        "wo": (jax.random.normal(ko, (H, hd, D)) * (1.0 / math.sqrt(H * hd))
+               ).astype(dtype),
+    }
+    if s.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), dtype)
+        p["bk"] = jnp.zeros((KH, hd), dtype)
+        p["bv"] = jnp.zeros((KH, hd), dtype)
+    return p
+
+
+def attn_apply(p: dict, s: AttnSpec, x: jnp.ndarray,
+               positions: jnp.ndarray,
+               cache: Optional[dict] = None,
+               cache_pos: Optional[jnp.ndarray] = None,
+               kv_x: Optional[jnp.ndarray] = None,
+               ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """Self- or cross-attention.
+
+    * train/prefill: cache=None -> full-sequence attention over x;
+    * decode: cache={'k','v'} (B, S_max, KH, hd), cache_pos = current
+      length; x is (B, 1, D); returns updated cache;
+    * cross-attn: kv_x provides the encoder sequence (no cache, no rope).
+    """
+    B, Sq, D = x.shape
+    src = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"])
+    if s.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+
+    if cache is None:
+        kv_positions = (positions if kv_x is None
+                        else jnp.arange(src.shape[1]))
+        if s.use_rope and kv_x is None:
+            q = rope(q, positions, s.rope_theta)
+            k = rope(k, positions, s.rope_theta)
+        o = attention(q, k, v, positions, kv_positions,
+                      causal=s.causal and kv_x is None, window=s.window)
+        new_cache = None
+    else:
+        # decode: single-token query against the cache
+        if s.use_rope:
+            q = rope(q, positions, s.rope_theta)
+            k = rope(k, positions, s.rope_theta)
+        kc = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, cache_pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, cache_pos, 0, 0))
+        kv_positions = jnp.arange(kc.shape[1])
+        # mask out beyond current length via causal test against position
+        o = attention(q, kc, vc, positions, kv_positions,
+                      causal=True, window=s.window)
+        new_cache = {"k": kc, "v": vc}
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, new_cache
+
+
+def attn_cache_init(s: AttnSpec, batch: int, max_len: int,
+                    dtype=jnp.bfloat16) -> dict:
+    shape = (batch, max_len, s.n_kv_heads, s.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# FFN (dense)
+# ---------------------------------------------------------------------------
+
+def ffn_init(key: jax.Array, d_model: int, d_ff: int, kind: str,
+             dtype=jnp.bfloat16, sparse: bool = False,
+             initial_fan_in: Optional[int] = None) -> dict:
+    """Dense FFN; ``sparse=True`` stores the up/gate projections in the
+    paper's Alg.-1 theta/sign form (SparseLUT as a first-class LM
+    feature): w = theta * sign * 1(theta > 0), with the Alg.-2
+    controller (core/sparse_train) enforcing a per-hidden-unit fan-in
+    during training.  theta/sign shard exactly like the dense matrices
+    (see parallel/sharding.py)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    sd_in = 1.0 / math.sqrt(d_model)
+    sd_out = 1.0 / math.sqrt(d_ff)
+    p = {
+        "w_out": (jax.random.normal(k2, (d_ff, d_model)) * sd_out).astype(dtype),
+    }
+
+    def one(k, name):
+        if not sparse:
+            p[name] = (jax.random.normal(k, (d_model, d_ff)) * sd_in
+                       ).astype(dtype)
+            return
+        from repro.core.masking import init_theta_layer
+        tl = init_theta_layer(k, d_model, d_ff, initial_fan_in)
+        p[name + "_theta"] = tl.theta * sd_in
+        p[name + "_sign"] = tl.sign
+
+    one(k1, "w_in")
+    if kind == "swiglu":
+        one(k3, "w_gate")
+    return p
+
+
+def _ffn_weight(p: dict, name: str, dtype) -> jnp.ndarray:
+    if name in p:
+        return p[name]
+    theta, sign = p[name + "_theta"], p[name + "_sign"]
+    active = (theta > 0).astype(theta.dtype)
+    return (theta * sign * active).astype(dtype)
+
+
+def ffn_apply(p: dict, kind: str, x: jnp.ndarray) -> jnp.ndarray:
+    h = jnp.einsum("bsd,df->bsf", x, _ffn_weight(p, "w_in", x.dtype))
+    if kind == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, _ffn_weight(p, "w_gate", x.dtype))
+        h = jax.nn.silu(g) * h
+    elif kind == "gelu":
+        h = jax.nn.gelu(h)
+    elif kind == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        raise ValueError(kind)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_out"])
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (token-choice top-k, grouped GEMM dispatch)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    n_experts: int
+    top_k: int
+    d_model: int
+    d_ff: int
+    capacity_factor: float = 1.25
+    shared_expert: bool = False
+
+
+def moe_init(key: jax.Array, s: MoESpec, dtype=jnp.bfloat16) -> dict:
+    kr, k1, k2, k3, ks = jax.random.split(key, 5)
+    sd_in = 1.0 / math.sqrt(s.d_model)
+    sd_out = 1.0 / math.sqrt(s.d_ff)
+    p = {
+        "router": {"w": (jax.random.normal(kr, (s.d_model, s.n_experts))
+                         * sd_in).astype(jnp.float32)},
+        "experts": {
+            "w_in": (jax.random.normal(k1, (s.n_experts, s.d_model, s.d_ff))
+                     * sd_in).astype(dtype),
+            "w_gate": (jax.random.normal(k2, (s.n_experts, s.d_model, s.d_ff))
+                       * sd_in).astype(dtype),
+            "w_out": (jax.random.normal(k3, (s.n_experts, s.d_ff, s.d_model))
+                      * sd_out).astype(dtype),
+        },
+    }
+    if s.shared_expert:
+        p["shared"] = ffn_init(ks, s.d_model, s.d_ff, "swiglu", dtype)
+    return p
+
+
+def moe_apply(p: dict, s: MoESpec, x: jnp.ndarray,
+              no_drop: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (y, aux_loss).
+
+    Grouped-GEMM dispatch: assignments are sorted by expert, packed into
+    an (E, C, D) buffer (capacity C, overflow dropped), run through the
+    expert SwiGLU as three batched einsums (expert dim rides the `model`
+    mesh axis = expert parallelism), and combined back by gather.
+
+    ``no_drop=True`` sets capacity = T so NO token is ever dropped —
+    the serving/decode configuration (capacity eviction is a training
+    throughput trade, not acceptable at decode where T is small).
+    """
+    B, S, D = x.shape
+    T = B * S
+    xt = x.reshape(T, D)
+    logits = xt.astype(jnp.float32) @ p["router"]["w"]        # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eids = jax.lax.top_k(probs, s.top_k)               # (T, k)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+
+    # aux load-balancing loss (Switch-style)
+    density = jnp.mean(jax.nn.one_hot(eids[:, 0], s.n_experts), axis=0)
+    router_mean = jnp.mean(probs, axis=0)
+    aux = jnp.sum(density * router_mean) * s.n_experts
+
+    A = T * s.top_k
+    if no_drop:
+        cap = T                       # worst case: every token, one expert
+    else:
+        cap = int(max(1, round(A / s.n_experts * s.capacity_factor)))
+    tok_idx = jnp.repeat(jnp.arange(T, dtype=jnp.int32), s.top_k)
+    flat_e = eids.reshape(A).astype(jnp.int32)
+    flat_g = gates.reshape(A)
+
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sg = flat_e[order], tok_idx[order], flat_g[order]
+    counts = jnp.bincount(se, length=s.n_experts)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(A, dtype=jnp.int32) - starts[se].astype(jnp.int32)
+    keep = rank < cap
+    e_sc = jnp.where(keep, se, s.n_experts)        # OOB -> dropped
+    r_sc = jnp.where(keep, rank, 0)
+
+    buf = jnp.zeros((s.n_experts, cap, D), x.dtype)
+    buf = buf.at[e_sc, r_sc].set(xt[st], mode="drop")
+
+    h = jnp.einsum("ecd,edf->ecf", buf, p["experts"]["w_in"])
+    g = jnp.einsum("ecd,edf->ecf", buf, p["experts"]["w_gate"])
+    h = jax.nn.silu(g) * h
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["experts"]["w_out"])
+
+    vals = out_buf[jnp.minimum(e_sc, s.n_experts - 1), r_sc]   # (A, D)
+    vals = jnp.where(keep[:, None], vals, 0.0) * sg[:, None].astype(x.dtype)
+    y = jnp.zeros((T, D), x.dtype).at[st].add(vals)
+    if "shared" in p:
+        y = y + ffn_apply(p["shared"], "swiglu", x).reshape(T, D)
+    return y.reshape(B, S, D), aux
+
+
+# ---------------------------------------------------------------------------
+# Expert-parallel MoE dispatch (shard_map) — the collective-efficient path
+# ---------------------------------------------------------------------------
+
+def moe_apply_ep(p: dict, s: MoESpec, x: jnp.ndarray, mesh,
+                 ep_axis: str = "model", no_drop: bool = False,
+                 fsdp_axis: Optional[str] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Expert-parallel dispatch with explicit locality (shard_map).
+
+    Insight (see EXPERIMENTS.md Perf 4.3): with batch sharded over the
+    DP axes only, every device along the `model` axis already holds the
+    SAME token slice — so no token ever needs to move.  Each device
+    packs its local tokens destined to its E/ep resident experts, runs
+    the expert GEMMs locally, and contributes a partial combine; the
+    ONLY communication is one psum of the (T_loc, D) output per layer —
+    identical wire cost to a dense Megatron FFN, versus the GSPMD
+    scatter/gather lowering of ``moe_apply`` which all-gathers token
+    buffers per layer.
+
+    Routing (small) is computed OUTSIDE the shard_map so the router's
+    gradient flows through ordinary GSPMD.  Expert weights come in
+    sharded (E over `ep_axis`); their in_specs make the gradient
+    reduction explicit (shard_map transposes replication to psum).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    B, S, D = x.shape
+    T = B * S
+    E, K = s.n_experts, s.top_k
+    ep = mesh.shape[ep_axis]
+    e_loc = E // ep
+    assert E % ep == 0, f"{E} experts not divisible by {ep}-way EP"
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_entry = dp if len(dp) > 1 else dp[0]
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    T_loc = T // dp_size if T % dp_size == 0 else T
+
+    xt = x.reshape(T, D)
+    logits = xt.astype(jnp.float32) @ p["router"]["w"]       # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eids = jax.lax.top_k(probs, K)
+    gates = (gates / jnp.sum(gates, axis=-1, keepdims=True)).astype(x.dtype)
+
+    density = jnp.mean(jax.nn.one_hot(eids[:, 0], E), axis=0)
+    aux = jnp.sum(density * jnp.mean(probs, axis=0)) * E
+
+    if no_drop:
+        cap = T_loc
+    else:
+        cap = int(max(1, round(T_loc * K / E * s.capacity_factor)))
+
+    def local(xt, gates, eids, w_in, w_gate, w_out):
+        # shapes: xt (T_loc, D); gates/eids (T_loc, K);
+        # w_* (e_loc, D[, /fsdp], F) — this column's resident experts.
+        if fsdp_axis is not None:
+            # ZeRO-3: gather THIS layer's weight shards just-in-time
+            # (transient; backward transposes to a reduce-scatter).
+            # Declaring the true sharding in in_specs is what stops jit
+            # from hoisting a full-stack fp32 all-gather out of the
+            # layer scan (EXPERIMENTS.md Perf 4.3 iter 2).
+            w_in = jax.lax.all_gather(w_in, fsdp_axis, axis=1, tiled=True)
+            w_gate = jax.lax.all_gather(w_gate, fsdp_axis, axis=1,
+                                        tiled=True)
+            w_out = jax.lax.all_gather(w_out, fsdp_axis, axis=1, tiled=True)
+        col = jax.lax.axis_index(ep_axis)
+        e_lo = (col * e_loc).astype(eids.dtype)
+        local_e = eids - e_lo                            # (T_loc, K)
+        mine = (local_e >= 0) & (local_e < e_loc)
+        Tl = xt.shape[0]
+        A = Tl * K
+        tok_idx = jnp.repeat(jnp.arange(Tl, dtype=jnp.int32), K)
+        flat_e = jnp.where(mine, local_e, e_loc).reshape(A).astype(jnp.int32)
+        flat_g = gates.reshape(A)
+
+        order = jnp.argsort(flat_e, stable=True)
+        se, st, sg = flat_e[order], tok_idx[order], flat_g[order]
+        counts = jnp.bincount(se, length=e_loc + 1)
+        starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                                  jnp.cumsum(counts)[:-1]])
+        rank = jnp.arange(A, dtype=jnp.int32) - starts[se].astype(jnp.int32)
+        keep = (rank < cap) & (se < e_loc)
+        e_sc = jnp.where(keep, se, e_loc)
+        r_sc = jnp.where(keep, rank, 0)
+
+        buf = jnp.zeros((e_loc, cap, D), xt.dtype)
+        buf = buf.at[e_sc, r_sc].set(xt[st], mode="drop")
+
+        h = jnp.einsum("ecd,edf->ecf", buf, w_in)
+        g = jnp.einsum("ecd,edf->ecf", buf, w_gate)
+        h = jax.nn.silu(g) * h
+        out_buf = jnp.einsum("ecf,efd->ecd", h, w_out)
+
+        vals = out_buf[jnp.minimum(e_sc, e_loc - 1), r_sc]
+        vals = jnp.where(keep[:, None], vals, 0.0) * sg[:, None]
+        y_part = jnp.zeros((Tl, D), xt.dtype).at[st].add(vals)
+        # the ONLY cross-device traffic of the whole dispatch:
+        return jax.lax.psum(y_part, ep_axis)
+
+    w_spec = (P(ep_axis, fsdp_axis, None) if fsdp_axis is not None
+              else P(ep_axis, None, None))
+    f = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(dp_entry, None), P(dp_entry, None), P(dp_entry, None),
+                  w_spec, w_spec, w_spec),
+        out_specs=P(dp_entry, None),
+        check_rep=False)
+    y = f(xt, gates, eids,
+          p["experts"]["w_in"], p["experts"]["w_gate"],
+          p["experts"]["w_out"])
+    if "shared" in p:
+        y = y + ffn_apply(p["shared"], "swiglu", x).reshape(T, D)
+    return y.reshape(B, S, D), aux

@@ -1,0 +1,722 @@
+"""Decoder-only LM substrate covering all assigned architectures.
+
+Design notes
+------------
+* A model is a periodic **pattern** of block kinds cycled over layers
+  (e.g. gemma3 = 5 local + 1 global attention; recurrentgemma =
+  rglru, rglru, local-attn).  Layers are grouped by period: parameters
+  for position-p-in-period are stacked over the ``n_groups`` repeats and
+  the forward pass is a single ``jax.lax.scan`` over groups — one
+  period body in the HLO regardless of depth (compile time and GSPMD
+  partitioning cost stay flat from 4 to 64+ layers).
+* A ``prefix`` (e.g. kimi-k2's first dense layer before the MoE stack)
+  and any remainder layers that don't fill a whole period run unscanned
+  before/after the scan.
+* Block kinds: ``attn`` (global causal), ``local`` (sliding window),
+  ``rglru`` (Griffin recurrent), ``rwkv`` (RWKV6 time-mix).  Mixer is
+  paired with a channel block: ``dense`` FFN, ``moe``, or ``rwkv_cm``.
+* KV caches: global-attention layers carry a full (B, S_max) cache;
+  ``local`` layers carry a **ring buffer** of exactly ``window`` slots
+  (slot = pos % window) — this is what makes ``long_500k`` decode
+  feasible for the hybrid/sliding archs: recurrent state is O(1) and
+  local caches are O(window), so only designated global layers pay O(S).
+* train_step uses ``jax.checkpoint`` (remat) on the period body; the
+  recompute shows up in the roofline's HLO_FLOPs/MODEL_FLOPS ratio and
+  is one of the §Perf knobs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as NN
+from repro.models import recurrent as RC
+from repro.models.layers import AttnSpec, MoESpec
+
+
+# ---------------------------------------------------------------------------
+# configuration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    # block pattern, cycled over post-prefix layers. entries are
+    # (mixer, channel) tuples; mixer in {attn, local, rglru, rwkv},
+    # channel in {dense, moe, rwkv_cm}.
+    pattern: Tuple[Tuple[str, str], ...] = (("attn", "dense"),)
+    prefix: Tuple[Tuple[str, str], ...] = ()
+    ffn_kind: str = "swiglu"            # dense-FFN nonlinearity
+    norm: str = "rms"                   # rms | ln
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    window: Optional[int] = None        # sliding window for "local"
+    tie_embeddings: bool = False
+    # MoE (used where channel == "moe")
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    shared_expert: bool = False
+    moe_capacity_factor: float = 1.25
+    # expert-parallel dispatch (shard_map; see layers.moe_apply_ep) —
+    # requires an ambient mesh whose `model` extent divides n_experts.
+    # moe_ep_fsdp declares the expert weights as additionally sharded
+    # over `data` (ZeRO-3) so the gather happens per-layer in-kernel.
+    moe_ep: bool = False
+    moe_ep_fsdp: bool = False
+    # recurrent widths
+    d_rnn: int = 0                      # rglru lattice width
+    # modality frontend: "none" = token ids; "stub" = input_specs feeds
+    # precomputed (B, S, D) embeddings straight into the backbone.
+    frontend: str = "none"
+    dtype: Any = jnp.bfloat16
+    # SparseLUT technique flag: fan-in-sparse FFN trained with the
+    # paper's Alg.-2 controller (see core/sparse_train) — applies to the
+    # dense channel only.  sparse_fan_in = F_o per hidden unit
+    # (0 -> d_model // 8); sparse_phase_T = Alg.-2 phase boundary step.
+    sparse_ffn: bool = False
+    sparse_fan_in: int = 0
+    sparse_phase_T: int = 1000
+    # Unroll the scan-over-layer-groups.  The dry-run sets this so
+    # compiled.cost_analysis() counts every layer (XLA cost analysis
+    # counts a while-loop body ONCE, not x trip-count); training keeps
+    # the scan for flat compile times.
+    scan_unroll: bool = False
+    # KV cache storage dtype for serving: "bf16" | "int8".  int8 halves
+    # cache HBM traffic and capacity (per-token-per-head absmax scales;
+    # dequant fuses into the attention matmul on TPU).
+    kv_cache_dtype: str = "bf16"
+    # Megatron-style sequence parallelism: pin the residual stream to
+    # (dp, "model", None) at every block boundary so norms/elementwise
+    # work is S-local and the TP boundary collectives become
+    # reduce-scatter + all-gather pairs.  Input-level hints alone do
+    # not survive GSPMD propagation (EXPERIMENTS.md Perf 4.3b).
+    seq_parallel: bool = False
+
+    # ---- derived ----
+    @property
+    def kinds(self) -> List[Tuple[str, str]]:
+        """Per-layer (mixer, channel) kinds, all n_layers of them."""
+        out = list(self.prefix)
+        i = 0
+        while len(out) < self.n_layers:
+            out.append(self.pattern[i % len(self.pattern)])
+            i += 1
+        return out[: self.n_layers]
+
+    @property
+    def n_scan_groups(self) -> int:
+        return (self.n_layers - len(self.prefix)) // len(self.pattern)
+
+    @property
+    def tail_kinds(self) -> List[Tuple[str, str]]:
+        used = len(self.prefix) + self.n_scan_groups * len(self.pattern)
+        return self.kinds[used:]
+
+    def attn_spec(self, mixer: str) -> AttnSpec:
+        return AttnSpec(
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads, head_dim=self.head_dim,
+            qkv_bias=self.qkv_bias, rope_theta=self.rope_theta,
+            causal=True,
+            window=self.window if mixer == "local" else None)
+
+    def moe_spec(self) -> MoESpec:
+        return MoESpec(n_experts=self.n_experts, top_k=self.top_k,
+                       d_model=self.d_model, d_ff=self.moe_d_ff,
+                       capacity_factor=self.moe_capacity_factor,
+                       shared_expert=self.shared_expert)
+
+
+def param_count(cfg: LMConfig) -> Tuple[int, int]:
+    """(total, active) parameter counts — MODEL_FLOPS uses 6*N_active*D."""
+    D, H, KH, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    total = active = cfg.vocab * D                       # embed
+    if not cfg.tie_embeddings:
+        total += D * cfg.vocab
+        active += D * cfg.vocab
+    for mixer, channel in cfg.kinds:
+        if mixer in ("attn", "local"):
+            n = D * H * hd + 2 * D * KH * hd + H * hd * D
+        elif mixer == "rglru":
+            R = cfg.d_rnn or D
+            n = 2 * D * R + 2 * R * R + R * D
+        elif mixer == "rwkv":
+            n = 5 * D * D + 2 * D * 64                    # proj + decay lora
+        else:
+            raise ValueError(mixer)
+        total += n
+        active += n
+        if channel == "dense":
+            k = 3 if cfg.ffn_kind == "swiglu" else 2
+            total += k * D * cfg.d_ff
+            active += k * D * cfg.d_ff
+        elif channel == "moe":
+            per = 3 * D * cfg.moe_d_ff
+            total += cfg.n_experts * per + D * cfg.n_experts
+            active += cfg.top_k * per + D * cfg.n_experts
+            if cfg.shared_expert:
+                total += 3 * D * cfg.moe_d_ff
+                active += 3 * D * cfg.moe_d_ff
+        elif channel == "rwkv_cm":
+            n = 2 * D * cfg.d_ff + D * D
+            total += n
+            active += n
+    return total, active
+
+
+# ---------------------------------------------------------------------------
+# per-block init
+# ---------------------------------------------------------------------------
+
+def _norm_init(cfg: LMConfig, d: int) -> dict:
+    if cfg.norm == "rms":
+        return {"scale": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def _norm_apply(cfg: LMConfig, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.norm == "rms":
+        return NN.rms_norm(x, p["scale"])
+    return NN.layer_norm(x, p["scale"], p["bias"])
+
+
+def block_init(key: jax.Array, cfg: LMConfig,
+               kind: Tuple[str, str]) -> dict:
+    mixer, channel = kind
+    k1, k2 = jax.random.split(key)
+    p: dict = {"norm1": _norm_init(cfg, cfg.d_model),
+               "norm2": _norm_init(cfg, cfg.d_model)}
+    if mixer in ("attn", "local"):
+        p["attn"] = NN.attn_init(k1, cfg.attn_spec(mixer), cfg.dtype)
+    elif mixer == "rglru":
+        p["rglru"] = RC.rglru_init(k1, cfg.d_model, cfg.d_rnn or cfg.d_model,
+                                   dtype=cfg.dtype)
+    elif mixer == "rwkv":
+        p["rwkv"] = RC.rwkv_init(k1, cfg.d_model, cfg.n_heads, cfg.d_ff,
+                                 dtype=cfg.dtype)
+    if channel == "dense":
+        p["ffn"] = NN.ffn_init(k2, cfg.d_model, cfg.d_ff, cfg.ffn_kind,
+                               cfg.dtype, sparse=cfg.sparse_ffn)
+    elif channel == "moe":
+        p["moe"] = NN.moe_init(k2, cfg.moe_spec(), cfg.dtype)
+    # rwkv_cm params live inside p["rwkv"] (cm_* keys) already
+    return p
+
+
+def _kv_quantize(t: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(..., hd) -> (int8 codes, per-(...,) fp16 scales)."""
+    m = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(m, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float16)
+
+
+def _kv_dequantize(q: jnp.ndarray, scale: jnp.ndarray,
+                   dtype) -> jnp.ndarray:
+    return (q.astype(jnp.float32)
+            * scale.astype(jnp.float32)[..., None]).astype(dtype)
+
+
+def _attn_cache_init(cfg: LMConfig, spec, batch: int, length: int) -> dict:
+    if cfg.kv_cache_dtype == "int8":
+        shape = (batch, length, spec.n_kv_heads, spec.head_dim)
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_s": jnp.zeros(shape[:-1], jnp.float16),
+                "v_s": jnp.zeros(shape[:-1], jnp.float16)}
+    return NN.attn_cache_init(spec, batch, length, cfg.dtype)
+
+
+def _cache_store(cfg: LMConfig, cache: dict, k, v, update_fn) -> dict:
+    """Write new K/V into the cache via ``update_fn(buf, values, name)``
+    (handles both dynamic_update_slice decode and slot-set prefill)."""
+    if cfg.kv_cache_dtype == "int8":
+        kq, ks = _kv_quantize(k)
+        vq, vs = _kv_quantize(v)
+        return {"k": update_fn(cache["k"], kq, False),
+                "v": update_fn(cache["v"], vq, False),
+                "k_s": update_fn(cache["k_s"], ks, True),
+                "v_s": update_fn(cache["v_s"], vs, True)}
+    return {"k": update_fn(cache["k"], k.astype(cache["k"].dtype), False),
+            "v": update_fn(cache["v"], v.astype(cache["v"].dtype), False)}
+
+
+def _cache_read(cfg: LMConfig, cache: dict) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if cfg.kv_cache_dtype == "int8":
+        return (_kv_dequantize(cache["k"], cache["k_s"], cfg.dtype),
+                _kv_dequantize(cache["v"], cache["v_s"], cfg.dtype))
+    return cache["k"], cache["v"]
+
+
+def block_cache_init(cfg: LMConfig, kind: Tuple[str, str], batch: int,
+                     max_len: int) -> dict:
+    """Decode-time state for one block."""
+    mixer, _ = kind
+    if mixer == "attn":
+        return _attn_cache_init(cfg, cfg.attn_spec(mixer), batch, max_len)
+    if mixer == "local":
+        w = min(cfg.window or max_len, max_len)
+        return _attn_cache_init(cfg, cfg.attn_spec(mixer), batch, w)
+    if mixer == "rglru":
+        return RC.rglru_state_init(batch, cfg.d_rnn or cfg.d_model,
+                                   dtype=cfg.dtype)
+    if mixer == "rwkv":
+        return RC.rwkv_state_init(batch, cfg.d_model, cfg.n_heads, cfg.dtype)
+    raise ValueError(mixer)
+
+
+def _ring_positions(pos: jnp.ndarray, window: int) -> jnp.ndarray:
+    """Positions held by ring-buffer slots 0..window-1 at time ``pos``:
+    slot i holds the newest p <= pos with p % window == i (negative =
+    not yet written; masked by the attention bias)."""
+    i = jnp.arange(window)
+    return pos - jnp.mod(pos - i, window)
+
+
+def _attn_qkv(p: dict, spec: AttnSpec, h: jnp.ndarray,
+              positions: jnp.ndarray):
+    """Projected (and rope'd) q, k, v: (B, S, {H|KH}, hd)."""
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"])
+    if spec.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if spec.use_rope:
+        q = NN.rope(q, positions, spec.rope_theta)
+        k = NN.rope(k, positions, spec.rope_theta)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# unified block forward: train (no cache), prefill (fills cache),
+# decode (S == 1 against cache)
+# ---------------------------------------------------------------------------
+
+def _residual_constraint(cfg: LMConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Pin the residual stream to the sequence-parallel layout."""
+    if not cfg.seq_parallel or x.ndim != 3:
+        return x
+    from repro.parallel.sharding import ambient_mesh, dp_axes
+    mesh = ambient_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return x
+    if x.shape[1] % mesh.shape["model"] != 0:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    dp = dp_axes(mesh)
+    dp_entry = dp if len(dp) > 1 else (dp[0] if dp else None)
+    if dp_entry is not None and x.shape[0] % _axes_size(mesh, dp) != 0:
+        dp_entry = None
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(dp_entry, "model", None)))
+
+
+def _axes_size(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def block_apply(cfg: LMConfig, kind: Tuple[str, str], p: dict,
+                x: jnp.ndarray, positions: jnp.ndarray,
+                cache: Optional[dict], pos: Optional[jnp.ndarray]
+                ) -> Tuple[jnp.ndarray, Optional[dict], jnp.ndarray]:
+    """One block.  Modes:
+      * cache is None                -> train/forward, new_cache None
+      * cache given, x.shape[1] > 1  -> prefill (cache gets filled)
+      * cache given, x.shape[1] == 1 -> decode at scalar position ``pos``
+    Returns (x_out, new_cache, moe_aux).
+    """
+    mixer, channel = kind
+    S = x.shape[1]
+    decode = cache is not None and S == 1
+    aux = jnp.zeros((), jnp.float32)
+    h = _norm_apply(cfg, p["norm1"], x)
+
+    if mixer in ("attn", "local"):
+        spec = cfg.attn_spec(mixer)
+        q, k, v = _attn_qkv(p["attn"], spec, h, positions)
+        if cache is None:
+            a = NN.attention(q, k, v, positions, positions,
+                             causal=True, window=spec.window)
+            new_mix = None
+        elif decode:
+            if mixer == "local":
+                w = cache["k"].shape[1]
+                slot = jnp.mod(pos, w)
+                kv_pos = _ring_positions(pos, w)
+            else:
+                slot = pos
+                kv_pos = jnp.arange(cache["k"].shape[1])
+
+            def upd(buf, val, is_scale):
+                start = (0, slot, 0) if is_scale else (0, slot, 0, 0)
+                return jax.lax.dynamic_update_slice(buf, val, start)
+
+            new_mix = _cache_store(cfg, cache, k, v, upd)
+            kc, vc = _cache_read(cfg, new_mix)
+            # ring holds exactly the window; no extra window mask needed
+            a = NN.attention(q, kc, vc, positions, kv_pos,
+                             causal=True, window=None)
+        else:  # prefill: full-sequence attention + cache fill
+            a = NN.attention(q, k, v, positions, positions,
+                             causal=True, window=spec.window)
+            Sc = cache["k"].shape[1]
+            take = min(Sc, S)
+            if mixer == "local":
+                slots = jnp.mod(positions[-take:], Sc)
+
+                def upd(buf, val, is_scale):
+                    tail = val[:, -take:]
+                    return buf.at[:, slots].set(tail)
+            else:
+                def upd(buf, val, is_scale):
+                    start = (0, 0, 0) if is_scale else (0, 0, 0, 0)
+                    return jax.lax.dynamic_update_slice(
+                        buf, val[:, :take], start)
+
+            new_mix = _cache_store(cfg, cache, k, v, upd)
+        a = jnp.einsum("bshk,hkd->bsd", a, p["attn"]["wo"])
+    elif mixer == "rglru":
+        a, new_mix = RC.rglru_apply(p["rglru"], h, cache)
+    elif mixer == "rwkv":
+        a, new_mix = RC.rwkv_time_mix(p["rwkv"], cfg.n_heads, h, cache)
+    else:
+        raise ValueError(mixer)
+
+    x = _residual_constraint(cfg, x + a)
+    h2 = _norm_apply(cfg, p["norm2"], x)
+    if channel == "dense":
+        f = NN.ffn_apply(p["ffn"], cfg.ffn_kind, h2)
+    elif channel == "moe":
+        # decode: no-drop dispatch (T is small; capacity eviction is a
+        # training-throughput trade, never acceptable at serve time)
+        mesh = None
+        if cfg.moe_ep:
+            from repro.parallel.sharding import ambient_mesh
+            mesh = ambient_mesh()
+        if mesh is not None and "model" in mesh.axis_names \
+                and cfg.n_experts % mesh.shape["model"] == 0:
+            fsdp_axis = None
+            if cfg.moe_ep_fsdp and "data" in mesh.axis_names \
+                    and cfg.d_model % mesh.shape["data"] == 0:
+                fsdp_axis = "data"
+            f, aux = NN.moe_apply_ep(p["moe"], cfg.moe_spec(), h2, mesh,
+                                     no_drop=decode, fsdp_axis=fsdp_axis)
+        else:
+            f, aux = NN.moe_apply(p["moe"], cfg.moe_spec(), h2,
+                                  no_drop=decode)
+    elif channel == "rwkv_cm":
+        f, cm_new = RC.rwkv_channel_mix(p["rwkv"], h2, cache)
+        if new_mix is not None:
+            new_mix = {**new_mix, **cm_new}
+    else:
+        raise ValueError(channel)
+    return _residual_constraint(cfg, x + f), new_mix, aux
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+def init_params(key: jax.Array, cfg: LMConfig) -> dict:
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    D = cfg.d_model
+    p: dict = {
+        "embed": {"table": (jax.random.normal(keys[0], (cfg.vocab, D))
+                            * (1.0 / math.sqrt(D))).astype(cfg.dtype)},
+        "final_norm": _norm_init(cfg, D),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = {"w": (jax.random.normal(keys[1], (D, cfg.vocab))
+                           * (1.0 / math.sqrt(D))).astype(cfg.dtype)}
+    ki = 2
+    p["prefix"] = []
+    for kind in cfg.prefix:
+        p["prefix"].append(block_init(keys[ki], cfg, kind))
+        ki += 1
+    # scanned period stacks: one stacked pytree per position-in-period
+    P = len(cfg.pattern)
+    G = cfg.n_scan_groups
+    stacks = []
+    if G > 0:
+        for pos_in_period, kind in enumerate(cfg.pattern):
+            per_group = [
+                block_init(
+                    jax.random.fold_in(keys[ki], g * P + pos_in_period),
+                    cfg, kind)
+                for g in range(G)
+            ]
+            stacks.append(jax.tree.map(lambda *xs: jnp.stack(xs),
+                                       *per_group))
+    ki += 1
+    p["stacks"] = stacks
+    p["tail"] = []
+    for kind in cfg.tail_kinds:
+        p["tail"].append(block_init(keys[ki], cfg, kind))
+        ki += 1
+    return p
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int) -> dict:
+    c: dict = {"prefix": [block_cache_init(cfg, k, batch, max_len)
+                          for k in cfg.prefix]}
+    G = cfg.n_scan_groups
+    stacks = []
+    if G > 0:
+        for kind in cfg.pattern:
+            one = block_cache_init(cfg, kind, batch, max_len)
+            stacks.append(jax.tree.map(
+                lambda x: jnp.zeros((G,) + x.shape, x.dtype), one))
+    c["stacks"] = stacks
+    c["tail"] = [block_cache_init(cfg, k, batch, max_len)
+                 for k in cfg.tail_kinds]
+    return c
+
+
+def _embed(cfg: LMConfig, params: dict, inputs: jnp.ndarray) -> jnp.ndarray:
+    """Token ids (B, S) -> embeddings; stub frontends feed (B, S, D)
+    precomputed embeddings straight through."""
+    if inputs.ndim == 3:            # precomputed embeddings (stub frontend)
+        return inputs.astype(cfg.dtype)
+    return params["embed"]["table"][inputs]
+
+
+def _unembed(cfg: LMConfig, params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, params["embed"]["table"]
+                          ).astype(jnp.float32)
+    return jnp.einsum("bsd,dv->bsv", x, params["head"]["w"]
+                      ).astype(jnp.float32)
+
+
+def _run_blocks(params: dict, cfg: LMConfig, x: jnp.ndarray,
+                positions: jnp.ndarray, cache: Optional[dict],
+                pos: Optional[jnp.ndarray], remat: bool = False
+                ) -> Tuple[jnp.ndarray, Optional[dict], jnp.ndarray]:
+    """Shared prefix -> scan -> tail driver for all three modes."""
+    aux_total = jnp.zeros((), jnp.float32)
+    use_cache = cache is not None
+
+    new_prefix = []
+    for i, (kind, bp) in enumerate(zip(cfg.prefix, params["prefix"])):
+        bc = cache["prefix"][i] if use_cache else None
+        x, nc, aux = block_apply(cfg, kind, bp, x, positions, bc, pos)
+        new_prefix.append(nc)
+        aux_total += aux
+
+    new_stacks: Any = None
+    if cfg.n_scan_groups > 0:
+        def period_body(x, stacks_g, cache_g):
+            aux_p = jnp.zeros((), jnp.float32)
+            new_cache_g = []
+            for j, (kind, bp) in enumerate(zip(cfg.pattern, stacks_g)):
+                bc = cache_g[j] if use_cache else None
+                x, nc, aux = block_apply(cfg, kind, bp, x, positions, bc, pos)
+                new_cache_g.append(nc)
+                aux_p += aux
+            return x, tuple(new_cache_g), aux_p
+
+        if remat:
+            period_body = jax.checkpoint(period_body)
+
+        unroll = cfg.n_scan_groups if cfg.scan_unroll else 1
+        if use_cache:
+            def scan_body(x, xs):
+                stacks_g, cache_g = xs
+                x, nc, aux_p = period_body(x, stacks_g, cache_g)
+                return x, (nc, aux_p)
+
+            x, (new_stacks, auxs) = jax.lax.scan(
+                scan_body, x,
+                (tuple(params["stacks"]), tuple(cache["stacks"])),
+                unroll=unroll)
+        else:
+            def scan_body(x, stacks_g):
+                x, _, aux_p = period_body(x, stacks_g, None)
+                return x, aux_p
+
+            x, auxs = jax.lax.scan(scan_body, x, tuple(params["stacks"]),
+                                   unroll=unroll)
+        aux_total += jnp.sum(auxs)
+
+    new_tail = []
+    for i, (kind, bp) in enumerate(zip(cfg.tail_kinds, params["tail"])):
+        bc = cache["tail"][i] if use_cache else None
+        x, nc, aux = block_apply(cfg, kind, bp, x, positions, bc, pos)
+        new_tail.append(nc)
+        aux_total += aux
+
+    new_cache = None
+    if use_cache:
+        new_cache = {"prefix": new_prefix,
+                     "stacks": list(new_stacks) if new_stacks is not None
+                     else list(cache["stacks"]),
+                     "tail": new_tail}
+    return x, new_cache, aux_total
+
+
+def forward(params: dict, cfg: LMConfig, inputs: jnp.ndarray,
+            remat: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward.  inputs: (B, S) int tokens or (B, S, D)
+    stub embeddings.  Returns (logits fp32 (B, S, V), moe_aux)."""
+    x = _embed(cfg, params, inputs)
+    positions = jnp.arange(x.shape[1])
+    x, _, aux = _run_blocks(params, cfg, x, positions, None, None, remat)
+    x = _norm_apply(cfg, params["final_norm"], x)
+    return _unembed(cfg, params, x), aux
+
+
+def prefill(params: dict, cfg: LMConfig, inputs: jnp.ndarray,
+            max_len: int) -> Tuple[jnp.ndarray, dict]:
+    """Run the prompt and materialize decode state.  Returns
+    (last-token logits (B, V), cache)."""
+    x = _embed(cfg, params, inputs)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.arange(S)
+    cache = init_cache(cfg, B, max_len)
+    x, new_cache, _ = _run_blocks(params, cfg, x, positions, cache, None)
+    xl = _norm_apply(cfg, params["final_norm"], x[:, -1:])
+    return _unembed(cfg, params, xl)[:, 0], new_cache
+
+
+def decode_step(params: dict, cfg: LMConfig, cache: dict,
+                token: jnp.ndarray, pos: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, dict]:
+    """One-token decode.  token: (B, 1) int (or (B, 1, D) stub);
+    pos: scalar int32.  Returns (logits (B, V), new_cache)."""
+    x = _embed(cfg, params, token)
+    positions = jnp.full((1,), pos, jnp.int32)
+    x, new_cache, _ = _run_blocks(params, cfg, x, positions, cache, pos)
+    x = _norm_apply(cfg, params["final_norm"], x)
+    return _unembed(cfg, params, x)[:, 0], new_cache
+
+
+# ---------------------------------------------------------------------------
+# loss / train step
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Per-token NLL without gathering over the vocab axis.
+
+    ``take_along_axis`` over a `model`-sharded vocab dim forces GSPMD to
+    all-gather the full (B, S, V) logits (tens of GB per device at
+    production shapes).  The iota==label select keeps every op
+    elementwise-or-reduce over V, so the vocab stays sharded end-to-end
+    and only (B, S) scalars cross shards.
+    """
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+    picked = jnp.sum(jnp.where(iota == labels[..., None], lf, 0.0), axis=-1)
+    return lse - picked
+
+
+def lm_loss(params: dict, cfg: LMConfig, tokens: jnp.ndarray,
+            labels: jnp.ndarray, remat: bool = True,
+            aux_weight: float = 0.01) -> Tuple[jnp.ndarray, Dict]:
+    logits, aux = forward(params, cfg, tokens, remat=remat)
+    loss = jnp.mean(softmax_xent(logits, labels))
+    return loss + aux_weight * aux, {"loss": loss, "aux": aux}
+
+
+def apply_sparse_control(params: dict, cfg: LMConfig, step: jnp.ndarray,
+                         lr: float) -> dict:
+    """SparseLUT as a first-class LM feature: run the paper's Alg.-2
+    non-greedy controller over every ``*_theta`` FFN leaf (prune by
+    sign-flip / penalty, regrow random, enforce per-hidden-unit fan-in
+    F_o).  Pure pytree transform — jit-safe, shard-safe (elementwise +
+    per-column argsort ops partition over the `model` axis)."""
+    from repro.core.sparse_train import SparsityConfig, sparse_control
+
+    scfg = SparsityConfig(
+        target_fan_in=cfg.sparse_fan_in or max(cfg.d_model // 8, 1),
+        phase_boundary=cfg.sparse_phase_T)
+
+    def walk(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if not name.endswith("_theta"):
+            return leaf
+        h = jnp.uint32(abs(hash("/".join(str(p) for p in path))) % (2**31))
+        key = jax.random.fold_in(jax.random.key(h), step)
+        if leaf.ndim == 3:      # scanned stack: (G, n_in, n_out)
+            keys = jax.random.split(key, leaf.shape[0])
+            return jax.vmap(
+                lambda t, k: sparse_control(t, k, step, scfg, lr))(leaf, keys)
+        return sparse_control(leaf, key, step, scfg, lr)
+
+    return jax.tree_util.tree_map_with_path(walk, params)
+
+
+def make_train_step(cfg: LMConfig, optimizer, remat: bool = True,
+                    grad_clip: float = 1.0, lr_for_sparse: float = 1e-3,
+                    accum: int = 1):
+    """(state, batch) -> (state, metrics); state = {params, opt}.
+
+    ``accum > 1`` splits the global batch into that many microbatches
+    and accumulates gradients with a lax.scan — activation peak memory
+    drops ~accum-fold while the optimizer math stays identical (the
+    gradient is the mean over microbatches).  This is the standard
+    fits-HBM lever for the production shapes (see EXPERIMENTS.md Perf).
+    """
+    opt_init, opt_update = optimizer
+    from repro.optim.adamw import apply_updates, clip_by_global_norm
+
+    def init_state(key):
+        params = init_params(key, cfg)
+        return {"params": params, "opt": opt_init(params)}
+
+    def grads_of(params, batch):
+        def loss_fn(p):
+            return lm_loss(p, cfg, batch["tokens"], batch["labels"],
+                           remat=remat)
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def step(state, batch):
+        if accum <= 1:
+            (_, metrics), grads = grads_of(state["params"], batch)
+        else:
+            B = batch["tokens"].shape[0]
+            micro = jax.tree.map(
+                lambda t: t.reshape((accum, B // accum) + t.shape[1:]),
+                batch)
+
+            def body(carry, mb):
+                (_, m), g = grads_of(state["params"], mb)
+                return jax.tree.map(jnp.add, carry, g), m
+
+            # (p * 0) keeps the accumulator on the PARAM's sharding —
+            # a bare jnp.zeros would let GSPMD replicate a full fp32
+            # gradient mirror (4 TB for kimi-k2)
+            zeros = jax.tree.map(
+                lambda p: (p * 0).astype(jnp.float32), state["params"])
+            grads, ms = jax.lax.scan(body, zeros, micro)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            metrics = jax.tree.map(jnp.mean, ms)
+
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        updates, new_opt = opt_update(grads, state["opt"], state["params"])
+        new_params = apply_updates(state["params"], updates)
+        if cfg.sparse_ffn:
+            new_params = apply_sparse_control(
+                new_params, cfg, new_opt.step, lr_for_sparse)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return init_state, step

@@ -1,0 +1,276 @@
+"""Recurrent blocks: RG-LRU (RecurrentGemma/Griffin) and RWKV6 (Finch).
+
+Both are *linear* recurrences, so training/prefill uses parallel forms
+(`associative_scan` for RG-LRU, the chunked linear-attention algorithm
+for RWKV6) and decode is an O(1)-state single step.  The chunked WKV
+here is the pure-jnp reference; kernels/wkv6 provides the Pallas TPU
+version of the same chunk body (allclose-tested against this).
+
+Numerical note (documented contract): per-channel log-decays are
+clamped to >= LOG_DECAY_MIN so the factored q~/k~ chunk form stays in
+fp32 range for chunk length 32 (max exponent 32*|LOG_DECAY_MIN| = 32).
+RWKV decays live near 1.0 in practice; the clamp is inactive there.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+LOG_DECAY_MIN = -1.0
+WKV_CHUNK = 32
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin recurrent block)
+# ---------------------------------------------------------------------------
+
+def rglru_init(key: jax.Array, d_model: int, d_rnn: int, conv_width: int = 4,
+               dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 6)
+    sd = 1.0 / math.sqrt(d_model)
+    sr = 1.0 / math.sqrt(d_rnn)
+    return {
+        "w_x": (jax.random.normal(ks[0], (d_model, d_rnn)) * sd).astype(dtype),
+        "w_y": (jax.random.normal(ks[1], (d_model, d_rnn)) * sd).astype(dtype),
+        "conv_w": (jax.random.normal(ks[2], (conv_width, d_rnn)) * 0.1
+                   ).astype(dtype),
+        "w_rgate": (jax.random.normal(ks[3], (d_rnn, d_rnn)) * sr).astype(dtype),
+        "w_igate": (jax.random.normal(ks[4], (d_rnn, d_rnn)) * sr).astype(dtype),
+        # Lambda init so decay a = sigmoid(L)^(8r) sits in [0.9, 0.999]
+        "lam": jnp.linspace(2.0, 6.0, d_rnn).astype(jnp.float32),
+        "w_out": (jax.random.normal(ks[5], (d_rnn, d_model)) * sr).astype(dtype),
+    }
+
+
+def _causal_conv(u: jnp.ndarray, w: jnp.ndarray,
+                 state: Optional[jnp.ndarray]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv along S.  u: (B, S, R); w: (W, R).
+    state: (B, W-1, R) past inputs for decode continuity."""
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((u.shape[0], W - 1, u.shape[2]), u.dtype)
+    ext = jnp.concatenate([state, u], axis=1)            # (B, S+W-1, R)
+    out = sum(ext[:, i:i + u.shape[1]] * w[i] for i in range(W))
+    return out, ext[:, -(W - 1):]
+
+
+def _lru_scan(a: jnp.ndarray, b: jnp.ndarray,
+              h0: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """h_t = a_t h_{t-1} + b_t via associative scan over axis 1."""
+    if h0 is not None:
+        # fold initial state into the first b
+        b = b.at[:, 0].add(a[:, 0] * h0)
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+    _, h = jax.lax.associative_scan(comb, (a, b), axis=1)
+    return h
+
+
+def rglru_apply(p: dict, x: jnp.ndarray,
+                state: Optional[dict] = None) -> Tuple[jnp.ndarray, dict]:
+    """x: (B, S, D) -> (out (B, S, D), new_state {h, conv})."""
+    u = jnp.einsum("bsd,dr->bsr", x, p["w_x"])
+    y = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x, p["w_y"]))
+    conv_state = state["conv"] if state is not None else None
+    u, new_conv = _causal_conv(u, p["conv_w"], conv_state)
+
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("bsr,rq->bsq", uf, p["w_rgate"].astype(jnp.float32)))
+    i = jax.nn.sigmoid(jnp.einsum("bsr,rq->bsq", uf, p["w_igate"].astype(jnp.float32)))
+    # Griffin: a = exp(-c * softplus(Lambda) * r), c = 8.  The associative
+    # scan is exact for any decay, so no clamp is needed here.
+    log_a = -8.0 * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) * (i * uf)
+
+    h0 = state["h"] if state is not None else None
+    h = _lru_scan(a, b, h0)
+    out = jnp.einsum("bsr,rd->bsd", (h * y.astype(jnp.float32)).astype(x.dtype),
+                     p["w_out"])
+    return out, {"h": h[:, -1], "conv": new_conv}
+
+
+def rglru_decode(p: dict, x: jnp.ndarray, state: dict
+                 ) -> Tuple[jnp.ndarray, dict]:
+    """Single-token step; x: (B, 1, D)."""
+    return rglru_apply(p, x, state)  # S == 1 path is already O(1)
+
+
+def rglru_state_init(batch: int, d_rnn: int, conv_width: int = 4,
+                     dtype=jnp.bfloat16) -> dict:
+    return {"h": jnp.zeros((batch, d_rnn), jnp.float32),
+            "conv": jnp.zeros((batch, conv_width - 1, d_rnn), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 time-mix + channel-mix
+# ---------------------------------------------------------------------------
+
+def rwkv_init(key: jax.Array, d_model: int, n_heads: int, d_ff: int,
+              lora_rank: int = 64, dtype=jnp.bfloat16) -> dict:
+    hd = d_model // n_heads
+    ks = jax.random.split(key, 12)
+    sd = 1.0 / math.sqrt(d_model)
+    proj = lambda k: (jax.random.normal(k, (d_model, d_model)) * sd).astype(dtype)
+    return {
+        "mu": 0.5 * jnp.ones((5, d_model), jnp.float32),   # r,k,v,g,w mixes
+        "w_r": proj(ks[0]), "w_k": proj(ks[1]),
+        "w_v": proj(ks[2]), "w_g": proj(ks[3]),
+        "decay_w0": jnp.full((d_model,), -1.5, jnp.float32),
+        "decay_a": (jax.random.normal(ks[4], (d_model, lora_rank)) * sd
+                    ).astype(dtype),
+        "decay_b": (jax.random.normal(ks[5], (lora_rank, d_model)) * 0.01
+                    ).astype(dtype),
+        "u": (jax.random.normal(ks[6], (n_heads, hd)) * 0.1).astype(jnp.float32),
+        "w_o": proj(ks[7]),
+        "ln_scale": jnp.ones((n_heads, hd), jnp.float32),
+        "ln_bias": jnp.zeros((n_heads, hd), jnp.float32),
+        # channel mix
+        "cm_mu": 0.5 * jnp.ones((2, d_model), jnp.float32),  # k, r mixes
+        "cm_k": (jax.random.normal(ks[8], (d_model, d_ff)) * sd).astype(dtype),
+        "cm_v": (jax.random.normal(ks[9], (d_ff, d_model))
+                 * (1.0 / math.sqrt(d_ff))).astype(dtype),
+        "cm_r": proj(ks[10]),
+    }
+
+
+def _token_shift(x: jnp.ndarray, last: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """x_{t-1} along S; ``last`` is the carried token for decode."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    else:
+        last = last[:, None, :].astype(x.dtype)
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def wkv_chunked_ref(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    logw: jnp.ndarray, u: jnp.ndarray,
+                    s0: Optional[jnp.ndarray], chunk: int = WKV_CHUNK
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked WKV.  r,k,v: (B,S,H,K); logw: (B,S,H,K) (<=0, clamped);
+    u: (H,K); s0: (B,H,K,V) or None.  Returns (o (B,S,H,V), s_end).
+
+    Factored q~/k~ per chunk; fp32.  kernels/wkv6 mirrors this body.
+    """
+    B, S, H, K = r.shape
+    C = min(chunk, S)
+    pad = (-S) % C
+    if pad:
+        z = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = z(r), z(k), z(v)
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    N = r.shape[1] // C
+    rs = r.reshape(B, N, C, H, K).astype(jnp.float32)
+    ks_ = k.reshape(B, N, C, H, K).astype(jnp.float32)
+    vs = v.reshape(B, N, C, H, K).astype(jnp.float32)
+    lw = logw.reshape(B, N, C, H, K).astype(jnp.float32)
+    if s0 is None:
+        s0 = jnp.zeros((B, H, K, K), jnp.float32)
+
+    def body(s, xs):
+        rc, kc, vc, lwc = xs                      # (B, C, H, K)
+        cum = jnp.cumsum(lwc, axis=1)             # inclusive
+        cum_ex = cum - lwc                        # exclusive
+        total = cum[:, -1]                        # (B, H, K)
+        q_t = rc * jnp.exp(cum_ex)
+        k_t = kc * jnp.exp(-cum)
+        inter = jnp.einsum("bthk,bhkv->bthv", q_t, s)
+        A = jnp.einsum("bthk,bshk->bhts", q_t, k_t)
+        mask = jnp.tril(jnp.ones((C, C), bool), k=-1)
+        A = jnp.where(mask[None, None], A, 0.0)
+        intra = jnp.einsum("bhts,bshv->bthv", A, vc)
+        bonus = jnp.einsum("bthk,hk,bthk->bth", rc, u, kc)
+        o = inter + intra + bonus[..., None] * vc
+        k_dec = kc * jnp.exp(total[:, None] - cum)   # prod of later decays
+        s_new = s * jnp.exp(total)[..., None] + \
+            jnp.einsum("bthk,bthv->bhkv", k_dec, vc)
+        return s_new, o
+
+    xs = (rs.transpose(1, 0, 2, 3, 4), ks_.transpose(1, 0, 2, 3, 4),
+          vs.transpose(1, 0, 2, 3, 4), lw.transpose(1, 0, 2, 3, 4))
+    s_end, os_ = jax.lax.scan(body, s0, xs)
+    o = os_.transpose(1, 0, 2, 3, 4).reshape(B, N * C, H, K)[:, :S]
+    return o, s_end
+
+
+def wkv_naive(r, k, v, logw, u, s0=None):
+    """Exact sequential oracle (tests)."""
+    B, S, H, K = r.shape
+    s = (jnp.zeros((B, H, K, K), jnp.float32) if s0 is None else s0)
+    outs = []
+    for t in range(S):
+        rt = r[:, t].astype(jnp.float32)
+        kt = k[:, t].astype(jnp.float32)
+        vt = v[:, t].astype(jnp.float32)
+        wt = jnp.exp(logw[:, t].astype(jnp.float32))
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        o = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        outs.append(o)
+        s = s * wt[..., None] + kv
+    return jnp.stack(outs, axis=1), s
+
+
+def rwkv_time_mix(p: dict, n_heads: int, x: jnp.ndarray,
+                  state: Optional[dict] = None,
+                  use_kernel: bool = False) -> Tuple[jnp.ndarray, dict]:
+    """RWKV6 attention replacement.  x: (B, S, D)."""
+    B, S, D = x.shape
+    hd = D // n_heads
+    last = state["x_tm"] if state is not None else None
+    xp = _token_shift(x, last)
+    mu = p["mu"].astype(x.dtype)
+    mix = lambda i: x + mu[i] * (xp - x)
+    r = jnp.einsum("bsd,de->bse", mix(0), p["w_r"]).reshape(B, S, n_heads, hd)
+    k = jnp.einsum("bsd,de->bse", mix(1), p["w_k"]).reshape(B, S, n_heads, hd)
+    v = jnp.einsum("bsd,de->bse", mix(2), p["w_v"]).reshape(B, S, n_heads, hd)
+    g = jnp.einsum("bsd,de->bse", mix(3), p["w_g"])
+    lora = jnp.einsum("bsd,dr->bsr", jnp.tanh(
+        jnp.einsum("bsd,dr->bsr", mix(4), p["decay_a"])), p["decay_b"])
+    logw = -jnp.exp(p["decay_w0"].astype(jnp.float32)
+                    + lora.astype(jnp.float32))
+    logw = jnp.maximum(logw, LOG_DECAY_MIN).reshape(B, S, n_heads, hd)
+
+    s0 = state["S"] if state is not None else None
+    if use_kernel:
+        from repro.kernels.wkv6 import ops as wkv_ops
+        o, s_end = wkv_ops.wkv6(r, k, v, logw, p["u"], s0)
+    else:
+        o, s_end = wkv_chunked_ref(r, k, v, logw, p["u"], s0)
+
+    # per-head layer norm
+    of = o.astype(jnp.float32)
+    mean = jnp.mean(of, axis=-1, keepdims=True)
+    var = jnp.var(of, axis=-1, keepdims=True)
+    of = (of - mean) * jax.lax.rsqrt(var + 1e-5)
+    of = of * p["ln_scale"] + p["ln_bias"]
+    o = of.reshape(B, S, D).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", o * jax.nn.silu(g), p["w_o"])
+    return out, {"x_tm": x[:, -1], "S": s_end}
+
+
+def rwkv_channel_mix(p: dict, x: jnp.ndarray,
+                     state: Optional[dict] = None) -> Tuple[jnp.ndarray, dict]:
+    last = state["x_cm"] if state is not None else None
+    xp = _token_shift(x, last)
+    mu = p["cm_mu"].astype(x.dtype)
+    xk = x + mu[0] * (xp - x)
+    xr = x + mu[1] * (xp - x)
+    h = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["cm_k"])))
+    hv = jnp.einsum("bsf,fd->bsd", h, p["cm_v"])
+    rgate = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["cm_r"]))
+    return rgate * hv, {"x_cm": x[:, -1]}
+
+
+def rwkv_state_init(batch: int, d_model: int, n_heads: int,
+                    dtype=jnp.bfloat16) -> dict:
+    hd = d_model // n_heads
+    return {
+        "x_tm": jnp.zeros((batch, d_model), dtype),
+        "x_cm": jnp.zeros((batch, d_model), dtype),
+        "S": jnp.zeros((batch, n_heads, hd, hd), jnp.float32),
+    }

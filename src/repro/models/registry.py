@@ -1,0 +1,427 @@
+"""Architecture registry: arch-id -> config, step functions, input specs.
+
+This is the single entry point the launcher, dry-run, tests and
+benchmarks share.  Every assigned architecture is selectable by id
+(``--arch``); every assigned input shape by name (``--shape``).
+
+Shape semantics (per the assignment):
+  * ``train_4k``     lowers train_step   (tokens + labels, optimizer update)
+  * ``prefill_32k``  lowers prefill_step (prompt -> logits + KV cache)
+  * ``decode_32k``   lowers serve_step   (ONE token against a seq_len cache)
+  * ``long_500k``    lowers serve_step   (sub-quadratic archs only; others
+                     declare the skip in their config module's SKIPS)
+
+``[audio]``/``[vlm]`` archs: the modality frontend is a STUB —
+``input_specs`` feeds precomputed frame embeddings (whisper) or
+already-VQ-tokenized streams (chameleon) to the backbone.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import encdec as ED
+from repro.models import lm as LM
+from repro.models.encdec import EncDecConfig
+from repro.models.lm import LMConfig
+from repro.optim.adamw import adamw, apply_updates, clip_by_global_norm
+from repro.parallel import sharding as SH
+
+
+# ---------------------------------------------------------------------------
+# registry of assigned architectures
+# ---------------------------------------------------------------------------
+
+ARCHS: Dict[str, str] = {
+    "qwen1.5-32b": "qwen1_5_32b",
+    "gemma3-12b": "gemma3_12b",
+    "phi3-mini-3.8b": "phi3_mini_3_8b",
+    "qwen2.5-3b": "qwen2_5_3b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "whisper-tiny": "whisper_tiny",
+    "chameleon-34b": "chameleon_34b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "rwkv6-3b": "rwkv6_3b",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def arch_module(arch: str):
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
+    return importlib.import_module(f"repro.configs.{ARCHS[arch]}")
+
+
+def get_config(arch: str, smoke: bool = False):
+    mod = arch_module(arch)
+    return mod.smoke_config() if smoke else mod.config()
+
+
+def arch_skips(arch: str) -> Dict[str, str]:
+    return dict(getattr(arch_module(arch), "SKIPS", {}))
+
+
+def cell_is_skipped(arch: str, shape: str) -> Optional[str]:
+    """Reason string if this (arch x shape) cell is skipped, else None."""
+    reason = arch_skips(arch).get(shape)
+    if reason:
+        return reason
+    cfg = get_config(arch)
+    if isinstance(cfg, EncDecConfig) and shape == "long_500k":
+        return "enc-dec full attention — skip per the sub-quadratic rule"
+    return None
+
+
+def is_encdec(cfg) -> bool:
+    return isinstance(cfg, EncDecConfig)
+
+
+def param_count(cfg) -> Tuple[int, int]:
+    if is_encdec(cfg):
+        return ED.param_count(cfg)
+    return LM.param_count(cfg)
+
+
+def model_flops(cfg, shape: ShapeSpec) -> float:
+    """MODEL_FLOPS = 6 * N(_active) * D_tokens for train; 2*N*D for
+    forward-only shapes (prefill/decode)."""
+    _, active = param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens
+    # decode: one token per sequence
+    return 2.0 * active * shape.global_batch
+
+
+# ---------------------------------------------------------------------------
+# step functions (pure; jit/lower happens at the call site)
+# ---------------------------------------------------------------------------
+
+def _optimizer(cfg, lr: float = 3e-4):
+    return adamw(lr, weight_decay=0.1)
+
+
+def make_lm_train_step(cfg: LMConfig, remat: bool = True):
+    return LM.make_train_step(cfg, _optimizer(cfg), remat=remat)
+
+
+def make_encdec_train_step(cfg: EncDecConfig):
+    opt_init, opt_update = adamw(3e-4, weight_decay=0.1)
+
+    def init_state(key):
+        params = ED.init_params(key, cfg)
+        return {"params": params, "opt": opt_init(params)}
+
+    def step(state, batch):
+        def loss_fn(p):
+            return ED.encdec_loss(p, cfg, batch["frames"], batch["tokens"],
+                                  batch["labels"])
+
+        (_, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state["params"])
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        updates, new_opt = opt_update(grads, state["opt"], state["params"])
+        new_params = apply_updates(state["params"], updates)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return init_state, step
+
+
+def make_train_step(cfg, remat: bool = True):
+    if is_encdec(cfg):
+        return make_encdec_train_step(cfg)
+    return make_lm_train_step(cfg, remat=remat)
+
+
+def make_prefill_step(cfg, max_len: int):
+    if is_encdec(cfg):
+        def prefill(params, frames):
+            """Encoder pass + decoder-cache construction (serving setup)."""
+            enc_out = ED.encode(params, cfg, frames)
+            cache = ED.init_dec_cache(params, cfg, enc_out,
+                                      frames.shape[0], cfg.max_target)
+            return cache
+        return prefill
+
+    def prefill(params, tokens):
+        return LM.prefill(params, cfg, tokens, max_len)
+    return prefill
+
+
+def make_serve_step(cfg):
+    """One-token decode against an existing cache (the ``serve_step``
+    the decode_* shapes lower)."""
+    if is_encdec(cfg):
+        def serve(params, cache, token, pos):
+            return ED.decode_step(params, cfg, cache, token, pos)
+        return serve
+
+    def serve(params, cache, token, pos):
+        return LM.decode_step(params, cfg, cache, token, pos)
+    return serve
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct input specs per (arch x shape), mesh-sharded
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype, sharding=None):
+    if sharding is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    # drop spec entries that do not divide the dim (e.g. batch=1 cells)
+    spec = list(sharding.spec) + [None] * (len(shape) - len(sharding.spec))
+    fixed = []
+    for dim, names in enumerate(spec[: len(shape)]):
+        if names is None:
+            fixed.append(None)
+            continue
+        tup = names if isinstance(names, tuple) else (names,)
+        size = 1
+        for n in tup:
+            size *= sharding.mesh.shape[n]
+        fixed.append(names if shape[dim] % size == 0 else None)
+    sharding = NamedSharding(sharding.mesh, P(*fixed))
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _named(mesh, *entries):
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, P(*entries))
+
+
+def _dp(mesh):
+    if mesh is None:
+        return None
+    axes = SH.dp_axes(mesh)
+    return axes if len(axes) > 1 else axes[0]
+
+
+def batch_specs(cfg, shape: ShapeSpec, mesh=None,
+                seq_on_model: bool = False) -> Dict[str, Any]:
+    """ShapeDtypeStructs for the *data* inputs of the step function.
+
+    ``seq_on_model`` lays the sequence dim of train/prefill token
+    batches over the `model` axis (sequence parallelism): norms,
+    token-shift and elementwise work become S-local, at the price of
+    all-gathers feeding the TP matmuls — a perf-iteration knob.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    dp = _dp(mesh)
+    sm = "model" if seq_on_model else None
+    if is_encdec(cfg):
+        # stub frontend: precomputed frame embeddings feed the encoder
+        T = min(cfg.max_target, S)
+        if shape.kind == "train":
+            return {
+                "frames": _sds((B, S, cfg.d_model), jnp.bfloat16,
+                               _named(mesh, dp, None, None)),
+                "tokens": _sds((B, T), jnp.int32, _named(mesh, dp, None)),
+                "labels": _sds((B, T), jnp.int32, _named(mesh, dp, None)),
+            }
+        if shape.kind == "prefill":
+            return {"frames": _sds((B, S, cfg.d_model), jnp.bfloat16,
+                                   _named(mesh, dp, None, None))}
+        return {"token": _sds((B, 1), jnp.int32, _named(mesh, dp, None)),
+                "pos": _sds((), jnp.int32, _named(mesh))}
+    # decoder-only LM: tokens are int ids (chameleon's VQ image tokens
+    # are ordinary ids in the unified vocab — stub frontend)
+    if shape.kind == "train":
+        return {
+            "tokens": _sds((B, S), jnp.int32, _named(mesh, dp, sm)),
+            "labels": _sds((B, S), jnp.int32, _named(mesh, dp, sm)),
+        }
+    if shape.kind == "prefill":
+        return {"tokens": _sds((B, S), jnp.int32, _named(mesh, dp, sm))}
+    return {"token": _sds((B, 1), jnp.int32, _named(mesh, dp, None)),
+            "pos": _sds((), jnp.int32, _named(mesh))}
+
+
+def param_specs(cfg, mesh=None, fsdp: bool = False):
+    """Abstract (no-allocation) parameter pytree with shardings."""
+    if is_encdec(cfg):
+        tree = jax.eval_shape(lambda k: ED.init_params(k, cfg),
+                              jax.random.key(0))
+    else:
+        tree = jax.eval_shape(lambda k: LM.init_params(k, cfg),
+                              jax.random.key(0))
+    if mesh is None:
+        return tree
+    rules = SH.lm_rules(fsdp=fsdp,
+                        tied_embed=getattr(cfg, "tie_embeddings", True))
+    shardings = SH.make_shardings(tree, mesh, rules)
+    return SH.attach(tree, shardings)
+
+
+def state_specs(cfg, mesh=None, fsdp: bool = False, zero1: bool = True):
+    """Abstract train-state pytree {params, opt} with shardings."""
+    init_state, _ = make_train_step(cfg)
+    tree = jax.eval_shape(init_state, jax.random.key(0))
+    if mesh is None:
+        return tree
+    rules = SH.lm_rules(fsdp=fsdp,
+                        tied_embed=getattr(cfg, "tie_embeddings", True))
+    p_sh = SH.make_shardings(tree["params"], mesh, rules)
+    o_sh = SH.make_shardings(tree["opt"], mesh, rules)
+    if zero1:
+        # moments additionally sharded over DP (ZeRO-1)
+        o_sh = o_sh._replace(
+            mu=SH.zero1_shardings(o_sh.mu, mesh, tree["opt"].mu),
+            nu=SH.zero1_shardings(o_sh.nu, mesh, tree["opt"].nu))
+    return {
+        "params": SH.attach(tree["params"], p_sh),
+        "opt": jax.tree.map(
+            lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                                 sharding=sh),
+            tree["opt"], o_sh),
+    }
+
+
+def cache_specs(cfg, shape: ShapeSpec, mesh=None):
+    """Abstract decode-cache pytree (KV caches / recurrent state) with
+    the context-parallel layout (cache sequence dim over `model`)."""
+    B, S = shape.global_batch, shape.seq_len
+    if is_encdec(cfg):
+        p_tree = param_specs(cfg)
+        enc_sds = _sds((B, S, cfg.d_model), jnp.bfloat16)
+        tree = jax.eval_shape(
+            lambda p, e: ED.init_dec_cache(p, cfg, e, B, cfg.max_target),
+            p_tree, enc_sds)
+    else:
+        tree = jax.eval_shape(lambda: LM.init_cache(cfg, B, S))
+    if mesh is None:
+        return tree
+    shardings = SH.make_shardings(tree, mesh, SH.cache_rules(mesh))
+    return SH.attach(tree, shardings)
+
+
+# ---------------------------------------------------------------------------
+# dry-run cell assembly: (fn, args) ready for jax.jit(fn).lower(*args)
+# ---------------------------------------------------------------------------
+
+def _with_source_len(cfg: EncDecConfig, S: int) -> EncDecConfig:
+    """Whisper positional table must cover the assigned frame count."""
+    return dataclasses.replace(cfg, max_source=max(cfg.max_source, S))
+
+
+def depth_variant(cfg: LMConfig, groups: int) -> LMConfig:
+    """Same arch with ``groups`` periods, FLAT (no layer scan at all).
+
+    Used by the dry-run's depth-extrapolation: XLA's cost analysis
+    counts a while-loop body once, so we lower shallow variants at two
+    depths and extrapolate counts linearly — exact, because every
+    period contributes identical ops.  The variant routes every layer
+    through the unstacked ``prefix`` path (plain python loop): a
+    scanned/unrolled stack would still contain per-period
+    dynamic-slices whose bytes-accessed is the FULL parameter stack,
+    inflating the memory term by ~x depth.  Prefix and tail layers are
+    preserved so the slope isolates exactly one interior period.
+    """
+    kinds = (tuple(cfg.prefix) + tuple(cfg.pattern) * groups
+             + tuple(cfg.tail_kinds))
+    return dataclasses.replace(cfg, n_layers=len(kinds), prefix=kinds)
+
+
+def dryrun_cell(arch: str, shape_name: str, mesh=None, smoke: bool = False,
+                fsdp: Optional[bool] = None, remat: bool = True,
+                seq_on_model: bool = False, depth_groups: Optional[int] = None,
+                accum: int = 1, overrides: Optional[Dict[str, Any]] = None):
+    """Returns (fn, args_tuple, meta) for one (arch x shape) cell.
+
+    ``fn(*args)`` is the step the shape lowers; args are sharded
+    ShapeDtypeStructs (no allocation).  ``fsdp=None`` auto-enables
+    FSDP parameter sharding for models too big for plain TP.
+    ``depth_groups`` lowers a shallow fully-unrolled depth variant for
+    the cost extrapolation (see ``depth_variant``).
+    ``accum`` enables gradient-accumulation microbatching (train only);
+    ``overrides`` applies dataclasses.replace fields to the config —
+    the perf-iteration knob (e.g. {"n_heads": 48, "n_kv_heads": 48}
+    pads qwen1.5's 40 MHA heads to a 16-divisible TP layout).
+    """
+    cfg = get_config(arch, smoke=smoke)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    if smoke:
+        shape = dataclasses.replace(
+            shape, seq_len=min(shape.seq_len, 64),
+            global_batch=min(shape.global_batch, 4))
+    full_cfg = cfg
+    if is_encdec(cfg):
+        cfg = _with_source_len(cfg, shape.seq_len)
+        full_cfg = cfg
+    elif depth_groups is not None:
+        cfg = depth_variant(cfg, depth_groups)
+
+    # counts/FLOPs always refer to the FULL model, not a depth variant
+    total, active = param_count(full_cfg)
+    if fsdp is None:
+        fsdp = total > 20_000_000_000 and shape.kind == "train"
+
+    meta = {
+        "arch": arch, "shape": shape_name, "kind": shape.kind,
+        "params_total": total, "params_active": active,
+        "model_flops": model_flops(full_cfg, shape), "fsdp": bool(fsdp),
+        "scan_groups_full": (0 if is_encdec(full_cfg)
+                             else full_cfg.n_scan_groups),
+    }
+    batch = batch_specs(cfg, shape, mesh, seq_on_model=seq_on_model)
+
+    if shape.kind == "train":
+        state = state_specs(cfg, mesh, fsdp=fsdp)
+        if accum > 1 and not is_encdec(cfg):
+            _, step = LM.make_train_step(cfg, _optimizer(cfg), remat=remat,
+                                         accum=accum)
+        else:
+            _, step = make_train_step(cfg, remat=remat)
+        return step, (state, batch), meta
+
+    params = param_specs(cfg, mesh, fsdp=False)
+    if shape.kind == "prefill":
+        fn = make_prefill_step(cfg, max_len=shape.seq_len)
+        if is_encdec(cfg):
+            return fn, (params, batch["frames"]), meta
+        return fn, (params, batch["tokens"]), meta
+
+    # decode
+    cache = cache_specs(cfg, shape, mesh)
+    fn = make_serve_step(cfg)
+    return fn, (params, cache, batch["token"], batch["pos"]), meta
+
+
+def build_model(arch: str, smoke: bool = False):
+    """Public convenience: (cfg, step-function bundle)."""
+    cfg = get_config(arch, smoke=smoke)
+    init_state, train_step = make_train_step(cfg)
+    return cfg, {
+        "init_state": init_state,
+        "train_step": train_step,
+        "prefill": make_prefill_step(cfg, max_len=4096),
+        "serve_step": make_serve_step(cfg),
+    }

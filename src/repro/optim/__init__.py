@@ -1,0 +1,2 @@
+from repro.optim.adamw import adamw, sgd, clip_by_global_norm, OptState
+from repro.optim.schedules import constant, cosine, warmup_cosine

@@ -1,0 +1,105 @@
+"""Minimal optax-style optimizers (no external deps).
+
+An optimizer is a pair ``(init_fn, update_fn)``:
+    state  = init_fn(params)
+    updates, state = update_fn(grads, state, params)
+    params = apply_updates(params, updates)
+
+All state lives in plain pytrees so it shards/checkpoints like params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def _as_schedule(lr) -> Schedule:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0,
+          mask: Optional[Callable[[Any], Any]] = None):
+    """AdamW.  ``mask(params)`` may return a {0,1} pytree selecting which
+    leaves receive weight decay (biases/norms usually excluded)."""
+    sched = _as_schedule(lr)
+
+    def init(params):
+        z = jax.tree.map(jnp.zeros_like, params)
+        return OptState(step=jnp.zeros((), jnp.int32), mu=z,
+                        nu=jax.tree.map(jnp.zeros_like, params))
+
+    def update(grads, state: OptState, params=None) -> Tuple[Any, OptState]:
+        step = state.step + 1
+        lr_t = sched(step)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+        mu_hat_scale = 1.0 / (1 - b1 ** step.astype(jnp.float32))
+        nu_hat_scale = 1.0 / (1 - b2 ** step.astype(jnp.float32))
+
+        def upd(m, v, p, wd_on):
+            u = -lr_t * (m * mu_hat_scale) / (jnp.sqrt(v * nu_hat_scale) + eps)
+            if params is not None and weight_decay:
+                u = u - lr_t * weight_decay * wd_on * p
+            return u
+
+        if params is None:
+            updates = jax.tree.map(lambda m, v: upd(m, v, 0.0, 0.0), mu, nu)
+        else:
+            wd_mask = (mask(params) if mask is not None
+                       else jax.tree.map(lambda _: 1.0, params))
+            updates = jax.tree.map(upd, mu, nu, params, wd_mask)
+        return updates, OptState(step=step, mu=mu, nu=nu)
+
+    return init, update
+
+
+def sgd(lr, momentum: float = 0.0):
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        mu=jax.tree.map(jnp.zeros_like, params), nu=None)
+
+    def update(grads, state: OptState, params=None):
+        step = state.step + 1
+        lr_t = sched(step)
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g, state.mu, grads)
+        else:
+            mu = grads
+        updates = jax.tree.map(lambda g: -lr_t * g, mu)
+        return updates, OptState(step=step, mu=mu if momentum else state.mu,
+                                 nu=None)
+
+    return init, update
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))

@@ -1,0 +1,5 @@
+from repro.parallel.sharding import (ShardingRules, make_shardings, attach,
+                                     choose_spec, lm_rules, LM_RULES,
+                                     cache_rules, lutdnn_population_rules,
+                                     zero1_shardings, batch_spec,
+                                     batch_sharding, dp_axes)

@@ -1,0 +1,324 @@
+"""Sharding rules: param-path regex -> PartitionSpec candidates.
+
+One table per model family.  Paths are '/'-joined pytree key paths
+(e.g. ``stacks/0/attn/wq``).  The `model` mesh axis carries tensor/
+expert parallelism (Megatron-style); `data` (+ `pod` on multi-pod
+meshes) carries data parallelism.  Batch axes of activations shard over
+``("pod","data")``.
+
+Key design points
+-----------------
+* Every rule maps to a **candidate list** of PartitionSpecs.  The first
+  candidate whose sharded dims all divide the leaf shape wins; if none
+  fully applies, the first candidate is taken with per-dim fallback to
+  replication.  This is what lets one rule table serve archs whose head
+  counts are not divisible by the 16-way model axis (qwen1.5: 40 heads,
+  rwkv6: 40 heads, whisper: 6 heads) without hd-contraction traps.
+* Params living under a scanned layer stack (``stacks/<i>/...``) carry
+  a leading layer-group dim; the matched spec is shifted right by one
+  so rules keep addressing the *math* dims.
+* MoE expert dim rides `model` (expert parallelism); with
+  ``fsdp=True`` the next dim additionally shards over the DP axes
+  (FSDP / ZeRO-3 style parameter sharding) — required for the
+  1T-parameter kimi-k2 cells to fit HBM.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, List, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+Rule = Tuple[str, List[P]]
+ShardingRules = List[Rule]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _as_candidates(spec: Union[P, List[P]]) -> List[P]:
+    return spec if isinstance(spec, list) else [spec]
+
+
+def specs_for(path: str, rules: ShardingRules) -> List[P]:
+    for pat, spec in rules:
+        if re.search(pat, path):
+            return _as_candidates(spec)
+    return [P()]  # replicate by default
+
+
+def _axis_size(mesh: Mesh, names) -> int:
+    """Product of mesh-axis sizes; -1 if any axis is absent from the
+    mesh (treated as 'candidate does not apply')."""
+    tup = names if isinstance(names, tuple) else (names,)
+    size = 1
+    for n in tup:
+        if n not in mesh.shape:
+            return -1
+        size *= mesh.shape[n]
+    return size
+
+
+def _fits(spec_entries: Sequence, shape: Sequence[int], mesh: Mesh) -> bool:
+    for dim, names in enumerate(spec_entries):
+        if names is None:
+            continue
+        size = _axis_size(mesh, names)
+        if size < 0 or dim >= len(shape) or shape[dim] % size != 0:
+            return False
+    return True
+
+
+def _apply_with_fallback(spec_entries: Sequence, shape: Sequence[int],
+                         mesh: Mesh) -> P:
+    fixed = []
+    for dim in range(len(shape)):
+        names = spec_entries[dim] if dim < len(spec_entries) else None
+        size = _axis_size(mesh, names) if names is not None else -1
+        if names is not None and size > 0 and shape[dim] % size == 0:
+            fixed.append(names)
+        else:
+            fixed.append(None)
+    return P(*fixed)
+
+
+def choose_spec(path: str, shape: Sequence[int], mesh: Mesh,
+                rules: ShardingRules) -> P:
+    """Pick the best candidate spec for a leaf.
+
+    Stack-scanned params (``stacks/<i>/``) get the spec shifted one dim
+    right (leading dim = layer group, never sharded).
+    """
+    shift = 1 if re.search(r"(^|/)stacks/", path) else 0
+    for cand in specs_for(path, rules):
+        entries = [None] * shift + list(cand)
+        entries = entries[: len(shape)]
+        if _fits(entries, shape, mesh):
+            return P(*entries)
+    first = specs_for(path, rules)[0]
+    entries = [None] * shift + list(first)
+    return _apply_with_fallback(entries, shape, mesh)
+
+
+def make_shardings(tree: Any, mesh: Mesh, rules: ShardingRules) -> Any:
+    """Pytree of NamedSharding matching ``tree`` (of arrays or
+    ShapeDtypeStructs)."""
+
+    def one(path, leaf):
+        spec = choose_spec(_path_str(path), leaf.shape, mesh, rules)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def attach(tree: Any, shardings: Any) -> Any:
+    """ShapeDtypeStruct pytree + sharding pytree -> sharded SDS pytree."""
+    return jax.tree.map(
+        lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh),
+        tree, shardings)
+
+
+# ---------------------------------------------------------------------------
+# Rule tables
+# ---------------------------------------------------------------------------
+
+_DP = ("pod", "data")   # entries absent from the mesh are dropped below
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in _DP if a in mesh.axis_names)
+
+
+def _dpa(mesh: Mesh):
+    axes = dp_axes(mesh)
+    return axes if len(axes) > 1 else (axes[0] if axes else None)
+
+
+# Decoder-only / enc-dec LM substrate (see models/lm.py param names).
+# Candidates ordered: Megatron-preferred first, safe fallback last.
+def _fsdp_variants(*entries) -> List[P]:
+    """Expand a spec containing the sentinel 'DP' into candidates:
+    ('pod','data') -> ('data',) -> unsharded — so FSDP degrades
+    gracefully from multi-pod to single-pod to plain TP."""
+    outs = []
+    for sub in (("pod", "data"), "data", None):
+        outs.append(P(*[sub if e == "DP" else e for e in entries]))
+    # dedupe while keeping order
+    seen, uniq = set(), []
+    for s in outs:
+        k = tuple(s)
+        if k not in seen:
+            seen.add(k)
+            uniq.append(s)
+    return uniq
+
+
+def lm_rules(fsdp: bool = False, tied_embed: bool = True) -> ShardingRules:
+    """fsdp=True additionally shards big matrices over the DP axes
+    (ZeRO-3-style parameter sharding; XLA inserts the per-layer
+    all-gathers).  Needed for the 1T-param kimi-k2 cells to fit HBM.
+
+    tied_embed selects the embedding-table layout:
+      * tied (table doubles as the unembed weight): vocab-sharded —
+        the logits matmul stays local per vocab shard (dominant cost);
+      * untied: d_model-sharded — the token gather is then local per
+        chip (indices replicated over `model`), avoiding GSPMD's
+        involuntary full-rematerialization of a vocab-sharded gather
+        (observed on qwen1.5; see EXPERIMENTS.md Perf 4.1 iter 3)."""
+
+    def fs(*entries) -> List[P]:
+        if fsdp:
+            return _fsdp_variants(*entries)
+        return [P(*[None if e == "DP" else e for e in entries])]
+
+    embed_rule = (fs("model", "DP") if tied_embed
+                  else fs("DP", "model") + [P(None, "model")])
+
+    return [
+        # embeddings / head (layout per tied_embed, see docstring)
+        (r"embed/table", embed_rule),
+        (r"head/w$", fs("DP", "model") + [P("model", None)]),
+        # attention: heads on model; fall back to replication (NOT the
+        # hd dim: sharding the contraction of QK^T explodes collectives)
+        (r"(wq)$", fs("DP", "model", None) + [P()]),
+        (r"(wk|wv)$", fs("DP", "model", None) + [P()]),
+        (r"wo$", fs("model", None, "DP") + [P()]),
+        (r"(bq|bk|bv)$", [P("model", None), P()]),
+        # dense FFN: Megatron column/row split (SparseLUT theta/sign
+        # leaves shard exactly like the dense matrices they replace)
+        (r"(w_in|w_gate)(_theta|_sign)?$", fs("DP", "model") + [P()]),
+        (r"w_out$", fs("model", "DP") + [P()]),
+        # MoE: expert parallelism on model (+ FSDP over dp)
+        (r"experts/(w_in|w_gate)$", fs("model", "DP", None) + [P()]),
+        (r"experts/w_out$", fs("model", "DP", None) + [P()]),
+        (r"router/w$", [P()]),
+        (r"shared/(w_in|w_gate)$", fs("DP", "model") + [P()]),
+        (r"shared/w_out$", fs("model", "DP") + [P()]),
+        # RG-LRU lattice: R on model everywhere (elementwise-consistent)
+        (r"rglru/w_(x|y)$", fs("DP", "model") + [P()]),
+        (r"rglru/conv_w$", [P(None, "model"), P()]),
+        (r"rglru/w_(rgate|igate)$", [P(None, "model"), P()]),
+        (r"rglru/lam$", [P("model"), P()]),
+        (r"rglru/w_out$", fs("model", "DP") + [P()]),
+        # RWKV6: channel dim on model for projections; per-head params
+        # replicated (40 heads % 16 != 0)
+        (r"rwkv/w_(r|k|v|g)$", fs("DP", "model") + [P()]),
+        (r"rwkv/w_o$", fs("model", "DP") + [P()]),
+        (r"rwkv/decay_a$", [P(None, None)]),
+        (r"rwkv/decay_b$", [P(None, None)]),
+        (r"rwkv/cm_k$", fs("DP", "model") + [P()]),
+        (r"rwkv/cm_v$", fs("model", "DP") + [P()]),
+        (r"rwkv/cm_r$", fs("DP", "model") + [P()]),
+        # enc-dec extras
+        (r"pos_(enc|dec)$", [P(None, None)]),
+        (r"(ffn|attn)/b$", [P()]),
+        # norms / small vectors: replicate
+        (r"(scale|bias|gamma|beta|mean|var|norm|mu$|lam$|u$|w0$)", [P()]),
+    ]
+
+
+LM_RULES: ShardingRules = lm_rules(fsdp=False)
+
+
+# Decode-state (KV cache / recurrent state) rules: sequence dim of the
+# cache shards over `model` (flash-decoding / context-parallel layout —
+# softmax over a sharded axis lowers to small all-reduces), batch over DP.
+def cache_rules(mesh: Mesh) -> ShardingRules:
+    dpa = _dpa(mesh)
+    return [
+        # k/v (B, S, KH, hd) and int8-cache scales k_s/v_s (B, S, KH):
+        # context-parallel layout (cache sequence dim on `model`)
+        (r"(^|/)(k|v)(_s)?$", [P(dpa, "model", None, None), P(dpa)]),
+        (r"cross_(k|v)$", [P(dpa, "model", None, None), P(dpa)]),
+        (r"/h$", [P(dpa, "model"), P(dpa)]),           # rglru state
+        (r"conv$", [P(dpa, None, "model"), P(dpa)]),   # rglru conv tail
+        (r"/S$", [P(dpa, None, None, None)]),          # rwkv state (H%16!=0)
+        (r"x_(tm|cm)$", [P(dpa, "model"), P(dpa)]),
+        (r".*", [P(dpa)]),
+    ]
+
+
+def lutdnn_population_rules(mesh: Mesh) -> ShardingRules:
+    """vmap'ed population training: leading population axis over DP
+    (every seed/member of the population trains on a different slice of
+    the data-parallel domain)."""
+    dpa = _dpa(mesh)
+    return [(r".*", [P(dpa), P()])]
+
+
+def zero1_shardings(param_shardings: Any, mesh: Mesh, params: Any) -> Any:
+    """ZeRO-1: optimizer moments additionally sharded over the DP axes.
+
+    For each param leaf, take its sharding and try to also partition the
+    first dimension that is currently unsharded by ("pod","data") (or
+    just "data"); fall back to the param's own sharding when the dim is
+    indivisible.  Cuts optimizer-state HBM by the DP degree — required
+    honesty for kimi-k2-scale training (see EXPERIMENTS.md).
+    """
+    axes = dp_axes(mesh)
+    dp_size = 1
+    for a in axes:
+        dp_size *= mesh.shape[a]
+    dp_entry = axes if len(axes) > 1 else axes[0]
+
+    def used_axes(spec) -> set:
+        out = set()
+        for names in spec:
+            if names is None:
+                continue
+            tup = names if isinstance(names, tuple) else (names,)
+            out.update(tup)
+        return out
+
+    def one(sh: NamedSharding, leaf):
+        spec = list(sh.spec) + [None] * (leaf.ndim - len(sh.spec))
+        if used_axes(spec) & set(axes):
+            return sh          # FSDP already shards this leaf over DP
+        for dim in range(leaf.ndim):
+            if spec[dim] is None and leaf.shape[dim] % dp_size == 0:
+                spec[dim] = dp_entry
+                return NamedSharding(mesh, P(*spec))
+        return sh
+
+    return jax.tree.map(one, param_shardings, params)
+
+
+def ambient_mesh() -> Mesh | None:
+    """The mesh of the enclosing ``with mesh:`` context (or None).
+
+    Used by shard_map-based layers (moe_apply_ep) that need explicit
+    axis names while being called from deep inside a jitted model."""
+    try:
+        from jax._src.mesh import thread_resources
+        m = thread_resources.env.physical_mesh
+        return m if m.devices.size > 0 else None
+    except Exception:
+        return None
+
+
+def batch_spec(mesh: Mesh) -> P:
+    return P(_dpa(mesh))
+
+
+def batch_sharding(mesh: Mesh, ndim: int, seq_on_model: bool = False
+                   ) -> NamedSharding:
+    """(B, S, ...) activations: B over DP; optionally S over model
+    (sequence parallelism)."""
+    entries: List[Any] = [_dpa(mesh)]
+    if ndim >= 2:
+        entries.append("model" if seq_on_model else None)
+    entries += [None] * (ndim - len(entries))
+    return NamedSharding(mesh, P(*entries))

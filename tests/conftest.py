@@ -1,0 +1,9 @@
+import os
+
+# Tests must see the real single CPU device (the dry-run alone requests
+# 512 placeholder devices in its own process) — so no XLA_FLAGS here.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,177 @@
+"""Pallas kernel validation: interpret-mode execution vs jnp oracles,
+swept over shapes and dtypes (per the deliverable contract)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.lut_gather import ops as lg_ops, ref as lg_ref
+from repro.kernels.masked_matmul import ops as mm_ops, ref as mm_ref
+from repro.kernels.wkv6 import ops as wkv_ops, ref as wkv_ref
+
+
+# ---------------------------------------------------------------------------
+# wkv6
+# ---------------------------------------------------------------------------
+
+def _wkv_inputs(B, S, H, K, dtype, seed=0):
+    ks = jax.random.split(jax.random.key(seed), 6)
+    r = jax.random.normal(ks[0], (B, S, H, K), dtype)
+    k = jax.random.normal(ks[1], (B, S, H, K), dtype)
+    v = jax.random.normal(ks[2], (B, S, H, K), dtype)
+    logw = jnp.maximum(
+        -jnp.exp(jax.random.normal(ks[3], (B, S, H, K)) * 0.5 - 1.5),
+        -1.0).astype(dtype)
+    u = (jax.random.normal(ks[4], (H, K)) * 0.1).astype(dtype)
+    s0 = (jax.random.normal(ks[5], (B, H, K, K)) * 0.1).astype(jnp.float32)
+    return r, k, v, logw, u, s0
+
+
+@pytest.mark.parametrize("B,S,H,K,chunk", [
+    (1, 16, 1, 8, 8),
+    (2, 70, 3, 8, 16),      # ragged: S % chunk != 0
+    (2, 64, 2, 16, 32),
+    (1, 33, 4, 4, 64),      # chunk > S
+])
+def test_wkv6_kernel_matches_naive(B, S, H, K, chunk):
+    r, k, v, logw, u, s0 = _wkv_inputs(B, S, H, K, jnp.float32)
+    o_ref, s_ref = wkv_ref.wkv_naive(r, k, v, logw, u, s0)
+    o_k, s_k = wkv_ops.wkv6(r, k, v, logw, u, s0, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_ref),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_wkv6_dtype_sweep(dtype):
+    r, k, v, logw, u, s0 = _wkv_inputs(2, 32, 2, 8, dtype, seed=3)
+    o_ref, s_ref = wkv_ref.wkv_naive(r, k, v, logw, u, s0)
+    o_k, s_k = wkv_ops.wkv6(r, k, v, logw, u, s0, chunk=16)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_ref),
+                               rtol=tol, atol=tol)
+
+
+def test_wkv6_without_initial_state():
+    r, k, v, logw, u, _ = _wkv_inputs(1, 24, 2, 8, jnp.float32, seed=5)
+    o_ref, s_ref = wkv_ref.wkv_naive(r, k, v, logw, u, None)
+    o_k, s_k = wkv_ops.wkv6(r, k, v, logw, u, None, chunk=8)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_wkv6_state_carry_composes():
+    """Running two halves with carried state == one full pass."""
+    r, k, v, logw, u, s0 = _wkv_inputs(1, 32, 2, 8, jnp.float32, seed=9)
+    o_full, s_full = wkv_ops.wkv6(r, k, v, logw, u, s0, chunk=8)
+    o1, s_mid = wkv_ops.wkv6(r[:, :16], k[:, :16], v[:, :16],
+                             logw[:, :16], u, s0, chunk=8)
+    o2, s_end = wkv_ops.wkv6(r[:, 16:], k[:, 16:], v[:, 16:],
+                             logw[:, 16:], u, s_mid, chunk=8)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([o1, o2], 1)),
+                               np.asarray(o_full), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_end), np.asarray(s_full),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# masked_matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,n_in,n_out,F", [
+    (8, 64, 32, 4),
+    (100, 784, 256, 6),     # HDR first-layer shape
+    (33, 100, 10, 7),       # ragged tiles
+    (1, 16, 5, 16),         # F == n_in
+])
+def test_masked_matmul_matches_gather_ref(B, n_in, n_out, F):
+    ks = jax.random.split(jax.random.key(B), 3)
+    x = jax.random.normal(ks[0], (B, n_in))
+    conn = jax.random.randint(ks[1], (n_out, F), 0, n_in)
+    w = jax.random.normal(ks[2], (n_out, F))
+    b = jnp.arange(n_out, dtype=jnp.float32) * 0.01
+    want = mm_ref.masked_matmul(x, conn, w, b)
+    got = mm_ops.masked_matmul(x, conn, w, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_masked_matmul_dense_oracle_agrees():
+    ks = jax.random.split(jax.random.key(0), 3)
+    x = jax.random.normal(ks[0], (16, 48))
+    conn = jax.random.randint(ks[1], (24, 5), 0, 48)
+    w = jax.random.normal(ks[2], (24, 5))
+    a = mm_ref.masked_matmul(x, conn, w)
+    b = mm_ref.masked_matmul_dense(x, conn, w, 48)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_masked_matmul_dtypes(dtype):
+    ks = jax.random.split(jax.random.key(2), 3)
+    x = jax.random.normal(ks[0], (32, 64)).astype(dtype)
+    conn = jax.random.randint(ks[1], (16, 4), 0, 64)
+    w = jax.random.normal(ks[2], (16, 4)).astype(dtype)
+    want = mm_ref.masked_matmul(x.astype(jnp.float32), conn,
+                                w.astype(jnp.float32))
+    got = mm_ops.masked_matmul(x, conn, w)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# lut_gather
+# ---------------------------------------------------------------------------
+
+def _lut_artifacts(n_out, A, F, in_bits, sub_bits, seed=0):
+    ks = jax.random.split(jax.random.key(seed), 3)
+    K = 2 ** (in_bits * F)
+    Ka = 2 ** (A * sub_bits) if A > 1 else 0
+    conn = jax.random.randint(ks[0], (n_out, A, F), 0, 16)
+    sub = jax.random.randint(ks[1], (n_out, A, K), 0, 2 ** sub_bits)
+    add = (jax.random.randint(ks[2], (n_out, Ka), 0, 255)
+           if A > 1 else jnp.zeros((n_out, 0), jnp.int32))
+    return conn.astype(jnp.int32), sub.astype(jnp.int32), add.astype(jnp.int32)
+
+
+@pytest.mark.parametrize("B,n_out,A,F,in_bits", [
+    (10, 8, 1, 3, 2),
+    (64, 40, 2, 3, 2),      # PolyLUT-Add path
+    (7, 33, 3, 2, 3),       # ragged neuron tiles, A=3
+])
+def test_lut_gather_matches_ref(B, n_out, A, F, in_bits):
+    sub_bits = in_bits + 1
+    conn, sub, add = _lut_artifacts(n_out, A, F, in_bits, sub_bits)
+    codes = jax.random.randint(jax.random.key(9), (B, 16), 0, 2 ** in_bits
+                               ).astype(jnp.int32)
+    want = lg_ref.lut_layer(codes, conn, sub, add, in_bits, sub_bits)
+    got = lg_ops.lut_layer(codes, conn, sub, add, in_bits, sub_bits)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_lut_gather_full_network_bit_exact():
+    """End-to-end: synthesised model -> kernel == jnp LUT forward."""
+    from repro.core import lut_synth as LS, lutdnn as LD
+    spec = LD.ModelSpec(name="t", in_features=16, widths=(12, 5), bits=2,
+                        fan_in=3, degree=2, adder_width=2)
+    model = LD.init_model(jax.random.key(1), spec)
+    tables = LS.synthesise(model, spec)
+    x = jax.random.uniform(jax.random.key(2), (40, 16), minval=-1, maxval=1)
+    fq = spec.layer_specs()[0].in_quant
+    codes = fq.to_code(fq.clip(x))
+    want = codes
+    for t in tables:
+        want = LS.lut_layer_forward(t, want)
+    got = lg_ops.lut_network(tables, codes)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_pack_index_convention_shared():
+    """Slot 0 = low bits — the convention must match across modules."""
+    codes = jnp.asarray([[1, 2, 3]])
+    from repro.core.lut_synth import pack_index as core_pack
+    assert int(core_pack(codes, 2)[0]) == 1 + (2 << 2) + (3 << 4)
+    assert int(lg_ref.pack_index(codes, 2)[0]) == 1 + (2 << 2) + (3 << 4)

@@ -1,0 +1,88 @@
+"""Truth-table synthesis: LUT-mode inference must match QAT forward
+bit-exactly — the paper's 'RTL generation' contract."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lut_synth as LS
+from repro.core import lutdnn as LD
+from repro.core.lutdnn import ModelSpec
+
+
+def _train_briefly(spec, steps=10, seed=0):
+    """A few steps so BN stats are non-trivial, then eval-mode model."""
+    init_state, step = LD.make_train_step(spec, lr=1e-3)
+    state = init_state(jax.random.key(seed))
+    jstep = jax.jit(step)
+    rng = np.random.default_rng(seed)
+    for _ in range(steps):
+        x = jnp.asarray(rng.uniform(-1, 1, (64, spec.in_features)),
+                        jnp.float32)
+        y = jnp.asarray(rng.integers(0, spec.widths[-1], (64,)), jnp.int32)
+        state, _ = jstep(state, {"x": x, "y": y})
+    return state["model"]
+
+
+@pytest.mark.parametrize("degree,adder,hidden", [
+    (1, 1, ()),        # LogicNets
+    (2, 1, ()),        # PolyLUT
+    (1, 2, ()),        # PolyLUT-Add
+    (2, 2, ()),        # PolyLUT-Add D=2
+    (1, 1, (6,)),      # NeuraLUT
+])
+def test_lut_mode_matches_qat_forward(degree, adder, hidden):
+    spec = ModelSpec(name="t", in_features=12, widths=(10, 5), bits=2,
+                     fan_in=3, degree=degree, adder_width=adder,
+                     hidden=hidden)
+    model = _train_briefly(spec)
+    tables = LS.synthesise(model, spec)
+
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.uniform(-1, 1, (100, 12)), jnp.float32)
+
+    logits_net, _ = LD.forward(model, spec, x, train=False)
+    logits_lut = LS.lut_forward(tables, x, spec.layer_specs()[0].in_quant)
+
+    # the LUT path quantizes the output layer to 16-bit codes; argmax
+    # agreement is the deployment contract, values agree to grid step
+    assert np.array_equal(np.asarray(jnp.argmax(logits_net, -1)),
+                          np.asarray(jnp.argmax(logits_lut, -1)))
+    assert np.allclose(np.asarray(logits_net), np.asarray(logits_lut),
+                       atol=LS.OUTPUT_QUANT.step + 1e-6)
+
+
+def test_intermediate_codes_bit_exact():
+    """Layer-by-layer: LUT table output == quantized transfer function
+    for EVERY enumerable input combination (not just samples)."""
+    spec = ModelSpec(name="t", in_features=8, widths=(6,), bits=2,
+                     fan_in=2, degree=2, adder_width=2)
+    model = _train_briefly(spec, steps=5)
+    s = spec.layer_specs()[0]
+    t = LS.synthesise_layer(model["layers"][0], model["conn"][0], s)
+
+    # enumerate all input codes over the fan-in support
+    K = 2 ** (s.in_quant.bits * s.fan_in)
+    combos = np.stack([(np.arange(K) >> (s.in_quant.bits * i))
+                       & (s.in_quant.levels - 1)
+                       for i in range(s.fan_in)], axis=1)
+    # check one neuron/sub-neuron pair exhaustively
+    vals = s.in_quant.from_code(jnp.asarray(combos))        # (K, F)
+    xf = jnp.broadcast_to(vals[:, None, None, :], (K, s.n_out,
+                                                   s.adder_width, s.fan_in))
+    from repro.core.layers import subneuron_transfer
+    pre = subneuron_transfer(model["layers"][0], s, xf)     # (K, n_out, A)
+    expect = s.sub_quant.to_code(pre)
+    got = np.asarray(t.sub_table)                           # (n_out, A, K)
+    assert np.array_equal(got, np.asarray(expect).transpose(1, 2, 0))
+
+
+def test_table_sizes_match_spec_accounting():
+    spec = ModelSpec(name="t", in_features=10, widths=(8, 5), bits=2,
+                     fan_in=3, adder_width=2)
+    model = LD.init_model(jax.random.key(0), spec)
+    tables = LS.synthesise(model, spec)
+    for t, s in zip(tables, spec.layer_specs()):
+        assert t.sub_table.shape == (s.n_out, s.adder_width,
+                                     s.subneuron_table_entries)
+        assert t.add_table.shape[1] == s.adder_table_entries

@@ -1,0 +1,73 @@
+"""Algorithm 1 (weight mapping) invariants — unit + hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import masking
+
+
+@given(n_in=st.integers(2, 64), n_out=st.integers(1, 16),
+       fi=st.integers(1, 64), seed=st.integers(0, 2 ** 16))
+@settings(max_examples=30, deadline=None)
+def test_init_theta_fan_in(n_in, n_out, fi, seed):
+    tl = masking.init_theta_layer(jax.random.key(seed), n_in, n_out,
+                                  initial_fan_in=fi)
+    fan = np.asarray(tl.fan_in())
+    assert (fan == min(fi, n_in)).all()
+    # signs are exactly +-1; theta non-negative at init
+    assert set(np.unique(np.asarray(tl.sign))) <= {-1.0, 1.0}
+    assert (np.asarray(tl.theta) >= 0).all()
+
+
+def test_init_dense_when_none():
+    tl = masking.init_theta_layer(jax.random.key(0), 10, 3, None)
+    assert (np.asarray(tl.fan_in()) == 10).all()
+
+
+def test_effective_weight_gates_value_and_grad():
+    theta = jnp.asarray([[0.5, -0.2], [0.0, 1.0]])
+    sign = jnp.asarray([[1.0, -1.0], [1.0, -1.0]])
+    w = masking.effective_weight(theta, sign)
+    # w = theta * sign * 1(theta > 0)
+    assert np.allclose(np.asarray(w), [[0.5, 0.0], [0.0, -1.0]])
+    # gradient flows only through active connections (Alg. 2 line 5)
+    g = jax.grad(lambda t: jnp.sum(masking.effective_weight(t, sign) ** 2)
+                 )(theta)
+    assert float(g[0, 1]) == 0.0 and float(g[1, 0]) == 0.0
+    assert float(g[0, 0]) != 0.0 and float(g[1, 1]) != 0.0
+
+
+@given(n_in=st.integers(2, 48), n_out=st.integers(1, 12),
+       f=st.integers(1, 8), seed=st.integers(0, 999))
+@settings(max_examples=30, deadline=None)
+def test_random_mask_exact_fan_in(n_in, n_out, f, seed):
+    m = masking.random_mask(jax.random.key(seed), n_in, n_out, f)
+    assert m.shape == (n_in, n_out)
+    assert (np.asarray(m.sum(0)) == min(f, n_in)).all()
+
+
+@given(n_in=st.integers(4, 40), n_out=st.integers(1, 10),
+       f=st.integers(1, 6), seed=st.integers(0, 999))
+@settings(max_examples=30, deadline=None)
+def test_final_mask_topk_exact(n_in, n_out, f, seed):
+    theta = jax.random.uniform(jax.random.key(seed), (n_in, n_out))
+    m = np.asarray(masking.final_mask(theta, f))
+    assert (m.sum(0) == min(f, n_in)).all()
+    # selected entries are the top-f thetas per column
+    th = np.asarray(theta)
+    for c in range(n_out):
+        sel = th[:, c][m[:, c] > 0]
+        unsel = th[:, c][m[:, c] == 0]
+        if len(unsel):
+            assert sel.min() >= unsel.max() - 1e-6
+
+
+def test_mask_to_indices_points_at_active_rows():
+    mask = jnp.asarray([[1, 0], [0, 1], [1, 1], [0, 0]], jnp.float32)
+    idx = np.asarray(masking.mask_to_indices(mask, 2))  # (n_out=2, F=2)
+    assert idx.shape == (2, 2)
+    for c in range(2):
+        active = {r for r in range(4) if float(mask[r, c]) > 0}
+        assert set(idx[c]) <= active
+        assert set(idx[c]) == active  # exactly-F columns keep all actives

@@ -1,0 +1,41 @@
+"""PolyLUT monomial expansion tests."""
+import itertools
+import math
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import poly
+
+
+@given(f=st.integers(1, 6), d=st.integers(1, 3))
+@settings(max_examples=30, deadline=None)
+def test_monomial_count_matches_combinatorics(f, d):
+    # number of monomials of total degree in [1, d] over f variables
+    expect = math.comb(f + d, d) - 1
+    assert poly.num_monomials(f, d) == expect
+    E = poly.monomial_exponents(f, d)
+    assert E.shape == (expect, f)
+    assert E.sum(axis=1).min() == 1 and E.sum(axis=1).max() == d
+    # rows unique
+    assert len({tuple(r) for r in E}) == expect
+
+
+def test_degree_one_is_identity():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 5)))
+    assert poly.expand(x, 1) is x
+
+
+def test_expansion_values():
+    x = jnp.asarray([[2.0, 3.0]])
+    out = np.asarray(poly.expand(x, 2))[0]
+    E = poly.monomial_exponents(2, 2)
+    expect = [2.0 ** e0 * 3.0 ** e1 for e0, e1 in E]
+    assert np.allclose(out, expect)
+    # degree-1 terms come first so D=1 truncation == linear neuron
+    assert np.allclose(out[:2], [2.0, 3.0])
+
+
+def test_expand_shape_helper():
+    assert poly.expand_shape((7, 3), 2) == (7, poly.num_monomials(3, 2))

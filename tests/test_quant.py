@@ -1,0 +1,66 @@
+"""QuantSpec / batch-norm unit + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quant import (QuantSpec, act_quant, adder_quant, bn_apply_eval,
+                              bn_apply_train, bn_fold, bn_init, input_quant)
+
+
+@given(bits=st.integers(1, 8),
+       low=st.floats(-4, 0, allow_nan=False),
+       span=st.floats(0.5, 8, allow_nan=False))
+@settings(max_examples=40, deadline=None)
+def test_code_value_roundtrip(bits, low, span):
+    q = QuantSpec(bits=bits, low=low, high=low + span)
+    codes = q.all_codes()
+    assert codes.shape == (2 ** bits,)
+    vals = q.from_code(codes)
+    # codes -> values -> codes is the identity
+    assert np.array_equal(np.asarray(q.to_code(vals)), np.asarray(codes))
+    # grid endpoints are exact
+    assert np.isclose(float(vals[0]), low, atol=1e-6)
+    assert np.isclose(float(vals[-1]), low + span, atol=1e-6)
+
+
+@given(bits=st.integers(1, 6), x=st.floats(-10, 10, allow_nan=False))
+@settings(max_examples=60, deadline=None)
+def test_quantize_idempotent_and_bounded(bits, x):
+    q = QuantSpec(bits=bits, low=-1.0, high=1.0)
+    xq = float(q.quantize(jnp.asarray(x)))
+    assert -1.0 - 1e-6 <= xq <= 1.0 + 1e-6
+    assert np.isclose(float(q.quantize(jnp.asarray(xq))), xq, atol=1e-6)
+    # quantization error bounded by half a step (inside the range)
+    if -1 <= x <= 1:
+        assert abs(xq - x) <= q.step / 2 + 1e-6
+
+
+def test_ste_gradient_is_identity():
+    q = act_quant(3)
+    g = jax.grad(lambda x: jnp.sum(q.quantize(x)))(jnp.linspace(0.1, 0.9, 8))
+    assert np.allclose(np.asarray(g), 1.0)
+
+
+def test_quant_ranges():
+    assert input_quant(4).low == -1.0 and input_quant(4).high == 1.0
+    assert act_quant(4).low == 0.0
+    # adder feed uses one extra bit (overflow headroom per the paper)
+    assert adder_quant(3, 2).bits == 4
+
+
+def test_bn_train_eval_and_fold():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(2.0, 3.0, (512, 16)).astype(np.float32))
+    p = bn_init(16)
+    y, p2 = bn_apply_train(p, x)
+    # training mode normalizes the batch
+    assert np.allclose(np.asarray(y.mean(0)), 0.0, atol=1e-3)
+    assert np.allclose(np.asarray(y.std(0)), 1.0, atol=1e-2)
+    # after many updates the running stats converge; eval == folded affine
+    for _ in range(200):
+        _, p = bn_apply_train(p, x)
+    ye = bn_apply_eval(p, x)
+    yf = bn_fold(p)(x)
+    assert np.allclose(np.asarray(ye), np.asarray(yf), atol=1e-5)

@@ -1,0 +1,116 @@
+"""Sharding rule tables + registry spec assembly (single-device paths;
+the 256/512-device lower+compile proof lives in launch/dryrun.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import registry as R
+from repro.parallel import sharding as SH
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # single real device: mesh (1, 1) exercises the full rule machinery
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_choose_spec_prefers_first_fitting(mesh):
+    # 16 % 1 == 0 -> first candidate applies on the (1,1) mesh
+    spec = SH.choose_spec("layers/0/attn/wq", (64, 16, 8), mesh,
+                          SH.lm_rules())
+    assert spec == P(None, "model", None)
+
+
+def test_choose_spec_stacked_params_shift(mesh):
+    spec = SH.choose_spec("stacks/0/attn/wq", (12, 64, 16, 8), mesh,
+                          SH.lm_rules())
+    assert spec == P(None, None, "model", None)
+
+
+def test_choose_spec_divisibility_fallback():
+    # force a 2-way model axis so odd dims cannot shard
+    devs = jax.devices()
+    if len(devs) < 2:
+        # simulate with the rule helpers directly
+        class FakeMesh:
+            shape = {"data": 2, "model": 2}
+            axis_names = ("data", "model")
+        m = FakeMesh()
+        spec = SH.choose_spec("attn/wq", (64, 7, 8), m, SH.lm_rules())
+        # 7 heads % 2 != 0 -> falls through to replicate candidate
+        assert spec == P()
+
+
+def test_default_rule_is_replicate(mesh):
+    assert SH.choose_spec("totally/unknown/leaf", (8, 8), mesh,
+                          SH.lm_rules()) == P()
+
+
+def test_sparse_ffn_theta_sharded_like_dense(mesh):
+    rules = SH.lm_rules()
+    a = SH.choose_spec("ffn/w_in", (64, 128), mesh, rules)
+    b = SH.choose_spec("ffn/w_in_theta", (64, 128), mesh, rules)
+    c = SH.choose_spec("ffn/w_in_sign", (64, 128), mesh, rules)
+    assert a == b == c
+
+
+def test_fsdp_variants_expand_and_degrade():
+    cands = SH._fsdp_variants("DP", "model")
+    assert cands[0] == P(("pod", "data"), "model")
+    assert cands[1] == P("data", "model")
+    assert cands[2] == P(None, "model")
+
+
+def test_zero1_does_not_duplicate_axes(mesh):
+    params = {"w": jnp.zeros((4, 4))}
+    base = {"w": NamedSharding(mesh, P("data", "model"))}
+    out = SH.zero1_shardings(base, mesh, params)
+    # already DP-sharded -> untouched (no duplicate axis error)
+    assert out["w"].spec == P("data", "model")
+    base2 = {"w": NamedSharding(mesh, P(None, "model"))}
+    out2 = SH.zero1_shardings(base2, mesh, params)
+    assert out2["w"].spec == P("data", "model")
+
+
+def test_registry_batch_specs_divisibility_guard(mesh):
+    cfg = R.get_config("qwen2.5-3b", smoke=True)
+    shape = R.SHAPES["long_500k"]   # batch 1 cannot shard over data
+    specs = R.batch_specs(cfg, shape, mesh)
+    tok = specs["token"]
+    assert tok.shape == (1, 1)      # batch dim survives as replicated
+
+
+@pytest.mark.parametrize("arch", list(R.ARCHS))
+def test_registry_dryrun_cell_assembles_all_shapes(arch):
+    """eval_shape-level proof that every non-skipped (arch x shape)
+    cell assembles: specs built, fn traceable metadata present."""
+    for shape in R.SHAPES:
+        if R.cell_is_skipped(arch, shape):
+            continue
+        fn, args, meta = R.dryrun_cell(arch, shape, mesh=None, smoke=True)
+        assert callable(fn)
+        assert meta["model_flops"] > 0
+        assert meta["params_total"] >= meta["params_active"]
+        # every arg leaf is an abstract spec (no device allocation)
+        for leaf in jax.tree.leaves(args):
+            assert hasattr(leaf, "shape") and hasattr(leaf, "dtype")
+
+
+def test_param_specs_attach_namedshardings(mesh):
+    cfg = R.get_config("granite-moe-1b-a400m", smoke=True)
+    tree = R.param_specs(cfg, mesh)
+    shardings = [l.sharding for l in jax.tree.leaves(tree)]
+    assert all(isinstance(s, NamedSharding) for s in shardings)
+
+
+def test_model_flops_semantics():
+    cfg = R.get_config("kimi-k2-1t-a32b")
+    total, active = R.param_count(cfg)
+    assert total > 1.0e12 and active < 40e9   # 1T total, ~32B active
+    f_train = R.model_flops(cfg, R.SHAPES["train_4k"])
+    f_dec = R.model_flops(cfg, R.SHAPES["decode_32k"])
+    # train: 6*N_active*tokens; decode: 2*N_active*batch
+    assert np.isclose(f_train, 6 * active * 256 * 4096, rtol=1e-6)
+    assert np.isclose(f_dec, 2 * active * 128, rtol=1e-6)

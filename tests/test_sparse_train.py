@@ -1,0 +1,90 @@
+"""Algorithm 2 (non-greedy sparse training) behaviour tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import masking
+from repro.core.sparse_train import (SparsityConfig, fan_in_violation,
+                                     sparse_control, sparse_control_layer)
+
+
+def _cfg(f=3, T=100, **kw):
+    return SparsityConfig(target_fan_in=f, phase_boundary=T, **kw)
+
+
+def test_regrowth_restores_fan_in():
+    """Neurons under target regrow |R| random connections at eps1."""
+    theta = jnp.zeros((10, 4))          # all inactive
+    out = sparse_control(theta, jax.random.key(0), jnp.asarray(0),
+                         _cfg(f=3), lr=1e-3)
+    fan = np.asarray((out > 0).sum(0))
+    assert (fan == 3).all()
+    # regrown connections initialized at eps1 exactly
+    vals = np.asarray(out[out > 0])
+    assert np.allclose(vals, _cfg().eps1)
+
+
+def test_progressive_phase_penalizes_not_kills():
+    """t < T: excess connections get -eps2 nudges, not hard zeros."""
+    cfg = _cfg(f=2, T=100, eps2=1e-4)
+    theta = jnp.asarray([[0.5], [0.4], [0.003], [0.0]])
+    out = sparse_control(theta, jax.random.key(1), jnp.asarray(10), cfg,
+                         lr=0.0)  # lr=0 isolates the controller
+    # weakest active (0.003) penalized by eps2; strong ones untouched
+    assert np.isclose(float(out[2, 0]), 0.003 - cfg.eps2, atol=1e-7)
+    assert float(out[0, 0]) > 0.49 and float(out[1, 0]) > 0.39
+    assert np.asarray((out > 0).sum(0))[0] == 3   # still 3 active
+
+
+def test_finetune_phase_enforces_exact_fan_in():
+    """t >= T: hard truncation to the target fan-in."""
+    cfg = _cfg(f=2, T=100)
+    theta = jnp.asarray([[0.5], [0.4], [0.3], [0.2], [0.1]])
+    out = sparse_control(theta, jax.random.key(2), jnp.asarray(100), cfg,
+                         lr=0.0)
+    fan = np.asarray((out > 0).sum(0))
+    assert (fan == 2).all()
+    # survivors are the largest thetas
+    assert float(out[0, 0]) > 0 and float(out[1, 0]) > 0
+    assert float(out[2, 0]) == 0.0
+
+
+@given(seed=st.integers(0, 500), f=st.integers(1, 6))
+@settings(max_examples=20, deadline=None)
+def test_finetune_invariant_property(seed, f):
+    key = jax.random.key(seed)
+    theta = jax.random.uniform(key, (24, 8)) - 0.3   # mixed active/inactive
+    cfg = _cfg(f=f, T=10)
+    out = sparse_control(theta, key, jnp.asarray(50), cfg, lr=1e-3)
+    fan = np.asarray((out > 0).sum(0))
+    assert (fan == min(f, 24)).all()
+
+
+def test_noise_and_shrinkage_touch_only_active():
+    cfg = _cfg(f=8, T=10, noise_std=0.0, l1=1.0)
+    theta = jnp.asarray([[0.5], [0.0]])
+    out = sparse_control(theta, jax.random.key(0), jnp.asarray(0), cfg,
+                         lr=0.01)
+    assert float(out[0, 0]) < 0.5          # shrunk by lr * l1
+    assert float(out[1, 0]) >= 0.0         # inactive untouched (then regrown)
+
+
+def test_fan_in_violation_monitor():
+    tl = masking.init_theta_layer(jax.random.key(0), 12, 4, initial_fan_in=5)
+    cfgs = [_cfg(f=5)]
+    assert float(fan_in_violation([tl], cfgs)) <= 0
+    cfgs = [_cfg(f=3)]
+    assert float(fan_in_violation([tl], cfgs)) == 2
+
+
+def test_two_phase_search_converges_end_to_end():
+    """Mini Alg.-2 run: dense init -> exact target fan-in after T."""
+    key = jax.random.key(3)
+    tl = masking.init_theta_layer(key, 30, 6, initial_fan_in=None)
+    cfg = _cfg(f=4, T=60, eps2=5e-3)
+    for t in range(100):
+        key, sub = jax.random.split(key)
+        tl = sparse_control_layer(tl, sub, jnp.asarray(t), cfg, lr=1e-3)
+    fan = np.asarray(tl.fan_in())
+    assert (fan == 4).all()
