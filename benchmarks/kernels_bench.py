@@ -9,8 +9,12 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import print_table, timed
+from repro.core import lut_synth as LS
+from repro.core import lutdnn as LD
+from repro.kernels.lut_gather import ops as lg_ops
 from repro.kernels.masked_matmul import ops as mm_ops, ref as mm_ref
 from repro.kernels.wkv6 import ref as wkv_ref
 
@@ -43,6 +47,30 @@ def run(fast: bool = False):
                  f"{timed(f_g, x, iters=3)*1e3:.2f}ms"])
     rows.append(["masked_matmul", "scatter-form (sparse-large)",
                  f"{timed(f_d, x, iters=3)*1e3:.2f}ms"])
+
+    # lut_gather smoke rows: per-layer vs fused, packed vs int32 (the
+    # canonical tracked comparison lives in benchmarks/lut_infer_bench)
+    spec = LD.ModelSpec(name="bench", in_features=16,
+                        widths=(64, 32, 32, 5), bits=2, fan_in=3,
+                        degree=1, adder_width=2)
+    model = LD.init_model(jax.random.key(2), spec)
+    packed = LS.synthesise(model, spec, pack=True)
+    legacy = LS.synthesise(model, spec, pack=False)
+    B = 1024 if fast else 2048
+    codes = jax.random.randint(jax.random.key(3), (B, 16), 0, 4
+                               ).astype(jnp.int32)
+    f_seed = jax.jit(
+        lambda c: lg_ops.lut_network(legacy, c, broadcast_tables=True))
+    f_pl = jax.jit(lambda c: lg_ops.lut_network(packed, c))
+    f_fused = lg_ops.make_network_fn(packed, fused=True, block_b=B)
+    assert np.array_equal(np.asarray(f_fused(codes)),
+                          np.asarray(f_seed(codes)))
+    rows.append(["lut_gather", f"per-layer int32 bcast (seed), B={B}",
+                 f"{timed(f_seed, codes, iters=3)*1e3:.2f}ms"])
+    rows.append(["lut_gather", f"per-layer uint8 flat, B={B}",
+                 f"{timed(f_pl, codes, iters=3)*1e3:.2f}ms"])
+    rows.append(["lut_gather", f"fused uint8 single-kernel, B={B}",
+                 f"{timed(f_fused, codes, iters=3)*1e3:.2f}ms"])
 
     print_table("Kernel micro-bench (CPU; relative only)",
                 ["kernel", "config", "time"], rows)

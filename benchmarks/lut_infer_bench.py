@@ -1,0 +1,142 @@
+"""LUT inference engine benchmark: fused vs per-layer, packed vs int32.
+
+Tracks the perf trajectory of the lut_gather serving path across PRs.
+Three execution strategies over identical synthesised networks:
+
+  seed        per-layer pallas_call, int32 tables, broadcast gather —
+              the layout/blocking the repo shipped with at seed
+  per-layer   per-layer pallas_call, packed uint8 tables, flat gather
+  fused       whole network in ONE pallas_call, packed uint8 tables,
+              matmul routing, VMEM activation scratch
+
+On this CPU container all kernels run in Pallas interpret mode, so the
+numbers are a proxy (documented in the JSON as backend/interpret); the
+relative ordering is what is tracked.  ``python -m benchmarks.run
+--json`` (or ``python -m benchmarks.lut_infer_bench --json``) writes
+``BENCH_lut_infer.json`` at the repo root in a stable schema:
+
+    {"bench": "lut_infer", "schema_version": 1, "backend": ...,
+     "configs": [{name, batch, widths, fan_in, bits, adder_width,
+                  table_bytes_int32, table_bytes_packed,
+                  seed_per_layer_int32_ms, per_layer_packed_ms,
+                  fused_packed_ms, samples_per_sec_fused,
+                  tokens_per_sec_fused, speedup_fused_vs_seed,
+                  speedup_packed_vs_int32}]}
+
+``tokens_per_sec_fused`` is an intentional alias of
+``samples_per_sec_fused`` (one classified sample = one token of
+serving work) so cross-bench dashboards can read a uniform key.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import print_table, timed
+from repro.core import lut_synth as LS
+from repro.core import lutdnn as LD
+from repro.kernels.lut_gather import ops as lg_ops, ref as lg_ref
+
+JSON_PATH = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_lut_infer.json"
+
+# deep nets are where fusion pays: one kernel replaces L x (tiles)
+# pallas_calls and all inter-layer HBM round-trips
+CONFIGS = [
+    ("jsc-m-add2", dict(in_features=16, widths=(64, 32, 32, 32, 5),
+                        bits=2, fan_in=3, degree=1, adder_width=2)),
+    ("jsc-wide-f6", dict(in_features=16, widths=(32, 16, 5),
+                         bits=2, fan_in=6, degree=1, adder_width=2)),
+    ("logicnets-deep", dict(in_features=16, widths=(64, 32, 32, 5),
+                            bits=2, fan_in=3, degree=1, adder_width=1)),
+]
+
+
+def _bench_config(name: str, kw: dict, batch: int, iters: int):
+    spec = LD.ModelSpec(name=name, **kw)
+    model = LD.init_model(jax.random.key(0), spec)
+    packed = LS.synthesise(model, spec, pack=True)
+    legacy = LS.synthesise(model, spec, pack=False)
+    codes = jax.random.randint(
+        jax.random.key(1), (batch, spec.in_features), 0,
+        2 ** spec.layer_specs()[0].in_quant.bits).astype(jnp.int32)
+
+    # bit-exactness guard: a benchmark of a wrong kernel is worthless
+    want = codes
+    for t in legacy:
+        want = lg_ref.lut_layer(want, t.conn, t.sub_table, t.add_table,
+                                t.in_bits, t.sub_bits)
+    seed_fn = jax.jit(
+        lambda c: lg_ops.lut_network(legacy, c, broadcast_tables=True))
+    per_layer_fn = jax.jit(lambda c: lg_ops.lut_network(packed, c))
+    per_layer_i32_fn = jax.jit(lambda c: lg_ops.lut_network(legacy, c))
+    fused_fn = lg_ops.make_network_fn(packed, fused=True, block_b=batch)
+    for f in (seed_fn, per_layer_fn, fused_fn):
+        assert np.array_equal(np.asarray(f(codes)), np.asarray(want)), name
+
+    t_seed = timed(seed_fn, codes, iters=iters)
+    t_pl = timed(per_layer_fn, codes, iters=iters)
+    t_pl_i32 = timed(per_layer_i32_fn, codes, iters=iters)
+    t_fused = timed(fused_fn, codes, iters=iters)
+
+    sps_fused = batch / t_fused
+    return {
+        "name": name,
+        "batch": batch,
+        "widths": list(kw["widths"]),
+        "fan_in": kw["fan_in"],
+        "bits": kw["bits"],
+        "adder_width": kw["adder_width"],
+        "table_bytes_int32": LS.network_table_bytes(legacy),
+        "table_bytes_packed": LS.network_table_bytes(packed),
+        "seed_per_layer_int32_ms": round(t_seed * 1e3, 3),
+        "per_layer_int32_flat_ms": round(t_pl_i32 * 1e3, 3),
+        "per_layer_packed_ms": round(t_pl * 1e3, 3),
+        "fused_packed_ms": round(t_fused * 1e3, 3),
+        "samples_per_sec_seed": round(batch / t_seed),
+        "samples_per_sec_fused": round(sps_fused),
+        "tokens_per_sec_fused": round(sps_fused),
+        "speedup_fused_vs_seed": round(t_seed / t_fused, 2),
+        "speedup_packed_vs_int32": round(t_pl_i32 / t_pl, 2),
+    }
+
+
+def run(fast: bool = False, write_json: bool = False):
+    batch = 1024 if fast else 4096
+    iters = 3 if fast else 7
+    results = [_bench_config(n, kw, batch, iters) for n, kw in CONFIGS]
+
+    cols = ["config", "B", "seed(i32)ms", "per-layer(u8)ms",
+            "fused(u8)ms", "fused-vs-seed", "packed-vs-i32"]
+    rows = [[r["name"], r["batch"], r["seed_per_layer_int32_ms"],
+             r["per_layer_packed_ms"], r["fused_packed_ms"],
+             f'{r["speedup_fused_vs_seed"]}x',
+             f'{r["speedup_packed_vs_int32"]}x'] for r in results]
+    print_table("LUT inference engine (CPU interpret proxy)", cols, rows)
+
+    payload = {
+        "bench": "lut_infer",
+        "schema_version": 1,
+        "backend": jax.default_backend(),
+        "interpret": jax.default_backend() != "tpu",
+        "fast": fast,
+        "configs": results,
+    }
+    if write_json:
+        JSON_PATH.write_text(json.dumps(payload, indent=2) + "\n")
+        print(f"wrote {JSON_PATH}")
+    return {"rows": rows, "json": payload}
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_lut_infer.json at the repo root")
+    a = ap.parse_args()
+    run(fast=a.fast, write_json=a.json)

@@ -10,6 +10,7 @@ summary row per module (name,seconds,status).
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 import traceback
@@ -24,6 +25,7 @@ MODULES = [
     ("table8", "benchmarks.table8_cost_model"),
     ("table9", "benchmarks.table9_runtime"),
     ("kernels", "benchmarks.kernels_bench"),
+    ("lut_infer", "benchmarks.lut_infer_bench"),
     ("roofline", "benchmarks.roofline_report"),
 ]
 
@@ -34,6 +36,9 @@ def main() -> None:
                     help="reduced step counts (CI mode)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of module names")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_lut_infer.json at the repo root "
+                         "(stable schema, tracked across PRs)")
     args = ap.parse_args()
 
     only = set(args.only.split(",")) if args.only else None
@@ -45,7 +50,11 @@ def main() -> None:
         try:
             mod = __import__(modpath, fromlist=["run", "main"])
             if hasattr(mod, "run"):
-                mod.run(fast=args.fast)
+                kw = {"fast": args.fast}
+                # thread --json to any benchmark whose run() takes it
+                if "write_json" in inspect.signature(mod.run).parameters:
+                    kw["write_json"] = args.json
+                mod.run(**kw)
             else:
                 mod.main()
             status = "ok"

@@ -2,7 +2,9 @@
 
 Reduced scale, same pipeline stages as the paper:
   connectivity search / LUT-DNN QAT training / truth-table synthesis
-  ('RTL generation') / cost-model evaluation ('synthesis & P&R').
+  ('RTL generation') / cost-model evaluation ('synthesis & P&R'),
+plus the deployment stage this repo adds on top of the paper: LUT-mode
+inference over the synthesised tables, per-layer vs fused engine.
 The claim reproduced: connectivity search does not dominate the
 end-to-end toolflow.
 """
@@ -11,13 +13,15 @@ from __future__ import annotations
 import time
 
 import jax
+import jax.numpy as jnp
 
-from benchmarks.common import dataset, print_table, train_eval
+from benchmarks.common import dataset, print_table, timed, train_eval
 from repro.configs import paper_models as PM
 from repro.core import cost_model as CM
 from repro.core import lut_synth as LS
 from repro.core import lutdnn as LD
 from repro.data.loader import batch_iterator
+from repro.kernels.lut_gather import ops as lg_ops
 
 
 def run(fast: bool = False):
@@ -48,6 +52,18 @@ def run(fast: bool = False):
     CM.model_cost(spec)
     rows.append(["cost model (synthesis & P&R)",
                  f"{time.perf_counter()-t0:.4f}"])
+
+    # deployment: LUT-mode inference over the synthesised tables
+    B = 1024
+    fq = spec.layer_specs()[0].in_quant
+    codes = jax.random.randint(jax.random.key(0), (B, spec.in_features),
+                               0, fq.levels).astype(jnp.int32)
+    per_layer = jax.jit(lambda c: lg_ops.lut_network(tables, c))
+    fused = lg_ops.make_network_fn(tables, fused=True, block_b=B)
+    rows.append([f"LUT inference per-layer (B={B})",
+                 f"{timed(per_layer, codes, iters=3):.4f}"])
+    rows.append([f"LUT inference fused (B={B})",
+                 f"{timed(fused, codes, iters=3):.4f}"])
 
     print_table(f"Table IX (reduced scale; acc={acc:.3f})",
                 ["task", "seconds"], rows)

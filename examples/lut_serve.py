@@ -1,13 +1,27 @@
-"""Batched LUT-mode inference serving — the deployment artefact.
+"""Microbatched LUT-mode serving — the deployment artefact.
 
-Loads (or trains) a synthesised LUT-DNN and serves batched requests
-through the lut_gather kernel path: pure integer compute, the TPU
-analogue of the paper's FPGA bitstream.  Reports per-batch latency,
-throughput, and the modeled FPGA deployment cost side-by-side.
+Trains and synthesises a LUT-DNN, then serves a simulated request
+stream through the FUSED lut_gather engine: the whole network's packed
+uint8 truth tables execute in a single pallas_call per microbatch
+(one HBM read of inputs, one write of outputs), the TPU analogue of the
+paper's FPGA bitstream.
 
-    PYTHONPATH=src python examples/lut_serve.py --batch 1024 --requests 20
+Serving loop mechanics:
+  * requests (single samples) arrive on a queue at --rate req/s;
+  * the microbatcher drains up to --microbatch requests, pads the tail
+    batch to a fixed shape so the engine never retraces;
+  * the jitted network fn is built once via ops.make_network_fn (input
+    buffers donated on TPU — the batcher rebuilds them every tick);
+  * per-request latency = queueing delay + kernel time.
+
+Reports p50/p95/p99 request latency, sustained throughput, accuracy,
+a fused-vs-per-layer comparison, and the modeled FPGA deployment cost.
+
+    PYTHONPATH=src python examples/lut_serve.py --microbatch 512 \
+        --requests 4096 --rate 200000
 """
 import argparse
+import collections
 import time
 
 import jax
@@ -23,50 +37,121 @@ from repro.data.synthetic import make_dataset
 from repro.kernels.lut_gather import ops as lg_ops
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--batch", type=int, default=1024)
-    ap.add_argument("--requests", type=int, default=20)
-    ap.add_argument("--train-steps", type=int, default=150)
-    args = ap.parse_args()
-
-    # train + synthesise (in a real deployment this is loaded from disk)
+def build_model(train_steps: int):
+    """Train + synthesise (a real deployment loads this from disk)."""
     data = train_test_split(make_dataset("jsc", n_samples=4000, seed=0))
     spec = PM.tiny("jsc", degree=1, fan_in=3, adder_width=2)
     init_state, step = LD.make_train_step(spec, lr=5e-3)
     state = init_state(jax.random.key(0))
     jstep = jax.jit(step)
     it = batch_iterator(data["train"], 256, seed=0)
-    for _ in range(args.train_steps):
+    for _ in range(train_steps):
         state, _ = jstep(state, next(it))
     tables = LS.synthesise(state["model"], spec)
-    print(f"serving {spec.name}: {spec.table_entries} table entries; "
+    return spec, tables, data
+
+
+def serve_loop(serve_fn, fq, data, n_requests: int, microbatch: int,
+               rate: float, seed: int = 0):
+    """Simulated open-loop arrivals, measured kernel time.
+
+    The request clock is simulated (exponential inter-arrival at
+    ``rate``); each microbatch's compute time is real wall time of the
+    jitted fused kernel.  Returns per-request latencies and accuracy.
+    """
+    rng = np.random.default_rng(seed)
+    n_test = data["test"]["x"].shape[0]
+    idx = rng.integers(0, n_test, n_requests)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, n_requests))
+
+    x_all = np.asarray(data["test"]["x"])[idx]
+    y_all = np.asarray(data["test"]["y"])[idx]
+    codes_all = np.asarray(fq.to_code(fq.clip(jnp.asarray(x_all))))
+
+    queue = collections.deque(range(n_requests))
+    latencies = np.zeros(n_requests)
+    correct = 0
+    clock = 0.0
+    batch_buf = np.zeros((microbatch, codes_all.shape[1]), np.int32)
+
+    while queue:
+        # wait until at least one pending request has arrived
+        clock = max(clock, arrivals[queue[0]])
+        take = []
+        while queue and len(take) < microbatch and \
+                arrivals[queue[0]] <= clock:
+            take.append(queue.popleft())
+        # fixed-shape microbatch: pad the tail with the first request
+        batch_buf[:len(take)] = codes_all[take]
+        batch_buf[len(take):] = codes_all[take[0]]
+
+        t0 = time.perf_counter()
+        out = serve_fn(jnp.asarray(batch_buf))
+        out.block_until_ready()
+        dt = time.perf_counter() - t0
+
+        clock += dt
+        latencies[take] = clock - arrivals[take]
+        pred = np.asarray(
+            jnp.argmax(LS.OUTPUT_QUANT.from_code(out[:len(take)]), -1))
+        correct += int((pred == y_all[take]).sum())
+
+    return latencies, correct / n_requests, clock
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--microbatch", type=int, default=512)
+    ap.add_argument("--requests", type=int, default=4096)
+    ap.add_argument("--rate", type=float, default=200_000.0,
+                    help="simulated request arrival rate (req/s)")
+    ap.add_argument("--train-steps", type=int, default=150)
+    ap.add_argument("--engine", choices=("fused", "per-layer"),
+                    default="fused")
+    args = ap.parse_args()
+
+    spec, tables, data = build_model(args.train_steps)
+    print(f"serving {spec.name}: {spec.table_entries} table entries, "
+          f"{LS.network_table_bytes(tables)} B packed "
+          f"(fits VMEM: {lg_ops.can_fuse(tables, args.microbatch)}); "
           f"modeled FPGA: {model_cost(spec)}")
 
     fq = spec.layer_specs()[0].in_quant
-    serve = jax.jit(lambda c: lg_ops.lut_network(tables, c))
+    serve_fn = lg_ops.make_network_fn(
+        tables, fused=(args.engine == "fused"),
+        block_b=args.microbatch, donate=True)
 
-    # batched request loop
-    rng = np.random.default_rng(0)
-    n_test = data["test"]["x"].shape[0]
-    lat, correct, total = [], 0, 0
-    for _ in range(args.requests):
-        idx = rng.integers(0, n_test, args.batch)
-        x = jnp.asarray(data["test"]["x"][idx])
-        codes = fq.to_code(fq.clip(x))
-        t0 = time.perf_counter()
-        out = serve(codes)
-        out.block_until_ready()
-        lat.append(time.perf_counter() - t0)
-        pred = np.asarray(jnp.argmax(LS.OUTPUT_QUANT.from_code(out), -1))
-        correct += int((pred == data["test"]["y"][idx]).sum())
-        total += args.batch
+    # warm the compile cache outside the measured loop
+    serve_fn(jnp.zeros((args.microbatch, spec.in_features), jnp.int32)
+             ).block_until_ready()
 
-    lat_ms = np.median(lat) * 1e3
-    print(f"batch={args.batch}: median latency {lat_ms:.2f} ms, "
-          f"throughput {args.batch / np.median(lat):,.0f} samples/s, "
-          f"accuracy {correct / total:.4f}")
-    print("(CPU interpret-mode numbers; TPU deploys the same kernel "
+    lat, acc, span = serve_loop(serve_fn, fq, data, args.requests,
+                                args.microbatch, args.rate)
+    p50, p95, p99 = np.percentile(lat * 1e3, [50, 95, 99])
+    print(f"engine={args.engine} microbatch={args.microbatch} "
+          f"rate={args.rate:,.0f}/s:")
+    print(f"  latency p50 {p50:.2f} ms / p95 {p95:.2f} ms / "
+          f"p99 {p99:.2f} ms")
+    print(f"  throughput {args.requests / span:,.0f} req/s, "
+          f"accuracy {acc:.4f}")
+
+    # fused-vs-per-layer on the same microbatch, steady state
+    codes = jnp.asarray(np.zeros((args.microbatch, spec.in_features),
+                                 np.int32))
+    for label, fn in [("fused", lg_ops.make_network_fn(
+                          tables, fused=True, block_b=args.microbatch)),
+                      ("per-layer", lg_ops.make_network_fn(
+                          tables, fused=False))]:
+        fn(codes).block_until_ready()
+        ts = []
+        for _ in range(5):
+            t0 = time.perf_counter()
+            fn(codes).block_until_ready()
+            ts.append(time.perf_counter() - t0)
+        ms = np.median(ts) * 1e3
+        print(f"  {label}: {ms:.2f} ms/microbatch "
+              f"({args.microbatch / np.median(ts):,.0f} samples/s)")
+    print("(CPU interpret-mode numbers; TPU deploys the same kernels "
           "with VMEM-resident tables — see kernels/lut_gather)")
 
 

@@ -27,11 +27,18 @@ from repro.core.quant import QuantSpec, bn_fold
 
 @dataclasses.dataclass
 class LayerTables:
-    """Synthesised artefacts for one layer."""
+    """Synthesised artefacts for one layer.
+
+    Tables are emitted in the *narrowest* dtype the output codes allow
+    (``table_dtype``): uint8 whenever the codes fit in 8 bits — every
+    paper config — which quarters the VMEM footprint vs int32.  The
+    output layer's 16-bit logit codes keep int32.  ``pack=False`` at
+    synthesis time forces the legacy int32 layout everywhere.
+    """
 
     conn: jnp.ndarray        # (n_out, A, F) int32 gather indices
-    sub_table: jnp.ndarray   # (n_out, A, 2**(b_in*F)) int32 output codes
-    add_table: jnp.ndarray   # (n_out, 2**(A*(b_in+1))) int32, or (n_out, 0)
+    sub_table: jnp.ndarray   # (n_out, A, 2**(b_in*F)) output codes
+    add_table: jnp.ndarray   # (n_out, 2**(A*(b_in+1))), or (n_out, 0)
     in_bits: int
     sub_bits: int            # bits of sub-table output codes
     out_bits: int
@@ -40,6 +47,18 @@ class LayerTables:
     is_output: bool
     out_quant: QuantSpec
     sub_quant: QuantSpec
+    table_dtype: jnp.dtype = jnp.int32   # dtype of sub_table (packed: uint8)
+
+    @property
+    def table_bytes(self) -> int:
+        """Bytes of truth-table payload (sub + adder tables)."""
+        return int(self.sub_table.size * self.sub_table.dtype.itemsize
+                   + self.add_table.size * self.add_table.dtype.itemsize)
+
+
+def table_dtype_for(bits: int) -> jnp.dtype:
+    """Narrowest supported dtype for `bits`-bit unsigned output codes."""
+    return jnp.uint8 if bits <= 8 else jnp.int32
 
 
 def _enum_codes(n_slots: int, bits: int) -> np.ndarray:
@@ -54,8 +73,8 @@ def _enum_codes(n_slots: int, bits: int) -> np.ndarray:
     return np.stack(cols, axis=1).astype(np.int32)
 
 
-def synthesise_layer(params: dict, conn: jnp.ndarray, spec: L.LayerSpec
-                     ) -> LayerTables:
+def synthesise_layer(params: dict, conn: jnp.ndarray, spec: L.LayerSpec,
+                     pack: bool = True) -> LayerTables:
     b_in = spec.in_quant.bits
     combos = jnp.asarray(_enum_codes(spec.fan_in, b_in))        # (K, F)
     vals = spec.in_quant.from_code(combos)                      # (K, F)
@@ -70,7 +89,13 @@ def synthesise_layer(params: dict, conn: jnp.ndarray, spec: L.LayerSpec
     sq = spec.sub_quant
     oq = spec.out_quant
 
+    # the output layer emits wide 16-bit logit codes (see _logit_codes);
+    # hidden layers emit oq.bits-wide codes
+    out_code_bits = 16 if spec.is_output else oq.bits
+
     if spec.adder_width > 1:
+        sub_dt = table_dtype_for(sq.bits) if pack else jnp.int32
+        add_dt = table_dtype_for(out_code_bits) if pack else jnp.int32
         # sub-neuron LUT emits (beta+1)-bit codes of the quantized pre-sum
         sub_codes = sq.to_code(pre)                             # (K, n_out, A)
         sub_table = jnp.transpose(sub_codes, (1, 2, 0))         # (n_out, A, K)
@@ -83,24 +108,25 @@ def synthesise_layer(params: dict, conn: jnp.ndarray, spec: L.LayerSpec
             out_codes = _logit_codes(z, oq)
         else:
             out_codes = oq.to_code(oq.clip(jax.nn.relu(z)))
-        add_table = out_codes.T.astype(jnp.int32)               # (n_out, Ka)
+        add_table = out_codes.T.astype(add_dt)                  # (n_out, Ka)
         sub_bits = sq.bits
     else:
+        sub_dt = table_dtype_for(out_code_bits) if pack else jnp.int32
         z = pre[..., 0] * bn.scale[None, :] + bn.offset[None, :]  # (K, n_out)
         if spec.is_output:
             codes = _logit_codes(z, oq)
         else:
             codes = oq.to_code(oq.clip(jax.nn.relu(z)))
-        sub_table = codes.T[:, None, :].astype(jnp.int32)       # (n_out, 1, K)
-        add_table = jnp.zeros((spec.n_out, 0), jnp.int32)
+        sub_table = codes.T[:, None, :]                         # (n_out, 1, K)
+        add_table = jnp.zeros((spec.n_out, 0), sub_dt)
         sub_bits = oq.bits
 
     return LayerTables(
-        conn=conn, sub_table=sub_table.astype(jnp.int32),
+        conn=conn, sub_table=sub_table.astype(sub_dt),
         add_table=add_table, in_bits=b_in, sub_bits=sub_bits,
         out_bits=oq.bits, fan_in=spec.fan_in,
         adder_width=spec.adder_width, is_output=spec.is_output,
-        out_quant=oq, sub_quant=sq)
+        out_quant=oq, sub_quant=sq, table_dtype=jnp.dtype(sub_dt))
 
 
 def _logit_codes(z: jnp.ndarray, oq: QuantSpec) -> jnp.ndarray:
@@ -114,11 +140,19 @@ def _logit_codes(z: jnp.ndarray, oq: QuantSpec) -> jnp.ndarray:
 OUTPUT_QUANT = QuantSpec(bits=16, low=-8.0, high=8.0)
 
 
-def synthesise(model: dict, spec: ModelSpec) -> List[LayerTables]:
+def synthesise(model: dict, spec: ModelSpec,
+               pack: bool = True) -> List[LayerTables]:
     return [
-        synthesise_layer(p, c, s)
+        synthesise_layer(p, c, s, pack=pack)
         for p, c, s in zip(model["layers"], model["conn"], spec.layer_specs())
     ]
+
+
+def network_table_bytes(tables: List[LayerTables]) -> int:
+    """Total truth-table payload of a synthesised network (conn included
+    — it rides along into VMEM with the tables)."""
+    return sum(t.table_bytes + t.conn.size * t.conn.dtype.itemsize
+               for t in tables)
 
 
 # --------------------------------------------------------------------------
@@ -140,8 +174,8 @@ def lut_layer_forward(tables: LayerTables, codes: jnp.ndarray) -> jnp.ndarray:
     if tables.adder_width > 1:
         aidx = pack_index(sub, tables.sub_bits)      # (B, n_out)
         return _gather_tables(tables.add_table[:, None, :],
-                              aidx[..., None])[..., 0]
-    return sub[..., 0]
+                              aidx[..., None])[..., 0].astype(jnp.int32)
+    return sub[..., 0].astype(jnp.int32)
 
 
 def _gather_tables(table: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel for LUT-mode inference (truth-table gather).
+"""Pallas TPU kernels for LUT-mode inference (truth-table gather).
 
 This is the TPU re-think of the paper's inference substrate.  On the
 FPGA, each neuron's transfer function is *burned into* 6-LUT fabric:
@@ -11,76 +11,181 @@ HBM/VMEM, and inference becomes integer gathers:
   3. per-neuron table lookup                              [the LUT]
   4. A > 1: pack the A sub-codes, look up the adder table [PolyLUT-Add]
 
-Blocking: grid over (batch tiles, neuron tiles).  A (TB, n_in) code
-block is re-used by every neuron tile (it stays in VMEM across the
-inner grid dim), and each neuron tile brings its own (TN, A, K) table
-slab.  K = 2**(b_in * F) is the whole point of the paper: PolyLUT-Add
-keeps K small (A * 2**(b*F) + 2**(A(b+1)) instead of 2**(b*F*A)), which
-is precisely what makes the per-tile table slab fit VMEM:
+Two execution strategies share one in-kernel lookup routine
+(``_layer_compute``), which indexes each layer's table slab through a
+*flat* ``(TN*A*K,)`` view — the packed address is offset by the
+(neuron, sub-neuron) slab base, so no ``(TB, TN, A, K)`` broadcast of
+the tables is ever materialized (the seed kernel did, multiplying VMEM
+pressure by the batch tile; ``broadcast_tables=True`` keeps that layout
+around for benchmarking):
 
-    beta=2, F=6, A=2, TN=32: 32*2*4096*4 B = 1.0 MB   (fits)
-    equivalent fan-in 12 without Add: 32 * 2**24 * 4 = 2 GB   (cannot)
+* ``lut_gather_pallas`` — one layer per ``pallas_call``, grid over
+  (batch tiles, neuron tiles).  Activation codes round-trip through HBM
+  between layers.
+* ``lut_network_fused_pallas`` — the whole synthesised network in a
+  SINGLE ``pallas_call``.  Grid over batch tiles only; every layer's
+  conn/sub/add slabs are kernel inputs resident in VMEM; inter-layer
+  activation codes live in a ``(TB, max_width)`` VMEM scratch buffer.
+  A forward pass therefore does ONE HBM read of the input codes and
+  ONE HBM write of the output codes.
+
+K = 2**(b_in * F) is the whole point of the paper: PolyLUT-Add keeps K
+small (A * 2**(b*F) + 2**(A(b+1)) instead of 2**(b*F*A)), which is
+precisely what lets the *entire network's* tables sit in VMEM at once.
+With packed uint8 tables (core/lut_synth emits uint8 whenever output
+codes fit 8 bits — every paper config; the seed stored int32):
+
+    beta=2, F=6, A=2, width 32 per layer:
+        sub tables  32 * 2 * 4096 * 1 B = 256 KB / layer   (int32: 1 MB)
+        add tables  32 * 2**6   * 1 B   =   2 KB / layer
+        conn        32 * 2 * 6 * 4 B    = 1.5 KB / layer
+    -> a 4-layer network is ~1 MB of VMEM, comfortably inside the
+       ~16 MB/core budget next to a (256, width) int32 activation
+       scratch; the equivalent fan-in-12 flat LUT would need
+       32 * 2**24 B = 512 MB *per layer* and cannot fit.
 
 So the architectural contribution of the paper maps 1:1 onto the TPU
-memory hierarchy: the Add-structure is what keeps truth tables
-VMEM-resident.  Steps 1 and 3 use vector gathers (VPU); step 2 is
-shift/add; there is no MXU work — LUT inference is gather-bound on TPU,
-and the roofline comparison LUT-vs-matmul inference is reported by
+memory hierarchy: the Add-structure + uint8 packing is what keeps the
+whole network VMEM-resident, and fusion is what converts that residency
+into bandwidth savings.  Steps 1 and 3 are vector gathers (VPU); step 2
+is shift/add; there is no MXU work — LUT inference is gather-bound on
+TPU, and the roofline comparison LUT-vs-matmul inference is reported by
 benchmarks/table8_cost_model.py.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Tuple
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# packed table addresses above this width lose f32-matmul exactness
+# headroom (and the tables could never fit VMEM anyway)
+MATMUL_ROUTE_MAX_BITS = 20
+
+
+def routing_matrix(conn, in_bits: int, n_in: int) -> jnp.ndarray:
+    """Fold routing + bit-packing into one matrix.
+
+    W[i, n*A + a] = sum_f [conn[n, a, f] == i] * 2**(in_bits * f), so
+    the packed table address of every (neuron, sub-neuron) is a single
+    product ``codes @ W`` — the gather of F fan-in codes and the
+    shift/add collapse into one (TB, n_in) x (n_in, TN*A) matmul that
+    runs on the MXU (BLAS on CPU).  Exact in float32 while the packed
+    address stays under 2**24 (guarded by MATMUL_ROUTE_MAX_BITS).
+    Repeated fan-in features sum their place values, which matches the
+    shift/add packing exactly.
+    """
+    conn_np = np.asarray(conn)
+    n_out, A, F = conn_np.shape
+    w = np.zeros((n_in, n_out * A), np.float32)
+    flat = conn_np.reshape(n_out * A, F)
+    cols = np.arange(n_out * A)
+    for f in range(F):
+        np.add.at(w, (flat[:, f], cols), float(1 << (in_bits * f)))
+    return jnp.asarray(w)
+
+
+def _route_pack(codes, conn, in_bits: int):
+    """Gather-form routing: fan-in gather + shift/add pack.
+    codes: (TB, n_in) int32, conn: (TN, A, F) -> (TB, TN, A) int32."""
+    TB = codes.shape[0]
+    TN, A, F = conn.shape
+    gathered = jnp.take(codes, conn.reshape(-1), axis=1).reshape(
+        TB, TN, A, F)
+    shifts = (in_bits * jax.lax.broadcasted_iota(
+        jnp.int32, (1, 1, 1, F), 3))
+    return jnp.sum(gathered.astype(jnp.int32) << shifts, axis=-1)
+
+
+def _layer_compute(codes, route, sub_t, add_t, *, in_bits: int,
+                   sub_bits: int, use_adder: bool,
+                   matmul_route: bool = False,
+                   broadcast_tables: bool = False):
+    """One LUT layer on in-VMEM values.
+
+    codes: (TB, n_in) int32; route: (TN, A, F) int32 conn, or the
+    (n_in, TN*A) float32 routing matrix when ``matmul_route``;
+    sub_t: (TN, A, K) uint8|int32; add_t: (TN, Ka) uint8|int32.
+    Returns (TB, TN) int32 output codes.
+    """
+    TB = codes.shape[0]
+    TN, A, K = sub_t.shape
+
+    # 1+2) route + pack the table address (slot 0 = low bits)
+    if matmul_route:
+        # HIGHEST precision: default MXU precision truncates f32 to
+        # bf16, which mangles routing weights like 2**0 + 2**10 that
+        # arise when a fan-in feature repeats
+        idx = jnp.dot(codes.astype(jnp.float32), route,
+                      preferred_element_type=jnp.float32,
+                      precision=jax.lax.Precision.HIGHEST
+                      ).astype(jnp.int32).reshape(TB, TN, A)
+    else:
+        idx = _route_pack(codes, route, in_bits)              # (TB,TN,A)
+
+    # 3) the LUT: per-(neuron, sub-neuron) table gather
+    if broadcast_tables:
+        # seed layout: materialize the (TB, TN, A, K) table broadcast
+        sub = jnp.take_along_axis(
+            jnp.broadcast_to(sub_t[None], (TB, TN, A, K)),
+            idx[..., None], axis=-1)[..., 0].astype(jnp.int32)
+    else:
+        # flat-index gather: offset the packed address by the slab base
+        # so the (TN, A, K) slab is indexed as one 1-D array
+        base = (jax.lax.broadcasted_iota(jnp.int32, (1, TN, A), 1) * (A * K)
+                + jax.lax.broadcasted_iota(jnp.int32, (1, TN, A), 2) * K)
+        sub = jnp.take(sub_t.reshape(-1), (base + idx).reshape(-1)
+                       ).reshape(TB, TN, A).astype(jnp.int32)
+
+    if not use_adder:
+        return sub[..., 0]
+
+    # 4) PolyLUT-Add: pack the A sub-codes, look up the adder table
+    Ka = add_t.shape[-1]
+    ashift = (sub_bits * jax.lax.broadcasted_iota(jnp.int32, (1, 1, A), 2))
+    aidx = jnp.sum(sub << ashift, axis=-1)                    # (TB, TN)
+    if broadcast_tables:
+        out = jnp.take_along_axis(
+            jnp.broadcast_to(add_t[None], (TB, TN, Ka)),
+            aidx[..., None], axis=-1)[..., 0]
+    else:
+        abase = jax.lax.broadcasted_iota(jnp.int32, (1, TN), 1) * Ka
+        out = jnp.take(add_t.reshape(-1), (abase + aidx).reshape(-1)
+                       ).reshape(TB, TN)
+    return out.astype(jnp.int32)
 
 
 def _lut_kernel(codes_ref, conn_ref, sub_ref, add_ref, out_ref,
-                *, in_bits: int, sub_bits: int, use_adder: bool):
-    codes = codes_ref[...]                     # (TB, n_in) int32
-    conn = conn_ref[...]                       # (TN, A, F) int32
-    sub_t = sub_ref[...]                       # (TN, A, K)
-    TB = codes.shape[0]
-    TN, A, F = conn.shape
-
-    # 1) route: gather fan-in codes -> (TB, TN, A, F)
-    gathered = jnp.take(codes, conn.reshape(-1), axis=1).reshape(
-        TB, TN, A, F)
-    # 2) pack the table address (slot 0 = low bits)
-    shifts = (in_bits * jax.lax.broadcasted_iota(
-        jnp.int32, (1, 1, 1, F), 3))
-    idx = jnp.sum(gathered << shifts, axis=-1)            # (TB, TN, A)
-    # 3) the LUT: per-(neuron, sub-neuron) table gather
-    sub = jnp.take_along_axis(
-        jnp.broadcast_to(sub_t[None], (TB, TN, A, sub_t.shape[-1])),
-        idx[..., None], axis=-1)[..., 0]                  # (TB, TN, A)
-    if use_adder:
-        add_t = add_ref[...]                              # (TN, Ka)
-        ashift = (sub_bits * jax.lax.broadcasted_iota(
-            jnp.int32, (1, 1, A), 2))
-        aidx = jnp.sum(sub << ashift, axis=-1)            # (TB, TN)
-        out = jnp.take_along_axis(
-            jnp.broadcast_to(add_t[None], (TB,) + add_t.shape),
-            aidx[..., None], axis=-1)[..., 0]
-    else:
-        out = sub[..., 0]
-    out_ref[...] = out.astype(jnp.int32)
+                *, in_bits: int, sub_bits: int, use_adder: bool,
+                broadcast_tables: bool):
+    out_ref[...] = _layer_compute(
+        codes_ref[...].astype(jnp.int32), conn_ref[...], sub_ref[...],
+        add_ref[...], in_bits=in_bits, sub_bits=sub_bits,
+        use_adder=use_adder, broadcast_tables=broadcast_tables)
 
 
 @functools.partial(jax.jit, static_argnames=("in_bits", "sub_bits",
                                              "block_b", "block_n",
-                                             "interpret"))
+                                             "interpret",
+                                             "broadcast_tables"))
 def lut_gather_pallas(codes: jnp.ndarray, conn: jnp.ndarray,
                       sub_table: jnp.ndarray, add_table: jnp.ndarray,
                       in_bits: int, sub_bits: int,
                       block_b: int = 256, block_n: int = 32,
-                      interpret: bool = False) -> jnp.ndarray:
+                      interpret: bool = False,
+                      broadcast_tables: bool = False) -> jnp.ndarray:
     """codes: (B, n_in) int32 activation codes on this layer's grid;
-    conn: (n_out, A, F); sub_table: (n_out, A, K); add_table: (n_out, Ka)
-    (Ka == 0 disables the adder path).  Returns (B, n_out) int32."""
+    conn: (n_out, A, F); sub_table: (n_out, A, K) uint8 or int32;
+    add_table: (n_out, Ka), Ka == 0 disables the adder path.
+    Returns (B, n_out) int32.  ``broadcast_tables=True`` re-enables the
+    seed kernel's per-batch table broadcast (benchmark baseline only).
+    """
     B, n_in = codes.shape
     n_out, A, F = conn.shape
     use_adder = add_table.shape[-1] > 0
@@ -97,11 +202,12 @@ def lut_gather_pallas(codes: jnp.ndarray, conn: jnp.ndarray,
         if use_adder:
             add_table = jnp.pad(add_table, ((0, pad_n), (0, 0)))
     if not use_adder:      # give the kernel a non-empty ref to bind
-        add_table = jnp.zeros((n_out + pad_n, 1), jnp.int32)
+        add_table = jnp.zeros((n_out + pad_n, 1), sub_table.dtype)
     Bp, Np = B + pad_b, n_out + pad_n
 
     kernel = functools.partial(_lut_kernel, in_bits=in_bits,
-                               sub_bits=sub_bits, use_adder=use_adder)
+                               sub_bits=sub_bits, use_adder=use_adder,
+                               broadcast_tables=broadcast_tables)
     out = pl.pallas_call(
         kernel,
         grid=(Bp // TB, Np // TN),
@@ -117,3 +223,83 @@ def lut_gather_pallas(codes: jnp.ndarray, conn: jnp.ndarray,
         interpret=interpret,
     )(codes, conn, sub_table, add_table)
     return out[:B, :n_out]
+
+
+# --------------------------------------------------------------------------
+# Fused multi-layer engine: the whole network in one pallas_call
+# --------------------------------------------------------------------------
+
+def _fused_kernel(*refs, metas: Tuple[Tuple[int, int, bool, int, int,
+                                            bool], ...]):
+    """refs = [codes, (route, sub, add) * L, out, scratch].
+
+    metas[l] = (in_bits, sub_bits, use_adder, n_in, n_out, matmul_route)
+    — static.  route is the (n_in, n_out*A) float32 routing matrix when
+    matmul_route else the (n_out, A, F) int32 conn.  Inter-layer
+    activation codes are staged through the (TB, max_width) int32 VMEM
+    scratch; only the input read and output write touch HBM.
+    """
+    n_layers = len(metas)
+    codes_ref = refs[0]
+    out_ref = refs[1 + 3 * n_layers]
+    scratch = refs[2 + 3 * n_layers]
+
+    n_in0 = metas[0][3]
+    scratch[:, :n_in0] = codes_ref[...].astype(jnp.int32)
+    for l, (in_bits, sub_bits, use_adder, n_in, n_out, mm) in enumerate(metas):
+        out = _layer_compute(
+            scratch[:, :n_in], refs[1 + 3 * l][...], refs[2 + 3 * l][...],
+            refs[3 + 3 * l][...], in_bits=in_bits, sub_bits=sub_bits,
+            use_adder=use_adder, matmul_route=mm)
+        if l == n_layers - 1:
+            out_ref[...] = out
+        else:
+            scratch[:, :n_out] = out
+
+
+@functools.partial(jax.jit, static_argnames=("metas", "block_b",
+                                             "interpret"))
+def lut_network_fused_pallas(codes: jnp.ndarray,
+                             flat_tables: Tuple[jnp.ndarray, ...],
+                             metas: Tuple[Tuple[int, int, bool, int, int,
+                                                bool], ...],
+                             block_b: int = 256,
+                             interpret: bool = False) -> jnp.ndarray:
+    """Run every layer of a synthesised LUT network in one kernel.
+
+    codes: (B, n_in) int32.  flat_tables: (route_l, sub_l, add_l) for
+    each layer, concatenated — route_l is the matmul routing matrix or
+    the conn array, per metas[l] = (in_bits, sub_bits, use_adder, n_in,
+    n_out, matmul_route).  Returns (B, n_out_last) int32.  Empty adder
+    tables must be pre-replaced by a 1-entry dummy
+    (ops.lut_network_fused does this).
+    """
+    B, n_in = codes.shape
+    n_layers = len(metas)
+    assert len(flat_tables) == 3 * n_layers
+    n_out_last = metas[-1][4]
+    max_width = max([n_in] + [m[4] for m in metas])
+
+    TB = min(block_b, B)
+    pad_b = (-B) % TB
+    if pad_b:
+        codes = jnp.pad(codes, ((0, pad_b), (0, 0)))
+    Bp = B + pad_b
+
+    # batch tile moves through the grid; every table slab is the whole
+    # array, VMEM-resident across all grid steps
+    in_specs = [pl.BlockSpec((TB, n_in), lambda i: (i, 0))]
+    for t in flat_tables:
+        in_specs.append(pl.BlockSpec(t.shape, lambda i, nd=t.ndim: (0,) * nd))
+
+    kernel = functools.partial(_fused_kernel, metas=metas)
+    out = pl.pallas_call(
+        kernel,
+        grid=(Bp // TB,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((TB, n_out_last), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, n_out_last), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((TB, max_width), jnp.int32)],
+        interpret=interpret,
+    )(codes, *flat_tables)
+    return out[:B]

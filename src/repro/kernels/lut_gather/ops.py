@@ -1,43 +1,159 @@
 """Public entry point for LUT-mode inference.
 
 ``lut_layer`` runs one synthesised layer; ``lut_network`` runs a whole
-synthesised LUT-DNN (list of core/lut_synth.LayerTables) and matches
+synthesised LUT-DNN (list of core/lut_synth.LayerTables) layer by
+layer, and ``lut_network_fused`` runs it in a SINGLE pallas_call —
+every table slab VMEM-resident, inter-layer codes in VMEM scratch, one
+HBM read + one HBM write per forward pass.  All paths match
 core/lut_synth.lut_forward bit-exactly (tested).
+
+Backend detection is hoisted to import-level caching and the Pallas
+wrappers are jitted with static config, so repeated ``lut_layer`` /
+``lut_network`` calls on stable shapes never retrace.  For serving,
+``make_network_fn`` closes over the tables once and returns a single
+jitted callable (optionally with donated input buffers).
 """
 from __future__ import annotations
 
-from typing import List, Optional
+import functools
+from typing import Callable, List, Optional
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.lut_gather.lut_gather import lut_gather_pallas
+from repro.kernels.lut_gather.lut_gather import (MATMUL_ROUTE_MAX_BITS,
+                                                 lut_gather_pallas,
+                                                 lut_network_fused_pallas,
+                                                 routing_matrix)
 from repro.kernels.lut_gather import ref
 
+# VMEM a fused network may claim for tables + activation scratch before
+# we refuse to fuse (per-core budget is ~16 MB; leave headroom for the
+# batch tile, padding, and the compiler)
+FUSED_VMEM_BUDGET_BYTES = 12 * 2 ** 20
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+
+@functools.lru_cache(maxsize=None)
+def _backend() -> str:
+    return jax.default_backend()
+
+
+def _default_interpret(force_interpret: Optional[bool]) -> bool:
+    return (_backend() != "tpu") if force_interpret is None else force_interpret
 
 
 def lut_layer(codes: jnp.ndarray, conn: jnp.ndarray,
               sub_table: jnp.ndarray, add_table: jnp.ndarray,
               in_bits: int, sub_bits: int,
-              force_interpret: Optional[bool] = None) -> jnp.ndarray:
-    interpret = (not _on_tpu()) if force_interpret is None else force_interpret
+              force_interpret: Optional[bool] = None,
+              broadcast_tables: bool = False) -> jnp.ndarray:
     return lut_gather_pallas(codes, conn, sub_table, add_table,
                              in_bits=in_bits, sub_bits=sub_bits,
-                             interpret=interpret)
+                             interpret=_default_interpret(force_interpret),
+                             broadcast_tables=broadcast_tables)
 
 
 def lut_network(tables: List, codes: jnp.ndarray,
-                force_interpret: Optional[bool] = None) -> jnp.ndarray:
-    """tables: List[core.lut_synth.LayerTables]; codes: (B, n_in) int32.
-    Returns the final layer's int32 output codes."""
+                force_interpret: Optional[bool] = None,
+                broadcast_tables: bool = False) -> jnp.ndarray:
+    """Per-layer path: one pallas_call per layer, codes round-trip
+    through HBM between layers.  tables: List[LayerTables]."""
     for t in tables:
         codes = lut_layer(codes, t.conn, t.sub_table, t.add_table,
                           t.in_bits, t.sub_bits,
-                          force_interpret=force_interpret)
+                          force_interpret=force_interpret,
+                          broadcast_tables=broadcast_tables)
     return codes
+
+
+def fused_vmem_bytes(tables: List, block_b: int = 1024,
+                     n_in0: Optional[int] = None) -> int:
+    """Estimated VMEM claim of the fused kernel: all table slabs and
+    float32 routing matrices plus the int32 activation scratch and
+    in/out batch tiles.  Pass ``n_in0`` (the network's input width)
+    when known — without it the first layer's width is inferred from
+    the highest conn index, which under-counts if the connectivity
+    never touches the top input features."""
+    slab = 0
+    n_in = n_in0
+    for t in tables:
+        n_out, A, _ = t.conn.shape
+        if n_in is None:  # first layer: input width from the conn indices
+            try:
+                n_in = int(np.asarray(t.conn).max()) + 1
+            except Exception:  # traced conn — conn-size lower bound
+                n_in = t.conn.shape[2]
+        slab += 4 * n_in * n_out * A + t.table_bytes
+        n_in = n_out
+    widths = [t.conn.shape[0] for t in tables]
+    max_w = max(widths)
+    return slab + block_b * 4 * (max_w * 2 + widths[-1])
+
+
+def can_fuse(tables: List, block_b: int = 1024,
+             n_in0: Optional[int] = None) -> bool:
+    return fused_vmem_bytes(tables, block_b, n_in0) <= \
+        FUSED_VMEM_BUDGET_BYTES
+
+
+def lut_network_fused(tables: List, codes: jnp.ndarray,
+                      block_b: int = 1024,
+                      force_interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Fused path: the whole network in one pallas_call.  Requires the
+    table slabs to fit the VMEM budget (see ``can_fuse``).
+
+    Routing uses the matmul formulation (codes @ routing_matrix) per
+    layer whenever the packed address width allows it; the routing
+    matrices are derived from conn at trace time, so wrapping this in
+    ``jax.jit`` (or using ``make_network_fn``) builds them exactly once.
+    """
+    flat, metas = [], []
+    n_in = codes.shape[1]
+    for t in tables:
+        n_out, _, fan_in = t.conn.shape
+        use_adder = t.add_table.shape[-1] > 0
+        add = (t.add_table if use_adder
+               else jnp.zeros((n_out, 1), t.sub_table.dtype))
+        mm = (t.in_bits * fan_in <= MATMUL_ROUTE_MAX_BITS
+              and not isinstance(t.conn, jax.core.Tracer))
+        route = routing_matrix(t.conn, t.in_bits, n_in) if mm else t.conn
+        flat.extend([route, t.sub_table, add])
+        metas.append((t.in_bits, t.sub_bits, use_adder, n_in, n_out, mm))
+        n_in = n_out
+    return lut_network_fused_pallas(
+        codes, tuple(flat), tuple(metas), block_b=block_b,
+        interpret=_default_interpret(force_interpret))
+
+
+def make_network_fn(tables: List, fused: Optional[bool] = None,
+                    block_b: int = 1024,
+                    force_interpret: Optional[bool] = None,
+                    donate: bool = False,
+                    n_in0: Optional[int] = None) -> Callable:
+    """Close over a synthesised network once and return one jitted
+    ``fn(codes) -> out_codes`` for serving.  ``fused=None`` picks the
+    fused engine whenever the tables fit VMEM — pass ``n_in0`` (the
+    network input width) for an exact first-layer routing-matrix
+    estimate in that decision.  ``donate=True`` donates the input codes
+    buffer (the serving loop overwrites it anyway); donation is a no-op
+    warning on CPU, so it is only applied on TPU.
+    """
+    if fused is None:
+        fused = can_fuse(tables, block_b, n_in0)
+
+    if fused:
+        def fn(codes):
+            return lut_network_fused(tables, codes, block_b=block_b,
+                                     force_interpret=force_interpret)
+    else:
+        def fn(codes):
+            return lut_network(tables, codes,
+                               force_interpret=force_interpret)
+
+    donate_argnums = (0,) if (donate and _backend() == "tpu") else ()
+    return jax.jit(fn, donate_argnums=donate_argnums)
 
 
 lut_layer_reference = ref.lut_layer

@@ -37,9 +37,9 @@ def lut_layer(codes: jnp.ndarray, conn: jnp.ndarray, sub_table: jnp.ndarray,
         jnp.broadcast_to(sub_table[None], (B,) + sub_table.shape),
         idx[..., None], axis=-1)[..., 0]              # (B, n_out, A)
     if add_table.shape[-1] == 0:
-        return sub[..., 0]
+        return sub[..., 0].astype(jnp.int32)
     aidx = pack_index(sub, sub_bits)                  # (B, n_out)
     out = jnp.take_along_axis(
         jnp.broadcast_to(add_table[None], (B,) + add_table.shape),
         aidx[..., None], axis=-1)[..., 0]
-    return out
+    return out.astype(jnp.int32)

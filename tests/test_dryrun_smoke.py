@@ -18,6 +18,7 @@ def _run(args, timeout=560):
         cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch,shape", [
     ("qwen2.5-3b", "train_4k"),
     ("granite-moe-1b-a400m", "decode_32k"),
@@ -38,6 +39,7 @@ def test_dryrun_cell_smoke(tmp_path, arch, shape):
     assert min(rf["compute_s"], rf["memory_s"], rf["collective_s"]) >= 0
 
 
+@pytest.mark.slow
 def test_dryrun_multipod_mesh_smoke(tmp_path):
     """The `pod` axis shards: a 3-axis mesh compiles the same cell."""
     out = str(tmp_path / "cell.json")

@@ -1,0 +1,171 @@
+"""Bit-exactness of the fused LUT engine and packed uint8 tables.
+
+Contract: for any synthesised network, the fused single-kernel path and
+the per-layer Pallas path — with packed (uint8) or legacy (int32)
+tables, matmul or gather routing — all agree EXACTLY with the
+kernels/lut_gather/ref.py jnp oracle chained layer by layer.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lut_synth as LS
+from repro.core import lutdnn as LD
+from repro.kernels.lut_gather import ops as lg_ops, ref as lg_ref
+from repro.kernels.lut_gather.lut_gather import routing_matrix
+
+
+def _ref_chain(tables, codes):
+    for t in tables:
+        codes = lg_ref.lut_layer(codes, t.conn, t.sub_table, t.add_table,
+                                 t.in_bits, t.sub_bits)
+    return codes
+
+
+def _synth(spec, seed=0, pack=True):
+    model = LD.init_model(jax.random.key(seed), spec)
+    return LS.synthesise(model, spec, pack=pack)
+
+
+def _codes(spec, B, seed=9):
+    return jax.random.randint(
+        jax.random.key(seed), (B, spec.in_features), 0,
+        2 ** spec.layer_specs()[0].in_quant.bits).astype(jnp.int32)
+
+
+NETS = [
+    # (name, spec kwargs, batch) — ragged batch/neuron sizes on purpose
+    ("A1-no-adder", dict(in_features=16, widths=(12, 5), bits=2,
+                         fan_in=3, degree=1, adder_width=1), 40),
+    ("A2-adder", dict(in_features=16, widths=(12, 7, 5), bits=2,
+                      fan_in=3, degree=2, adder_width=2), 41),
+    ("A3-adder", dict(in_features=10, widths=(33, 5), bits=2,
+                      fan_in=2, degree=1, adder_width=3), 7),
+    ("deep", dict(in_features=16, widths=(40, 24, 16, 5), bits=2,
+                  fan_in=3, degree=1, adder_width=2), 257),
+    ("b3-wideK", dict(in_features=12, widths=(9, 5), bits=3,
+                      fan_in=3, degree=1, adder_width=2), 33),
+]
+
+
+@pytest.mark.parametrize("name,kw,B", NETS, ids=[n[0] for n in NETS])
+@pytest.mark.parametrize("pack", [True, False], ids=["uint8", "int32"])
+def test_fused_matches_ref_chain(name, kw, B, pack):
+    spec = LD.ModelSpec(name=name, **kw)
+    tables = _synth(spec, pack=pack)
+    if pack:
+        # hidden layers pack to uint8; the output layer's logit-code
+        # table (sub when A=1, add when A>1) stays int32
+        assert all(t.sub_table.dtype == jnp.uint8
+                   for t in tables if not t.is_output)
+        out = tables[-1]
+        wide = out.sub_table if out.adder_width == 1 else out.add_table
+        assert wide.dtype == jnp.int32
+        assert all(t.table_dtype == t.sub_table.dtype for t in tables)
+    else:
+        assert all(t.sub_table.dtype == jnp.int32 for t in tables)
+    codes = _codes(spec, B)
+    want = _ref_chain(tables, codes)
+    got = lg_ops.lut_network_fused(tables, codes)
+    assert got.dtype == jnp.int32
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("name,kw,B", NETS, ids=[n[0] for n in NETS])
+def test_per_layer_packed_matches_ref_chain(name, kw, B):
+    spec = LD.ModelSpec(name=name, **kw)
+    tables = _synth(spec, pack=True)
+    codes = _codes(spec, B)
+    want = _ref_chain(tables, codes)
+    got = lg_ops.lut_network(tables, codes)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_packed_and_int32_tables_agree():
+    """pack=True only narrows storage — identical codes, 4x smaller."""
+    spec = LD.ModelSpec(name="t", in_features=16, widths=(12, 7, 5),
+                        bits=2, fan_in=3, degree=2, adder_width=2)
+    model = LD.init_model(jax.random.key(1), spec)
+    packed = LS.synthesise(model, spec, pack=True)
+    legacy = LS.synthesise(model, spec, pack=False)
+    for tp, ti in zip(packed, legacy):
+        assert np.array_equal(np.asarray(tp.sub_table, dtype=np.int64),
+                              np.asarray(ti.sub_table, dtype=np.int64))
+        assert np.array_equal(np.asarray(tp.add_table, dtype=np.int64),
+                              np.asarray(ti.add_table, dtype=np.int64))
+    assert (LS.network_table_bytes(packed)
+            < LS.network_table_bytes(legacy))
+    codes = _codes(spec, 64)
+    a = lg_ops.lut_network_fused(packed, codes)
+    b = lg_ops.lut_network_fused(legacy, codes)
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_output_layer_tables_stay_wide():
+    """16-bit logit codes cannot be packed into uint8."""
+    spec = LD.ModelSpec(name="t", in_features=16, widths=(12, 5), bits=2,
+                        fan_in=3, degree=1, adder_width=2)
+    tables = _synth(spec)
+    assert tables[-1].is_output
+    assert tables[-1].add_table.dtype == jnp.int32   # adder emits logits
+    assert tables[-1].sub_table.dtype == jnp.uint8   # sub codes still fit
+
+
+def test_fused_batch_tile_padding():
+    """Batch sizes that do not divide block_b are padded and sliced."""
+    spec = LD.ModelSpec(name="t", in_features=16, widths=(12, 5), bits=2,
+                        fan_in=3, degree=1, adder_width=2)
+    tables = _synth(spec)
+    for B, block_b in [(5, 4), (64, 256), (130, 64)]:
+        codes = _codes(spec, B)
+        want = _ref_chain(tables, codes)
+        got = lg_ops.lut_network_fused(tables, codes, block_b=block_b)
+        assert got.shape == (B, 5)
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_routing_matrix_equals_gather_packing():
+    """codes @ W == shift/add packing of gathered fan-in codes, also
+    when conn repeats a feature within one sub-neuron."""
+    rng = np.random.default_rng(0)
+    n_in, n_out, A, F, bits = 16, 10, 2, 3, 2
+    conn = rng.integers(0, n_in, (n_out, A, F)).astype(np.int32)
+    conn[0, 0, :] = 7                      # degenerate: repeated feature
+    codes = rng.integers(0, 2 ** bits, (30, n_in)).astype(np.int32)
+    w = routing_matrix(jnp.asarray(conn), bits, n_in)
+    got = (jnp.asarray(codes, jnp.float32) @ w).astype(jnp.int32)
+    want = lg_ref.pack_index(jnp.asarray(codes)[:, conn], bits
+                             ).reshape(30, n_out * A)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_make_network_fn_serving_entry():
+    spec = LD.ModelSpec(name="t", in_features=16, widths=(24, 12, 5),
+                        bits=2, fan_in=3, degree=1, adder_width=2)
+    tables = _synth(spec)
+    assert lg_ops.can_fuse(tables)
+    fn = lg_ops.make_network_fn(tables)
+    codes = _codes(spec, 48)
+    want = _ref_chain(tables, codes)
+    assert np.array_equal(np.asarray(fn(codes)), np.asarray(want))
+    # repeated calls on the same shape reuse the compiled executable
+    assert np.array_equal(np.asarray(fn(codes)), np.asarray(want))
+
+
+def test_fused_vmem_accounting():
+    """fused_vmem_bytes counts tables + routing + activation scratch,
+    and a small net is well within budget."""
+    spec = LD.ModelSpec(name="t", in_features=16, widths=(12, 5), bits=2,
+                        fan_in=3, degree=1, adder_width=2)
+    tables = _synth(spec)
+    est = lg_ops.fused_vmem_bytes(tables, block_b=256)
+    payload = LS.network_table_bytes(tables)
+    assert est > sum(t.table_bytes for t in tables)  # routing + scratch
+    assert payload > sum(t.table_bytes for t in tables)
+    assert lg_ops.can_fuse(tables, block_b=256)
+
+
+def test_pack_index_convention_stable():
+    codes = jnp.asarray([[1, 2, 3]])
+    assert int(lg_ref.pack_index(codes, 2)[0]) == 1 + (2 << 2) + (3 << 4)
