@@ -1,27 +1,39 @@
-"""LUT inference engine benchmark: fused vs per-layer, packed vs int32.
+"""LUT inference engine benchmark: fused vs per-layer, packed vs int32,
+single-device vs sharded, plus deadline-flush serving tail latency.
 
 Tracks the perf trajectory of the lut_gather serving path across PRs.
-Three execution strategies over identical synthesised networks:
+Four execution strategies over identical synthesised networks:
 
   seed        per-layer pallas_call, int32 tables, broadcast gather —
               the layout/blocking the repo shipped with at seed
   per-layer   per-layer pallas_call, packed uint8 tables, flat gather
   fused       whole network in ONE pallas_call, packed uint8 tables,
               matmul routing, VMEM activation scratch
+  sharded     the fused engine shard_map'ed over the batch axis of all
+              visible devices, tables replicated
 
-On this CPU container all kernels run in Pallas interpret mode, so the
-numbers are a proxy (documented in the JSON as backend/interpret); the
-relative ordering is what is tracked.  ``python -m benchmarks.run
---json`` (or ``python -m benchmarks.lut_infer_bench --json``) writes
-``BENCH_lut_infer.json`` at the repo root in a stable schema:
+plus a ``serving`` section: a real Poisson request stream through the
+threaded deadline-flush microbatcher (launch/batching.py), reporting
+p50/p95/p99 request latency, the straggler queueing-delay p99, and
+whether p99 lands under the deadline SLO (deadline + 2 kernel times).
 
-    {"bench": "lut_infer", "schema_version": 1, "backend": ...,
-     "configs": [{name, batch, widths, fan_in, bits, adder_width,
-                  table_bytes_int32, table_bytes_packed,
-                  seed_per_layer_int32_ms, per_layer_packed_ms,
-                  fused_packed_ms, samples_per_sec_fused,
-                  tokens_per_sec_fused, speedup_fused_vs_seed,
-                  speedup_packed_vs_int32}]}
+On this CPU container all kernels run in Pallas interpret mode and the
+"devices" are virtual host devices (the module forces
+``--xla_force_host_platform_device_count=4`` before jax initialises),
+so the numbers are a proxy (documented in the JSON as
+backend/interpret); the relative ordering is what is tracked.
+``python -m benchmarks.run --json`` (or ``python -m
+benchmarks.lut_infer_bench --json``) writes ``BENCH_lut_infer.json``
+at the repo root in a stable schema (pinned by
+tests/test_bench_schema.py):
+
+    {"bench": "lut_infer", "schema_version": 2, "backend": ...,
+     "configs": [{name, batch, widths, ..., fused_packed_ms,
+                  sharded_devices, sharded_fused_ms,
+                  samples_per_sec_sharded, speedup_sharded_vs_fused}],
+     "serving": {microbatch, deadline_ms, rate, requests, shards,
+                 p50_ms, p95_ms, p99_ms, straggler_p99_ms,
+                 deadline_slo_ms, p99_under_deadline, ...}}
 
 ``tokens_per_sec_fused`` is an intentional alias of
 ``samples_per_sec_fused`` (one classified sample = one token of
@@ -32,6 +44,12 @@ from __future__ import annotations
 import json
 import pathlib
 
+# virtual host devices for the sharded series — a no-op when jax is
+# already initialised (benchmarks/run.py sets the flag first)
+from repro.xla_env import ensure_host_devices
+
+ensure_host_devices(4)
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -40,6 +58,9 @@ from benchmarks.common import print_table, timed
 from repro.core import lut_synth as LS
 from repro.core import lutdnn as LD
 from repro.kernels.lut_gather import ops as lg_ops, ref as lg_ref
+from repro.launch.batching import (MicroBatcher, latency_percentiles_ms,
+                                   replay_open_loop)
+from repro.parallel.sharding import serving_mesh
 
 JSON_PATH = pathlib.Path(__file__).resolve().parent.parent / \
     "BENCH_lut_infer.json"
@@ -83,6 +104,14 @@ def _bench_config(name: str, kw: dict, batch: int, iters: int):
     t_pl_i32 = timed(per_layer_i32_fn, codes, iters=iters)
     t_fused = timed(fused_fn, codes, iters=iters)
 
+    # sharded fused: batch over all visible devices, tables replicated
+    n_dev = jax.device_count()
+    sharded_fn = lg_ops.make_network_fn(packed, fused=True, block_b=batch,
+                                        mesh=serving_mesh(n_dev))
+    assert np.array_equal(np.asarray(sharded_fn(codes)),
+                          np.asarray(want)), f"{name} sharded"
+    t_sharded = timed(sharded_fn, codes, iters=iters)
+
     sps_fused = batch / t_fused
     return {
         "name": name,
@@ -102,6 +131,67 @@ def _bench_config(name: str, kw: dict, batch: int, iters: int):
         "tokens_per_sec_fused": round(sps_fused),
         "speedup_fused_vs_seed": round(t_seed / t_fused, 2),
         "speedup_packed_vs_int32": round(t_pl_i32 / t_pl, 2),
+        "sharded_devices": n_dev,
+        "sharded_fused_ms": round(t_sharded * 1e3, 3),
+        "samples_per_sec_sharded": round(batch / t_sharded),
+        "speedup_sharded_vs_fused": round(t_fused / t_sharded, 2),
+    }
+
+
+def _bench_serving(fast: bool):
+    """Deadline-flush serving tail latency: a real Poisson stream
+    through the threaded microbatcher into the (sharded when multiple
+    devices are visible) fused engine.  The offered rate sits below the
+    interpret-mode service capacity so the p99 measures the FLUSH
+    policy, not unbounded overload queueing."""
+    microbatch = 256
+    deadline_ms = 2.0
+    rate = 5_000.0 if fast else 10_000.0
+    requests = 512 if fast else 2048
+    n_dev = jax.device_count()
+
+    spec = LD.ModelSpec(name="serve", in_features=16,
+                        widths=(64, 32, 32, 32, 5), bits=2, fan_in=3,
+                        degree=1, adder_width=2)
+    tables = LS.synthesise(LD.init_model(jax.random.key(0), spec),
+                           spec, pack=True)
+    mesh = serving_mesh(n_dev) if n_dev > 1 else None
+    fn = lg_ops.make_network_fn(tables, fused=True, block_b=microbatch,
+                                mesh=mesh)
+    jax.block_until_ready(fn(jnp.zeros((microbatch, 16), jnp.int32)))
+
+    def engine(batch_np):
+        return np.asarray(jax.block_until_ready(fn(jnp.asarray(batch_np))))
+
+    rows = np.asarray(jax.random.randint(
+        jax.random.key(2), (requests, 16), 0, 4), np.int32)
+    with MicroBatcher(engine, microbatch, deadline_ms / 1e3,
+                      n_features=16) as mb:
+        handles = replay_open_loop(mb, rows, rate, seed=0)
+
+    p50, p95, p99 = latency_percentiles_ms(handles)
+    kernel_ms = [f.kernel_s * 1e3 for f in mb.flushes]
+    straggler_ms = [f.waited_s * 1e3 for f in mb.flushes]
+    # SLO: a request waits at most the flush deadline plus (worst case)
+    # the in-flight batch's kernel and its own batch's kernel
+    slo_ms = deadline_ms + 2 * float(np.percentile(kernel_ms, 99))
+    return {
+        "microbatch": microbatch,
+        "deadline_ms": deadline_ms,
+        "rate": rate,
+        "requests": requests,
+        "shards": n_dev if mesh is not None else 1,
+        "p50_ms": round(p50, 3),
+        "p95_ms": round(p95, 3),
+        "p99_ms": round(p99, 3),
+        "straggler_p99_ms": round(
+            float(np.percentile(straggler_ms, 99)), 3),
+        "deadline_slo_ms": round(slo_ms, 3),
+        "p99_under_deadline": bool(p99 <= slo_ms),
+        "mean_flush_fill": round(
+            float(np.mean([f.fill for f in mb.flushes])), 1),
+        "deadline_flushes": int(
+            sum(f.deadline_hit for f in mb.flushes)),
     }
 
 
@@ -109,22 +199,33 @@ def run(fast: bool = False, write_json: bool = False):
     batch = 1024 if fast else 4096
     iters = 3 if fast else 7
     results = [_bench_config(n, kw, batch, iters) for n, kw in CONFIGS]
+    serving = _bench_serving(fast)
 
     cols = ["config", "B", "seed(i32)ms", "per-layer(u8)ms",
-            "fused(u8)ms", "fused-vs-seed", "packed-vs-i32"]
+            "fused(u8)ms", f"sharded-{results[0]['sharded_devices']}d-ms",
+            "fused-vs-seed", "sharded-vs-fused"]
     rows = [[r["name"], r["batch"], r["seed_per_layer_int32_ms"],
              r["per_layer_packed_ms"], r["fused_packed_ms"],
+             r["sharded_fused_ms"],
              f'{r["speedup_fused_vs_seed"]}x',
-             f'{r["speedup_packed_vs_int32"]}x'] for r in results]
+             f'{r["speedup_sharded_vs_fused"]}x'] for r in results]
     print_table("LUT inference engine (CPU interpret proxy)", cols, rows)
+    print_table(
+        "deadline-flush serving (real threads, Poisson arrivals)",
+        ["microbatch", "deadline_ms", "rate", "p50_ms", "p99_ms",
+         "straggler_p99_ms", "p99_under_deadline"],
+        [[serving["microbatch"], serving["deadline_ms"], serving["rate"],
+          serving["p50_ms"], serving["p99_ms"],
+          serving["straggler_p99_ms"], serving["p99_under_deadline"]]])
 
     payload = {
         "bench": "lut_infer",
-        "schema_version": 1,
+        "schema_version": 2,
         "backend": jax.default_backend(),
         "interpret": jax.default_backend() != "tpu",
         "fast": fast,
         "configs": results,
+        "serving": serving,
     }
     if write_json:
         JSON_PATH.write_text(json.dumps(payload, indent=2) + "\n")

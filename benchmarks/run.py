@@ -15,6 +15,12 @@ import sys
 import time
 import traceback
 
+# virtual host devices for the sharded lut_infer series — must be set
+# before ANY benchmark module initialises jax
+from repro.xla_env import ensure_host_devices
+
+ensure_host_devices(4)
+
 MODULES = [
     ("table2", "benchmarks.table2_polylut_add"),
     ("fig7", "benchmarks.fig7_deeper_wider"),

@@ -1,102 +1,53 @@
-"""Microbatched LUT-mode serving — the deployment artefact.
+"""Async microbatched LUT-mode serving — the deployment artefact.
 
-Trains and synthesises a LUT-DNN, then serves a simulated request
-stream through the FUSED lut_gather engine: the whole network's packed
-uint8 truth tables execute in a single pallas_call per microbatch
-(one HBM read of inputs, one write of outputs), the TPU analogue of the
-paper's FPGA bitstream.
+Trains and synthesises a LUT-DNN, then serves a REAL request stream
+through the fused lut_gather engine: the whole network's packed uint8
+truth tables execute in a single pallas_call per microbatch (one HBM
+read of inputs, one write of outputs), the TPU analogue of the paper's
+FPGA bitstream.
 
-Serving loop mechanics:
-  * requests (single samples) arrive on a queue at --rate req/s;
-  * the microbatcher drains up to --microbatch requests, pads the tail
-    batch to a fixed shape so the engine never retraces;
-  * the jitted network fn is built once via ops.make_network_fn (input
-    buffers donated on TPU — the batcher rebuilds them every tick);
-  * per-request latency = queueing delay + kernel time.
+Serving loop mechanics (all real threads and real clocks — the
+simulated open-loop arrival clock of PR 1 is gone):
+  * a submitter thread offers requests (single samples) as a Poisson
+    process at --rate req/s (launch/batching.replay_open_loop);
+  * the batcher thread (launch/batching.MicroBatcher) flushes a
+    microbatch when it is FULL or when the oldest pending request has
+    waited --deadline-ms — a lone straggler completes within
+    deadline + one kernel time, a full batch never waits;
+  * the flush pads the tail to a fixed shape so the jitted engine
+    never retraces; per-request latency = queueing delay + kernel time.
 
-Reports p50/p95/p99 request latency, sustained throughput, accuracy,
-a fused-vs-per-layer comparison, and the modeled FPGA deployment cost.
+Sharded serving
+---------------
+--shards N runs the fused engine under ``shard_map`` on a 1-D data
+mesh over N devices (parallel/sharding.serving_mesh): the microbatch
+is sharded over the batch axis, every table slab is replicated — LUT
+tables are tiny by construction, so scaling the serving path is pure
+data parallelism with zero cross-device traffic.  The sharded path is
+bit-exact against the single-device oracle (tests/test_lut_sharded.py).
+On CPU, expose virtual devices before jax initialises:
 
-    PYTHONPATH=src python examples/lut_serve.py --microbatch 512 \
-        --requests 4096 --rate 200000
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    PYTHONPATH=src python examples/lut_serve.py --shards 4 \
+        --microbatch 512 --requests 4096 --rate 200000 --deadline-ms 2
+
+Knobs: --microbatch (flush size = engine batch), --deadline-ms (max
+straggler queueing delay), --shards (mesh width), --rate (offered
+load).  Reports p50/p95/p99 request latency, sustained throughput,
+flush telemetry, accuracy, a fused-vs-per-layer comparison, and the
+modeled FPGA deployment cost.
 """
 import argparse
-import collections
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import paper_models as PM
 from repro.core import lut_synth as LS
-from repro.core import lutdnn as LD
 from repro.core.cost_model import model_cost
-from repro.data.loader import batch_iterator, train_test_split
-from repro.data.synthetic import make_dataset
 from repro.kernels.lut_gather import ops as lg_ops
-
-
-def build_model(train_steps: int):
-    """Train + synthesise (a real deployment loads this from disk)."""
-    data = train_test_split(make_dataset("jsc", n_samples=4000, seed=0))
-    spec = PM.tiny("jsc", degree=1, fan_in=3, adder_width=2)
-    init_state, step = LD.make_train_step(spec, lr=5e-3)
-    state = init_state(jax.random.key(0))
-    jstep = jax.jit(step)
-    it = batch_iterator(data["train"], 256, seed=0)
-    for _ in range(train_steps):
-        state, _ = jstep(state, next(it))
-    tables = LS.synthesise(state["model"], spec)
-    return spec, tables, data
-
-
-def serve_loop(serve_fn, fq, data, n_requests: int, microbatch: int,
-               rate: float, seed: int = 0):
-    """Simulated open-loop arrivals, measured kernel time.
-
-    The request clock is simulated (exponential inter-arrival at
-    ``rate``); each microbatch's compute time is real wall time of the
-    jitted fused kernel.  Returns per-request latencies and accuracy.
-    """
-    rng = np.random.default_rng(seed)
-    n_test = data["test"]["x"].shape[0]
-    idx = rng.integers(0, n_test, n_requests)
-    arrivals = np.cumsum(rng.exponential(1.0 / rate, n_requests))
-
-    x_all = np.asarray(data["test"]["x"])[idx]
-    y_all = np.asarray(data["test"]["y"])[idx]
-    codes_all = np.asarray(fq.to_code(fq.clip(jnp.asarray(x_all))))
-
-    queue = collections.deque(range(n_requests))
-    latencies = np.zeros(n_requests)
-    correct = 0
-    clock = 0.0
-    batch_buf = np.zeros((microbatch, codes_all.shape[1]), np.int32)
-
-    while queue:
-        # wait until at least one pending request has arrived
-        clock = max(clock, arrivals[queue[0]])
-        take = []
-        while queue and len(take) < microbatch and \
-                arrivals[queue[0]] <= clock:
-            take.append(queue.popleft())
-        # fixed-shape microbatch: pad the tail with the first request
-        batch_buf[:len(take)] = codes_all[take]
-        batch_buf[len(take):] = codes_all[take[0]]
-
-        t0 = time.perf_counter()
-        out = serve_fn(jnp.asarray(batch_buf))
-        out.block_until_ready()
-        dt = time.perf_counter() - t0
-
-        clock += dt
-        latencies[take] = clock - arrivals[take]
-        pred = np.asarray(
-            jnp.argmax(LS.OUTPUT_QUANT.from_code(out[:len(take)]), -1))
-        correct += int((pred == y_all[take]).sum())
-
-    return latencies, correct / n_requests, clock
+from repro.launch.serve import build_lut_model, drive_lut_serving
+from repro.parallel.sharding import serving_mesh
 
 
 def main():
@@ -104,36 +55,35 @@ def main():
     ap.add_argument("--microbatch", type=int, default=512)
     ap.add_argument("--requests", type=int, default=4096)
     ap.add_argument("--rate", type=float, default=200_000.0,
-                    help="simulated request arrival rate (req/s)")
+                    help="offered Poisson load (req/s, real clock)")
+    ap.add_argument("--deadline-ms", type=float, default=2.0,
+                    help="max queueing delay before a partial flush")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="shard_map the engine over N devices "
+                         "(0 = single-device)")
     ap.add_argument("--train-steps", type=int, default=150)
     ap.add_argument("--engine", choices=("fused", "per-layer"),
                     default="fused")
     args = ap.parse_args()
 
-    spec, tables, data = build_model(args.train_steps)
+    spec, tables, data = build_lut_model(args.train_steps)
     print(f"serving {spec.name}: {spec.table_entries} table entries, "
           f"{LS.network_table_bytes(tables)} B packed "
           f"(fits VMEM: {lg_ops.can_fuse(tables, args.microbatch)}); "
           f"modeled FPGA: {model_cost(spec)}")
 
-    fq = spec.layer_specs()[0].in_quant
+    mesh = serving_mesh(args.shards) if args.shards else None
     serve_fn = lg_ops.make_network_fn(
         tables, fused=(args.engine == "fused"),
-        block_b=args.microbatch, donate=True)
+        block_b=args.microbatch, donate=True, mesh=mesh)
 
-    # warm the compile cache outside the measured loop
-    serve_fn(jnp.zeros((args.microbatch, spec.in_features), jnp.int32)
-             ).block_until_ready()
-
-    lat, acc, span = serve_loop(serve_fn, fq, data, args.requests,
-                                args.microbatch, args.rate)
-    p50, p95, p99 = np.percentile(lat * 1e3, [50, 95, 99])
-    print(f"engine={args.engine} microbatch={args.microbatch} "
-          f"rate={args.rate:,.0f}/s:")
-    print(f"  latency p50 {p50:.2f} ms / p95 {p95:.2f} ms / "
-          f"p99 {p99:.2f} ms")
-    print(f"  throughput {args.requests / span:,.0f} req/s, "
-          f"accuracy {acc:.4f}")
+    drive_lut_serving(
+        serve_fn, spec, data, requests=args.requests,
+        microbatch=args.microbatch, deadline_ms=args.deadline_ms,
+        rate=args.rate,
+        header=f"engine={args.engine} shards={args.shards or 1} "
+               f"microbatch={args.microbatch} deadline={args.deadline_ms}ms "
+               f"rate={args.rate:,.0f}/s:")
 
     # fused-vs-per-layer on the same microbatch, steady state
     codes = jnp.asarray(np.zeros((args.microbatch, spec.in_features),

@@ -14,7 +14,7 @@ Bit-exactness contract (tested): for any input on the quant grid,
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +23,8 @@ import numpy as np
 from repro.core import layers as L
 from repro.core.lutdnn import ModelSpec
 from repro.core.quant import QuantSpec, bn_fold
+from repro.kernels.lut_gather.lut_gather import (MATMUL_ROUTE_MAX_BITS,
+                                                 routing_matrix)
 
 
 @dataclasses.dataclass
@@ -34,6 +36,12 @@ class LayerTables:
     paper config — which quarters the VMEM footprint vs int32.  The
     output layer's 16-bit logit codes keep int32.  ``pack=False`` at
     synthesis time forces the legacy int32 layout everywhere.
+
+    ``routing`` is the (n_in, n_out*A) float32 matmul routing matrix
+    precomputed HERE, at synthesis time — connectivity is frozen once
+    the tables exist, so rebuilding it on every trace (as
+    ``ops.lut_network_fused`` used to) was pure waste.  None when the
+    packed address is too wide for exact f32 matmul routing.
     """
 
     conn: jnp.ndarray        # (n_out, A, F) int32 gather indices
@@ -48,6 +56,7 @@ class LayerTables:
     out_quant: QuantSpec
     sub_quant: QuantSpec
     table_dtype: jnp.dtype = jnp.int32   # dtype of sub_table (packed: uint8)
+    routing: Optional[jnp.ndarray] = None  # (n_in, n_out*A) f32, or None
 
     @property
     def table_bytes(self) -> int:
@@ -74,7 +83,8 @@ def _enum_codes(n_slots: int, bits: int) -> np.ndarray:
 
 
 def synthesise_layer(params: dict, conn: jnp.ndarray, spec: L.LayerSpec,
-                     pack: bool = True) -> LayerTables:
+                     pack: bool = True, routing: bool = True
+                     ) -> LayerTables:
     b_in = spec.in_quant.bits
     combos = jnp.asarray(_enum_codes(spec.fan_in, b_in))        # (K, F)
     vals = spec.in_quant.from_code(combos)                      # (K, F)
@@ -121,12 +131,16 @@ def synthesise_layer(params: dict, conn: jnp.ndarray, spec: L.LayerSpec,
         add_table = jnp.zeros((spec.n_out, 0), sub_dt)
         sub_bits = oq.bits
 
+    route = (routing_matrix(conn, b_in, spec.n_in)
+             if routing and b_in * spec.fan_in <= MATMUL_ROUTE_MAX_BITS
+             and not isinstance(conn, jax.core.Tracer) else None)
     return LayerTables(
         conn=conn, sub_table=sub_table.astype(sub_dt),
         add_table=add_table, in_bits=b_in, sub_bits=sub_bits,
         out_bits=oq.bits, fan_in=spec.fan_in,
         adder_width=spec.adder_width, is_output=spec.is_output,
-        out_quant=oq, sub_quant=sq, table_dtype=jnp.dtype(sub_dt))
+        out_quant=oq, sub_quant=sq, table_dtype=jnp.dtype(sub_dt),
+        routing=route)
 
 
 def _logit_codes(z: jnp.ndarray, oq: QuantSpec) -> jnp.ndarray:
@@ -140,10 +154,13 @@ def _logit_codes(z: jnp.ndarray, oq: QuantSpec) -> jnp.ndarray:
 OUTPUT_QUANT = QuantSpec(bits=16, low=-8.0, high=8.0)
 
 
-def synthesise(model: dict, spec: ModelSpec,
-               pack: bool = True) -> List[LayerTables]:
+def synthesise(model: dict, spec: ModelSpec, pack: bool = True,
+               routing: bool = True) -> List[LayerTables]:
+    """``routing=False`` skips the per-layer routing-matrix precompute
+    (an n_in*n_out*A float32 per layer) — for deployments that only
+    ever run the per-layer engine, which routes from conn directly."""
     return [
-        synthesise_layer(p, c, s, pack=pack)
+        synthesise_layer(p, c, s, pack=pack, routing=routing)
         for p, c, s in zip(model["layers"], model["conn"], spec.layer_specs())
     ]
 

@@ -7,11 +7,21 @@ every table slab VMEM-resident, inter-layer codes in VMEM scratch, one
 HBM read + one HBM write per forward pass.  All paths match
 core/lut_synth.lut_forward bit-exactly (tested).
 
+``lut_network_fused_sharded`` scales the fused engine across devices:
+shard_map over the batch axis of a data-parallel mesh, every table
+slab replicated — LUT-DNN tables are tiny by construction (the
+PolyLUT-Add decomposition is what keeps them VMEM-sized), so
+replicate-tables/shard-batch is the natural axis and needs ZERO
+cross-device communication per forward pass.
+
 Backend detection is hoisted to import-level caching and the Pallas
 wrappers are jitted with static config, so repeated ``lut_layer`` /
-``lut_network`` calls on stable shapes never retrace.  For serving,
-``make_network_fn`` closes over the tables once and returns a single
-jitted callable (optionally with donated input buffers).
+``lut_network`` calls on stable shapes never retrace.  Routing
+matrices are read from the ``LayerTables.routing`` cache that
+core/lut_synth now fills at synthesis time — a trace never rebuilds
+them.  For serving, ``make_network_fn`` closes over the tables once
+and returns a single jitted callable (optionally with donated input
+buffers, optionally sharded over a mesh).
 """
 from __future__ import annotations
 
@@ -22,6 +32,8 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.kernels.lut_gather.lut_gather import (MATMUL_ROUTE_MAX_BITS,
                                                  lut_gather_pallas,
@@ -80,11 +92,17 @@ def fused_vmem_bytes(tables: List, block_b: int = 1024,
     n_in = n_in0
     for t in tables:
         n_out, A, _ = t.conn.shape
-        if n_in is None:  # first layer: input width from the conn indices
-            try:
-                n_in = int(np.asarray(t.conn).max()) + 1
-            except Exception:  # traced conn — conn-size lower bound
-                n_in = t.conn.shape[2]
+        if n_in is None:  # first layer: exact width from the cached
+            # routing matrix when synthesis stored one, else inferred
+            # from the conn indices
+            route = getattr(t, "routing", None)
+            if route is not None:
+                n_in = route.shape[0]
+            else:
+                try:
+                    n_in = int(np.asarray(t.conn).max()) + 1
+                except Exception:  # traced conn — conn-size lower bound
+                    n_in = t.conn.shape[2]
         slab += 4 * n_in * n_out * A + t.table_bytes
         n_in = n_out
     widths = [t.conn.shape[0] for t in tables]
@@ -105,9 +123,10 @@ def lut_network_fused(tables: List, codes: jnp.ndarray,
     table slabs to fit the VMEM budget (see ``can_fuse``).
 
     Routing uses the matmul formulation (codes @ routing_matrix) per
-    layer whenever the packed address width allows it; the routing
-    matrices are derived from conn at trace time, so wrapping this in
-    ``jax.jit`` (or using ``make_network_fn``) builds them exactly once.
+    layer whenever the packed address width allows it.  The matrices
+    come from the ``LayerTables.routing`` cache filled at synthesis
+    time; only hand-built tables without one (or a width mismatch)
+    fall back to deriving the matrix from conn at trace time.
     """
     flat, metas = [], []
     n_in = codes.shape[1]
@@ -116,9 +135,14 @@ def lut_network_fused(tables: List, codes: jnp.ndarray,
         use_adder = t.add_table.shape[-1] > 0
         add = (t.add_table if use_adder
                else jnp.zeros((n_out, 1), t.sub_table.dtype))
-        mm = (t.in_bits * fan_in <= MATMUL_ROUTE_MAX_BITS
-              and not isinstance(t.conn, jax.core.Tracer))
-        route = routing_matrix(t.conn, t.in_bits, n_in) if mm else t.conn
+        cached = getattr(t, "routing", None)
+        if cached is not None and cached.shape[0] != n_in:
+            cached = None                    # synthesised for another width
+        mm = cached is not None or \
+            (t.in_bits * fan_in <= MATMUL_ROUTE_MAX_BITS
+             and not isinstance(t.conn, jax.core.Tracer))
+        route = (cached if cached is not None else
+                 routing_matrix(t.conn, t.in_bits, n_in) if mm else t.conn)
         flat.extend([route, t.sub_table, add])
         metas.append((t.in_bits, t.sub_bits, use_adder, n_in, n_out, mm))
         n_in = n_out
@@ -127,23 +151,78 @@ def lut_network_fused(tables: List, codes: jnp.ndarray,
         interpret=_default_interpret(force_interpret))
 
 
+def _mesh_batch_shards(mesh: Mesh) -> int:
+    """Number of batch shards a serving mesh yields: the product of its
+    data-parallel axes (every axis except `model`)."""
+    return int(np.prod([s for a, s in mesh.shape.items() if a != "model"],
+                       initial=1))
+
+
+def _mesh_batch_spec(mesh: Mesh) -> P:
+    axes = tuple(a for a in mesh.axis_names if a != "model")
+    return P(axes if len(axes) > 1 else axes[0], None)
+
+
+def lut_network_fused_sharded(tables: List, codes: jnp.ndarray,
+                              mesh: Mesh, block_b: int = 1024,
+                              force_interpret: Optional[bool] = None,
+                              fused: bool = True) -> jnp.ndarray:
+    """Data-parallel fused inference: batch sharded over the mesh's DP
+    axes via shard_map, table slabs replicated (closed over — they are
+    tiny by construction, so replication is free relative to moving
+    activations).  Each device runs the single-kernel fused engine on
+    its local batch shard; there is NO cross-device communication.
+
+    Uneven batches are padded up to a multiple of the shard count and
+    sliced back, so any B works on any device count — bit-exactness
+    against the single-device oracle is property-tested across device
+    counts in tests/test_lut_sharded.py.
+    """
+    n_shards = _mesh_batch_shards(mesh)
+    B = codes.shape[0]
+    pad = (-B) % n_shards
+    if pad:
+        codes = jnp.pad(codes, ((0, pad), (0, 0)))
+
+    if fused:
+        def local(c):
+            return lut_network_fused(tables, c, block_b=block_b,
+                                     force_interpret=force_interpret)
+    else:
+        def local(c):
+            return lut_network(tables, c, force_interpret=force_interpret)
+
+    spec = _mesh_batch_spec(mesh)
+    out = shard_map(local, mesh=mesh, in_specs=spec, out_specs=spec,
+                    check_rep=False)(codes)
+    return out[:B]
+
+
 def make_network_fn(tables: List, fused: Optional[bool] = None,
                     block_b: int = 1024,
                     force_interpret: Optional[bool] = None,
                     donate: bool = False,
-                    n_in0: Optional[int] = None) -> Callable:
+                    n_in0: Optional[int] = None,
+                    mesh: Optional[Mesh] = None) -> Callable:
     """Close over a synthesised network once and return one jitted
     ``fn(codes) -> out_codes`` for serving.  ``fused=None`` picks the
     fused engine whenever the tables fit VMEM — pass ``n_in0`` (the
     network input width) for an exact first-layer routing-matrix
     estimate in that decision.  ``donate=True`` donates the input codes
     buffer (the serving loop overwrites it anyway); donation is a no-op
-    warning on CPU, so it is only applied on TPU.
+    warning on CPU, so it is only applied on TPU.  ``mesh`` switches to
+    the shard_map data-parallel path: batch sharded over the mesh,
+    tables replicated.
     """
     if fused is None:
         fused = can_fuse(tables, block_b, n_in0)
 
-    if fused:
+    if mesh is not None:
+        def fn(codes):
+            return lut_network_fused_sharded(
+                tables, codes, mesh, block_b=block_b,
+                force_interpret=force_interpret, fused=fused)
+    elif fused:
         def fn(codes):
             return lut_network_fused(tables, codes, block_b=block_b,
                                      force_interpret=force_interpret)

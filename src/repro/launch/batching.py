@@ -1,0 +1,240 @@
+"""Async request queue with deadline-based microbatch flush.
+
+The real serving front-end for the LUT engine (and any fixed-shape
+batch function): producers ``submit`` single requests from any thread
+and block on the returned handle; ONE batcher thread drains the queue
+and flushes a microbatch to the engine when EITHER
+
+  * the batch is full (``microbatch`` requests)   — no deadline wait, or
+  * the OLDEST pending request has waited ``deadline_s``
+
+so a lone straggler completes within ``deadline + one kernel time``
+and a full microbatch never waits for the deadline.  This replaces the
+simulated open-loop clock the repo shipped with in PR 1: arrivals,
+queueing and flushes all happen on the real clock with real threads.
+
+The flush pads the tail batch to the fixed ``(microbatch, n_features)``
+shape (repeating the first row) so the jitted engine never retraces;
+padding rows are computed and discarded.
+
+``replay_open_loop`` drives a batcher with a Poisson arrival process on
+the real clock — the measurement harness used by examples/lut_serve.py
+and benchmarks/lut_infer_bench.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RequestHandle:
+    """One in-flight request.  ``result()`` blocks until the batcher
+    has flushed the microbatch containing it (re-raising the engine's
+    exception if that flush failed)."""
+
+    x: np.ndarray                       # (n_features,) input row
+    t_submit: float                     # monotonic submit time
+    t_done: float = 0.0                 # monotonic completion time
+    _out: Optional[np.ndarray] = None   # (n_out,) engine output row
+    _exc: Optional[BaseException] = None
+    _event: threading.Event = dataclasses.field(
+        default_factory=threading.Event)
+
+    def result(self, timeout: Optional[float] = None) -> np.ndarray:
+        if not self._event.wait(timeout):
+            raise TimeoutError("request not served within timeout")
+        if self._exc is not None:
+            raise RuntimeError("engine failed for this batch") from self._exc
+        return self._out
+
+    @property
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    @property
+    def latency_s(self) -> float:
+        """Queueing delay + kernel time (valid once done)."""
+        return self.t_done - self.t_submit
+
+
+@dataclasses.dataclass
+class FlushRecord:
+    """Telemetry for one flush (for tail-latency attribution)."""
+
+    fill: int           # real requests in the microbatch (<= capacity)
+    waited_s: float     # oldest request's queueing delay at flush time
+    kernel_s: float     # engine wall time for the batch
+    cause: str          # "full" | "deadline" | "stop"
+
+    @property
+    def deadline_hit(self) -> bool:
+        return self.cause == "deadline"
+
+
+_STOP = object()
+
+
+class MicroBatcher:
+    """Threaded microbatcher with deadline flush.
+
+    serve_fn: ``(microbatch, n_features) np/int32 -> (microbatch, n_out)``
+    array-convertible; called on the batcher thread only, so a jitted
+    (optionally shard_map'ed) engine fn needs no extra locking.
+    """
+
+    def __init__(self, serve_fn: Callable, microbatch: int,
+                 deadline_s: float, n_features: int,
+                 dtype=np.int32):
+        if microbatch < 1:
+            raise ValueError("microbatch must be >= 1")
+        self.serve_fn = serve_fn
+        self.microbatch = microbatch
+        self.deadline_s = float(deadline_s)
+        self._buf = np.zeros((microbatch, n_features), dtype)
+        self._q: "queue.Queue" = queue.Queue()
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._stopping = False
+        self.flushes: List[FlushRecord] = []
+
+    # -- lifecycle ---------------------------------------------------
+    def start(self) -> "MicroBatcher":
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        """Flush whatever is pending, then join the batcher thread.
+        Requests that raced past submit()'s stopping check are drained
+        and served HERE (on the caller's thread) so no handle is ever
+        left unset."""
+        self._stopping = True
+        self._q.put(_STOP)
+        self._thread.join()
+        leftovers: List[RequestHandle] = []
+        while True:
+            try:
+                item = self._q.get_nowait()
+            except queue.Empty:
+                break
+            if item is not _STOP:
+                leftovers.append(item)
+        while leftovers:
+            chunk = leftovers[:self.microbatch]
+            leftovers = leftovers[self.microbatch:]
+            self._flush(chunk, cause="stop")
+
+    def __enter__(self) -> "MicroBatcher":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- producer side -----------------------------------------------
+    def submit(self, x) -> RequestHandle:
+        if self._stopping:
+            raise RuntimeError("batcher is stopping")
+        h = RequestHandle(x=np.asarray(x), t_submit=time.monotonic())
+        self._q.put(h)
+        return h
+
+    # -- batcher thread ----------------------------------------------
+    def _collect(self):
+        """Block for the first request, then fill the batch until it is
+        full or the FIRST request's deadline expires.  Returns
+        (pending, cause)."""
+        first = self._q.get()
+        if first is _STOP:
+            return [], "stop"
+        pending = [first]
+        cause = "deadline"
+        flush_at = first.t_submit + self.deadline_s
+        while len(pending) < self.microbatch:
+            # once stopping, never block on the deadline — a request
+            # that raced past submit()'s stopping check must not make
+            # stop() wait out a long deadline_s
+            timeout = (0.0 if self._stopping
+                       else flush_at - time.monotonic())
+            try:
+                # past the deadline, still drain the backlog that is
+                # ALREADY queued (non-blocking) — under load the batch
+                # fills instead of degenerating to one-request flushes
+                item = (self._q.get(timeout=timeout) if timeout > 0
+                        else self._q.get_nowait())
+            except queue.Empty:
+                break
+            if item is _STOP:
+                cause = "stop"
+                break
+            pending.append(item)
+        if len(pending) == self.microbatch:
+            cause = "full"
+        return pending, cause
+
+    def _flush(self, pending: Sequence[RequestHandle],
+               cause: str) -> None:
+        n = len(pending)
+        t0 = time.monotonic()
+        waited = t0 - pending[0].t_submit
+        for i, h in enumerate(pending):
+            self._buf[i] = h.x
+        self._buf[n:] = self._buf[0]          # pad: fixed shape, no retrace
+        try:
+            out = np.asarray(self.serve_fn(self._buf))
+        except BaseException as e:
+            # the engine failed: fail THIS batch's handles (result()
+            # re-raises) and keep the batcher alive for later batches
+            for h in pending:
+                h._exc = e
+                h.t_done = time.monotonic()
+                h._event.set()
+            return
+        t1 = time.monotonic()
+        self.flushes.append(FlushRecord(
+            fill=n, waited_s=waited, kernel_s=t1 - t0, cause=cause))
+        for i, h in enumerate(pending):
+            h._out = out[i]
+            h.t_done = t1
+            h._event.set()
+
+    def _loop(self) -> None:
+        while True:
+            pending, cause = self._collect()
+            if pending:
+                self._flush(pending, cause)
+            if self._stopping and self._q.empty():
+                return
+
+
+def replay_open_loop(batcher: MicroBatcher, rows: np.ndarray,
+                     rate: float, seed: int = 0,
+                     timeout_s: float = 120.0) -> List[RequestHandle]:
+    """Submit ``rows`` as a Poisson open-loop arrival process on the
+    REAL clock (exponential inter-arrival gaps at ``rate`` req/s; gaps
+    the OS cannot sleep are submitted immediately, i.e. the offered
+    load saturates at the submitter's speed).  Blocks until every
+    request is served; returns the handles for latency analysis.
+    """
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate, len(rows))
+    handles = []
+    t_next = time.monotonic()
+    for row, gap in zip(rows, gaps):
+        t_next += gap
+        dt = t_next - time.monotonic()
+        if dt > 0:
+            time.sleep(dt)
+        handles.append(batcher.submit(row))
+    for h in handles:
+        h.result(timeout=timeout_s)
+    return handles
+
+
+def latency_percentiles_ms(handles: Sequence[RequestHandle],
+                           qs=(50, 95, 99)) -> List[float]:
+    lats = np.asarray([h.latency_s for h in handles]) * 1e3
+    return [float(v) for v in np.percentile(lats, qs)]

@@ -1,4 +1,4 @@
-"""Batched serving launcher: prefill + decode loop.
+"""Batched serving launcher: LM prefill + decode loop, or LUT-mode.
 
 Serves any registered architecture (reduced configs on CPU) with a
 continuous-batching-style loop: one prefill builds the KV cache /
@@ -8,6 +8,19 @@ whole batch.  The decode path is exactly what the ``decode_32k`` /
 
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b \
         --smoke --batch 4 --prompt-len 32 --gen 16
+
+``--lut`` switches to the LUT-DNN serving stack instead: a tiny model
+is trained + synthesised to truth tables, and requests flow through
+the REAL async front-end (launch/batching.MicroBatcher — threaded
+queue, deadline-based microbatch flush) into the fused lut_gather
+engine, optionally shard_map'ed over ``--shards`` devices (batch
+sharded, tables replicated).  ``build_lut_model`` / ``run_lut_load``
+here are the canonical assembly, reused by examples/lut_serve.py and
+benchmarks/lut_infer_bench.py.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    PYTHONPATH=src python -m repro.launch.serve --lut --shards 4 \
+        --microbatch 256 --deadline-ms 2 --requests 2048 --rate 50000
 """
 from __future__ import annotations
 
@@ -22,9 +35,135 @@ from repro.models import lm as LM
 from repro.models import registry as R
 
 
+# ---------------------------------------------------------------------------
+# LUT-mode serving assembly (shared with examples/ and benchmarks/)
+# ---------------------------------------------------------------------------
+
+def build_lut_model(train_steps: int = 150, fan_in: int = 3,
+                    adder_width: int = 2, seed: int = 0):
+    """Train + synthesise a tiny LUT-DNN (a real deployment loads the
+    tables from disk).  Returns (spec, tables, data)."""
+    from repro.configs import paper_models as PM
+    from repro.core import lut_synth as LS
+    from repro.core import lutdnn as LD
+    from repro.data.loader import batch_iterator, train_test_split
+    from repro.data.synthetic import make_dataset
+
+    data = train_test_split(make_dataset("jsc", n_samples=4000, seed=seed))
+    spec = PM.tiny("jsc", degree=1, fan_in=fan_in, adder_width=adder_width)
+    init_state, step = LD.make_train_step(spec, lr=5e-3)
+    state = init_state(jax.random.key(seed))
+    jstep = jax.jit(step)
+    it = batch_iterator(data["train"], 256, seed=seed)
+    for _ in range(train_steps):
+        state, _ = jstep(state, next(it))
+    tables = LS.synthesise(state["model"], spec)
+    return spec, tables, data
+
+
+def run_lut_load(serve_fn, fq, data, n_requests: int, microbatch: int,
+                 deadline_s: float, rate: float, seed: int = 0):
+    """Drive a Poisson open-loop request stream through the deadline-
+    flush batcher into ``serve_fn``.  Returns (handles, batcher, idx):
+    handles carry real measured latencies, the batcher carries flush
+    telemetry, and ``idx`` are the test-set rows served (needed to
+    align labels in ``lut_accuracy``)."""
+    from repro.launch.batching import MicroBatcher, replay_open_loop
+
+    rng = np.random.default_rng(seed)
+    n_test = data["test"]["x"].shape[0]
+    idx = rng.integers(0, n_test, n_requests)
+    x_all = np.asarray(data["test"]["x"])[idx]
+    codes_all = np.asarray(fq.to_code(fq.clip(jnp.asarray(x_all))))
+
+    def engine(batch_np):
+        out = serve_fn(jnp.asarray(batch_np))
+        return np.asarray(jax.block_until_ready(out))
+
+    with MicroBatcher(engine, microbatch, deadline_s,
+                      n_features=codes_all.shape[1]) as mb:
+        handles = replay_open_loop(mb, codes_all, rate, seed=seed)
+    return handles, mb, idx
+
+
+def lut_accuracy(handles, data, idx) -> float:
+    """Classification accuracy of served results — ONE batched decode
+    (stack every output row, dequantize, argmax), not one dispatch per
+    request."""
+    from repro.core import lut_synth as LS
+
+    out = jnp.asarray(np.stack([h.result() for h in handles]))
+    pred = np.asarray(jnp.argmax(LS.OUTPUT_QUANT.from_code(out), -1))
+    y = np.asarray(data["test"]["y"])[idx]
+    return float((pred == y).mean())
+
+
+def report_lut_serving(header: str, handles, mb, acc: float,
+                       span: float) -> None:
+    """Shared latency/throughput/flush-telemetry report (used by this
+    launcher and examples/lut_serve.py)."""
+    from repro.launch.batching import latency_percentiles_ms
+
+    p50, p95, p99 = latency_percentiles_ms(handles)
+    fills = [f.fill for f in mb.flushes]
+    print(header)
+    print(f"  latency p50 {p50:.2f} ms / p95 {p95:.2f} ms / "
+          f"p99 {p99:.2f} ms")
+    print(f"  throughput {len(handles) / span:,.0f} req/s over "
+          f"{len(mb.flushes)} flushes (mean fill {np.mean(fills):.1f}, "
+          f"{sum(f.deadline_hit for f in mb.flushes)} "
+          f"deadline-triggered), accuracy {acc:.4f}")
+
+
+def drive_lut_serving(serve_fn, spec, data, *, requests: int,
+                      microbatch: int, deadline_ms: float, rate: float,
+                      header: str):
+    """Warm the engine, run the open-loop load, print the shared
+    report.  Returns (handles, batcher) for callers that inspect
+    telemetry further."""
+    # warm the compile cache outside the measured window
+    jax.block_until_ready(serve_fn(
+        jnp.zeros((microbatch, spec.in_features), jnp.int32)))
+    fq = spec.layer_specs()[0].in_quant
+    t0 = time.monotonic()
+    handles, mb, idx = run_lut_load(
+        serve_fn, fq, data, requests, microbatch, deadline_ms / 1e3, rate)
+    span = time.monotonic() - t0
+    report_lut_serving(header, handles, mb,
+                       lut_accuracy(handles, data, idx), span)
+    return handles, mb
+
+
+def serve_lut(args) -> None:
+    from repro.kernels.lut_gather import ops as lg_ops
+    from repro.parallel.sharding import serving_mesh
+
+    spec, tables, data = build_lut_model(args.lut_train_steps)
+    mesh = serving_mesh(args.shards) if args.shards else None
+    serve_fn = lg_ops.make_network_fn(tables, fused=True,
+                                      block_b=args.microbatch, mesh=mesh)
+    drive_lut_serving(
+        serve_fn, spec, data, requests=args.requests,
+        microbatch=args.microbatch, deadline_ms=args.deadline_ms,
+        rate=args.rate,
+        header=f"lut-serve shards={args.shards or 1} "
+               f"microbatch={args.microbatch} deadline={args.deadline_ms}ms "
+               f"rate={args.rate:,.0f}/s:")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--lut", action="store_true",
+                    help="serve a synthesised LUT-DNN through the async "
+                         "deadline-flush batcher (optionally sharded)")
+    ap.add_argument("--lut-train-steps", type=int, default=150)
+    ap.add_argument("--microbatch", type=int, default=256)
+    ap.add_argument("--deadline-ms", type=float, default=2.0)
+    ap.add_argument("--shards", type=int, default=0,
+                    help="devices for shard_map serving (0 = unsharded)")
+    ap.add_argument("--requests", type=int, default=2048)
+    ap.add_argument("--rate", type=float, default=50_000.0)
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--full", dest="smoke", action="store_false")
     ap.add_argument("--batch", type=int, default=4)
@@ -34,6 +173,10 @@ def main() -> None:
     ap.add_argument("--kv-int8", action="store_true",
                     help="serve with the int8 KV cache")
     args = ap.parse_args()
+
+    if args.lut:
+        serve_lut(args)
+        return
 
     cfg = R.get_config(args.arch, smoke=args.smoke)
     if R.is_encdec(cfg):

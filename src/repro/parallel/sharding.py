@@ -28,6 +28,7 @@ import re
 from typing import Any, List, Sequence, Tuple, Union
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
@@ -307,6 +308,28 @@ def ambient_mesh() -> Mesh | None:
         return m if m.devices.size > 0 else None
     except Exception:
         return None
+
+
+def serving_mesh(n_devices: int | None = None, devices=None) -> Mesh:
+    """1-D data-parallel mesh for replicate-tables/shard-batch serving
+    (the LUT engine's scaling axis — see kernels/lut_gather/ops).
+
+    Takes the first ``n_devices`` local devices (all of them when
+    None).  On CPU CI the device count comes from
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set before
+    jax initialises; tests/conftest.py does this), so the sharded
+    serving path is exercised without accelerators.
+    """
+    devs = list(devices) if devices is not None else jax.devices()
+    if n_devices is not None:
+        if n_devices > len(devs):
+            raise ValueError(
+                f"serving_mesh: {n_devices} devices requested, "
+                f"{len(devs)} visible — on CPU set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={n_devices} "
+                f"before jax initialises")
+        devs = devs[:n_devices]
+    return Mesh(np.array(devs), ("data",))
 
 
 def batch_spec(mesh: Mesh) -> P:

@@ -1,0 +1,26 @@
+"""Process-level XLA environment knobs.
+
+Import-safe WITHOUT jax: these must run before jax initialises its
+backend (device count is locked on first init), so every entry point
+that needs virtual host devices calls ``ensure_host_devices`` at the
+very top, before any jax-importing module.
+
+Used by tests/conftest.py, benchmarks/run.py and
+benchmarks/lut_infer_bench.py (4 devices for the sharded serving
+path).  launch/dryrun.py keeps its own 512-device setup — it
+deliberately owns the whole subprocess environment.
+"""
+from __future__ import annotations
+
+import os
+
+
+def ensure_host_devices(n: int = 4) -> None:
+    """Append ``--xla_force_host_platform_device_count=n`` to XLA_FLAGS
+    unless a count is already set (never override an explicit choice).
+    Only affects the host (CPU) platform — harmless on TPU.  A no-op
+    if jax is already initialised, so call it before importing jax."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={n}").strip()

@@ -1,0 +1,81 @@
+"""Schema stability of BENCH_lut_infer.json.
+
+The benchmark JSON is the cross-PR perf ledger — dashboards and
+PR-over-PR comparisons diff these keys.  This test pins the schema
+(required keys present, numeric types correct) so a benchmark refactor
+cannot silently rename or drop a tracked series.  Values are NOT
+asserted (they are hardware-dependent); only shape and type.
+"""
+import json
+import numbers
+import pathlib
+
+import pytest
+
+PATH = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_lut_infer.json"
+
+TOP_KEYS = {
+    "bench": str,
+    "schema_version": numbers.Integral,
+    "backend": str,
+    "interpret": bool,
+    "fast": bool,
+    "configs": list,
+    "serving": dict,
+}
+
+CONFIG_NUMERIC = [
+    "batch", "fan_in", "bits", "adder_width",
+    "table_bytes_int32", "table_bytes_packed",
+    "seed_per_layer_int32_ms", "per_layer_int32_flat_ms",
+    "per_layer_packed_ms", "fused_packed_ms",
+    "samples_per_sec_seed", "samples_per_sec_fused",
+    "tokens_per_sec_fused", "speedup_fused_vs_seed",
+    "speedup_packed_vs_int32",
+    # sharded serving series (PR 2)
+    "sharded_devices", "sharded_fused_ms", "samples_per_sec_sharded",
+    "speedup_sharded_vs_fused",
+]
+
+SERVING_NUMERIC = [
+    "microbatch", "deadline_ms", "rate", "requests", "shards",
+    "p50_ms", "p95_ms", "p99_ms", "straggler_p99_ms",
+    "mean_flush_fill", "deadline_flushes",
+]
+
+
+@pytest.fixture(scope="module")
+def payload():
+    assert PATH.exists(), "BENCH_lut_infer.json missing from repo root"
+    return json.loads(PATH.read_text())
+
+
+def test_top_level_schema(payload):
+    for key, typ in TOP_KEYS.items():
+        assert key in payload, f"missing top-level key {key!r}"
+        assert isinstance(payload[key], typ), (key, type(payload[key]))
+    assert payload["bench"] == "lut_infer"
+    assert payload["schema_version"] >= 2
+    assert len(payload["configs"]) >= 1
+
+
+def test_config_entries_schema(payload):
+    for cfg in payload["configs"]:
+        assert isinstance(cfg["name"], str)
+        assert isinstance(cfg["widths"], list) and cfg["widths"]
+        for key in CONFIG_NUMERIC:
+            assert key in cfg, f"config {cfg['name']}: missing {key!r}"
+            assert isinstance(cfg[key], numbers.Real) and \
+                not isinstance(cfg[key], bool), (cfg["name"], key)
+
+
+def test_serving_entry_schema(payload):
+    srv = payload["serving"]
+    for key in SERVING_NUMERIC:
+        assert key in srv, f"serving: missing {key!r}"
+        assert isinstance(srv[key], numbers.Real) and \
+            not isinstance(srv[key], bool), key
+    assert isinstance(srv["p99_under_deadline"], bool)
+    # internal consistency: percentiles are ordered
+    assert srv["p50_ms"] <= srv["p95_ms"] <= srv["p99_ms"]

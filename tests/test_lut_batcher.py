@@ -1,0 +1,153 @@
+"""Deadline-flush semantics of the async serving queue.
+
+The two sides of the microbatcher contract (launch/batching.py):
+  * a LONE straggler under zero follow-up traffic flushes when its
+    deadline expires — latency <= deadline + epsilon, never "wait
+    forever for a full batch";
+  * a FULL microbatch flushes immediately — no deadline wait.
+Plus routing correctness (each request gets ITS row back, padding rows
+are discarded) and a drain-on-stop guarantee.
+
+Uses a pure-numpy engine fn so the timing assertions measure the
+batcher, not kernel compile time.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.launch.batching import MicroBatcher, replay_open_loop
+
+N_FEAT = 4
+
+
+def _engine(batch):
+    """Deterministic per-row transform: row i of the output identifies
+    row i of the input exactly."""
+    return batch.astype(np.int64) * 10 + batch.sum(axis=1, keepdims=True)
+
+
+def test_lone_straggler_flushes_at_deadline():
+    deadline = 0.15
+    with MicroBatcher(_engine, microbatch=8, deadline_s=deadline,
+                      n_features=N_FEAT) as mb:
+        h = mb.submit(np.arange(N_FEAT))
+        out = h.result(timeout=5.0)
+    # completed within deadline + epsilon (engine is ~free; epsilon
+    # absorbs thread scheduling jitter on loaded CI hosts) ...
+    assert h.latency_s <= deadline + 0.35
+    # ... and it actually WAITED for the flush deadline rather than
+    # flushing a 1/8 batch immediately
+    assert h.latency_s >= deadline * 0.5
+    assert np.array_equal(out, _engine(np.arange(N_FEAT)[None])[0])
+    assert len(mb.flushes) == 1
+    assert mb.flushes[0].fill == 1 and mb.flushes[0].deadline_hit
+
+
+def test_full_microbatch_flushes_immediately():
+    deadline = 30.0           # long enough that a deadline wait = hang
+    M = 8
+    rows = [np.full(N_FEAT, i, np.int32) for i in range(M)]
+    t0 = time.monotonic()
+    with MicroBatcher(_engine, microbatch=M, deadline_s=deadline,
+                      n_features=N_FEAT) as mb:
+        handles = [mb.submit(r) for r in rows]
+        outs = [h.result(timeout=5.0) for h in handles]
+    assert time.monotonic() - t0 < 5.0           # no deadline wait
+    assert max(h.latency_s for h in handles) < 5.0
+    full = [f for f in mb.flushes if f.fill == M]
+    assert full and not full[0].deadline_hit
+    for r, o in zip(rows, outs):
+        assert np.array_equal(o, _engine(r[None])[0])
+
+
+def test_partial_flush_routes_rows_and_discards_padding():
+    """3 requests into a 8-slot batch: every handle gets ITS row; the 5
+    padding rows never leak into results."""
+    rows = [np.full(N_FEAT, 7 * i + 1, np.int32) for i in range(3)]
+    with MicroBatcher(_engine, microbatch=8, deadline_s=0.05,
+                      n_features=N_FEAT) as mb:
+        handles = [mb.submit(r) for r in rows]
+        outs = [h.result(timeout=5.0) for h in handles]
+    for r, o in zip(rows, outs):
+        assert np.array_equal(o, _engine(r[None])[0])
+
+
+def test_backlog_drains_into_full_batches():
+    """When requests are already queued past the deadline, the flush
+    takes a FULL batch instead of degenerating to fill=1 (the failure
+    mode of deadline-only collection under load)."""
+    M = 16
+    done = []
+    import threading
+    gate = threading.Event()
+
+    def slow_engine(batch):
+        gate.wait(2.0)       # hold the first flush until the queue fills
+        done.append(len(batch))
+        return _engine(batch)
+
+    with MicroBatcher(slow_engine, microbatch=M, deadline_s=0.01,
+                      n_features=N_FEAT) as mb:
+        handles = [mb.submit(np.full(N_FEAT, i, np.int32))
+                   for i in range(2 * M)]
+        gate.set()
+        for h in handles:
+            h.result(timeout=10.0)
+    fills = [f.fill for f in mb.flushes]
+    # first flush may be small (raced the submitter), but the backlog
+    # must coalesce: far fewer flushes than requests, and at least one
+    # full batch
+    assert len(fills) <= M
+    assert max(fills) == M
+
+
+def test_stop_drains_pending_requests():
+    """stop() flushes what is queued — no request is ever dropped, and
+    the drain flush is labelled "stop", NOT counted as a deadline
+    flush (it would inflate the benchmark's deadline telemetry)."""
+    mb = MicroBatcher(_engine, microbatch=8, deadline_s=60.0,
+                      n_features=N_FEAT).start()
+    h = mb.submit(np.arange(N_FEAT))
+    mb.stop()
+    assert np.array_equal(h.result(timeout=1.0),
+                          _engine(np.arange(N_FEAT)[None])[0])
+    assert [f.cause for f in mb.flushes] == ["stop"]
+    assert not mb.flushes[0].deadline_hit
+    with pytest.raises(RuntimeError):
+        mb.submit(np.arange(N_FEAT))
+
+
+def test_engine_failure_propagates_to_handles():
+    """An engine exception fails THAT batch's handles (result()
+    re-raises with the cause) and leaves the batcher serving."""
+    state = {"fail": True}
+
+    def flaky(batch):
+        if state["fail"]:
+            raise ValueError("boom")
+        return _engine(batch)
+
+    with MicroBatcher(flaky, microbatch=4, deadline_s=0.02,
+                      n_features=N_FEAT) as mb:
+        bad = mb.submit(np.arange(N_FEAT))
+        with pytest.raises(RuntimeError) as err:
+            bad.result(timeout=5.0)
+        assert isinstance(err.value.__cause__, ValueError)
+        state["fail"] = False
+        good = mb.submit(np.arange(N_FEAT))
+        assert np.array_equal(good.result(timeout=5.0),
+                              _engine(np.arange(N_FEAT)[None])[0])
+
+
+def test_replay_open_loop_serves_everything():
+    rows = np.tile(np.arange(N_FEAT, dtype=np.int32), (40, 1))
+    rows += np.arange(40, dtype=np.int32)[:, None]
+    with MicroBatcher(_engine, microbatch=8, deadline_s=0.005,
+                      n_features=N_FEAT) as mb:
+        handles = replay_open_loop(mb, rows, rate=5000.0, seed=0)
+    assert len(handles) == 40
+    assert all(h.done for h in handles)
+    for r, h in zip(rows, handles):
+        assert np.array_equal(h.result(), _engine(r[None])[0])
+    assert sum(f.fill for f in mb.flushes) == 40

@@ -169,3 +169,43 @@ def test_fused_vmem_accounting():
 def test_pack_index_convention_stable():
     codes = jnp.asarray([[1, 2, 3]])
     assert int(lg_ref.pack_index(codes, 2)[0]) == 1 + (2 << 2) + (3 << 4)
+
+
+def test_routing_matrices_cached_at_synthesis(monkeypatch):
+    """Synthesis fills LayerTables.routing; tracing the fused network —
+    even twice, with different static config — never rebuilds it."""
+    spec = LD.ModelSpec(name="t", in_features=16, widths=(24, 12, 5),
+                        bits=2, fan_in=3, degree=1, adder_width=2)
+    tables = _synth(spec)
+    assert all(t.routing is not None for t in tables)
+    assert tables[0].routing.shape == (16, 24 * 2)
+
+    calls = []
+    real = lg_ops.routing_matrix
+
+    def counting(*a, **k):
+        calls.append(1)
+        return real(*a, **k)
+
+    monkeypatch.setattr(lg_ops, "routing_matrix", counting)
+    codes = _codes(spec, 24)
+    want = _ref_chain(tables, codes)
+    # two separate traces (block_b is a static arg -> distinct traces)
+    a = lg_ops.lut_network_fused(tables, codes, block_b=16)
+    b = lg_ops.lut_network_fused(tables, codes, block_b=8)
+    assert calls == []
+    assert np.array_equal(np.asarray(a), np.asarray(want))
+    assert np.array_equal(np.asarray(b), np.asarray(want))
+
+
+def test_fused_falls_back_without_routing_cache():
+    """Hand-built tables (routing=None) still route exactly — the
+    matrix is derived from conn at trace time as before."""
+    import dataclasses
+    spec = LD.ModelSpec(name="t", in_features=16, widths=(12, 5), bits=2,
+                        fan_in=3, degree=1, adder_width=2)
+    tables = [dataclasses.replace(t, routing=None) for t in _synth(spec)]
+    codes = _codes(spec, 21)
+    got = lg_ops.lut_network_fused(tables, codes)
+    assert np.array_equal(np.asarray(got),
+                          np.asarray(_ref_chain(tables, codes)))

@@ -1,8 +1,9 @@
 """Expert-parallel MoE dispatch (shard_map) — numerical equivalence
 against the GSPMD capacity path, outputs AND gradients.
 
-Runs in a subprocess because it needs 4 placeholder devices while the
-rest of the suite must see the real single CPU device.
+Runs in a subprocess so its 4-device mesh and XLA flags stay isolated
+from the main test process (which pins its own virtual-device count in
+conftest.py before jax initialises).
 """
 import subprocess
 import sys

@@ -31,16 +31,26 @@ def test_choose_spec_stacked_params_shift(mesh):
 
 def test_choose_spec_divisibility_fallback():
     # force a 2-way model axis so odd dims cannot shard
-    devs = jax.devices()
-    if len(devs) < 2:
-        # simulate with the rule helpers directly
-        class FakeMesh:
-            shape = {"data": 2, "model": 2}
-            axis_names = ("data", "model")
-        m = FakeMesh()
-        spec = SH.choose_spec("attn/wq", (64, 7, 8), m, SH.lm_rules())
-        # 7 heads % 2 != 0 -> falls through to replicate candidate
-        assert spec == P()
+    class FakeMesh:
+        shape = {"data": 2, "model": 2}
+        axis_names = ("data", "model")
+
+    spec = SH.choose_spec("attn/wq", (64, 7, 8), FakeMesh(), SH.lm_rules())
+    # 7 heads % 2 != 0 -> falls through to replicate candidate
+    assert spec == P()
+    if len(jax.devices()) >= 4:   # same outcome on a real 2x2 mesh
+        m = jax.make_mesh((2, 2), ("data", "model"))
+        assert SH.choose_spec("attn/wq", (64, 7, 8), m, SH.lm_rules()) == P()
+
+
+def test_serving_mesh_shapes():
+    """1-D data mesh over the first n virtual devices (conftest forces
+    4 host devices so the sharded serving path is CI-testable)."""
+    m = SH.serving_mesh(2)
+    assert m.axis_names == ("data",) and m.shape["data"] == 2
+    assert SH.batch_spec(m) == P("data")
+    with pytest.raises(ValueError):
+        SH.serving_mesh(len(jax.devices()) + 1)
 
 
 def test_default_rule_is_replicate(mesh):
