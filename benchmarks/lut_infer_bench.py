@@ -15,7 +15,15 @@ Four execution strategies over identical synthesised networks:
 plus a ``serving`` section: a real Poisson request stream through the
 threaded deadline-flush microbatcher (launch/batching.py), reporting
 p50/p95/p99 request latency, the straggler queueing-delay p99, and
-whether p99 lands under the deadline SLO (deadline + 2 kernel times).
+whether p99 lands under the deadline SLO (deadline + 2 kernel times);
+
+plus an ``artifact`` section (schema v3): the compile-once ledger —
+how long ``build_lut_model`` takes from scratch (train + synthesise)
+vs COLD-LOADING the same network from a content-addressed
+repro/artifact directory (the deployment path; tracked speedup must
+stay >= 10x), and a hot-swap drill through launch/registry under live
+Poisson load recording the routing blackout and the dropped-request
+count (contractually zero).
 
 On this CPU container all kernels run in Pallas interpret mode and the
 "devices" are virtual host devices (the module forces
@@ -27,13 +35,17 @@ benchmarks.lut_infer_bench --json``) writes ``BENCH_lut_infer.json``
 at the repo root in a stable schema (pinned by
 tests/test_bench_schema.py):
 
-    {"bench": "lut_infer", "schema_version": 2, "backend": ...,
+    {"bench": "lut_infer", "schema_version": 3, "backend": ...,
      "configs": [{name, batch, widths, ..., fused_packed_ms,
                   sharded_devices, sharded_fused_ms,
                   samples_per_sec_sharded, speedup_sharded_vs_fused}],
      "serving": {microbatch, deadline_ms, rate, requests, shards,
                  p50_ms, p95_ms, p99_ms, straggler_p99_ms,
-                 deadline_slo_ms, p99_under_deadline, ...}}
+                 deadline_slo_ms, p99_under_deadline, ...},
+     "artifact": {build_from_scratch_ms, save_ms, cold_load_ms,
+                  speedup_cold_load_vs_build, artifact_slab_bytes,
+                  swap_requests, swap_dropped, swap_blackout_ms,
+                  swap_warm_ms, ...}}
 
 ``tokens_per_sec_fused`` is an intentional alias of
 ``samples_per_sec_fused`` (one classified sample = one token of
@@ -43,6 +55,10 @@ from __future__ import annotations
 
 import json
 import pathlib
+import shutil
+import tempfile
+import threading
+import time
 
 # virtual host devices for the sharded series — a no-op when jax is
 # already initialised (benchmarks/run.py sets the flag first)
@@ -195,11 +211,96 @@ def _bench_serving(fast: bool):
     }
 
 
+def _bench_artifact(fast: bool):
+    """Compile-once ledger + hot-swap drill.
+
+    build_from_scratch_ms is what every process start PAID before the
+    artifact store existed (train + synthesise via the launcher's
+    canonical assembly); cold_load_ms is the deployment path (hash-
+    verified memmap load, no trainer).  The swap drill routes a live
+    Poisson stream through launch/registry.ModelRegistry and replaces
+    the serving tables mid-stream: dropped must be 0 and the blackout
+    is the routing-lock hold, not an engine warm-up."""
+    from repro.artifact import load_artifact, save_artifact
+    from repro.launch.batching import replay_open_loop
+    from repro.launch.registry import ModelRegistry
+    from repro.launch.serve import build_lut_model
+
+    train_steps = 40 if fast else 150
+    t0 = time.perf_counter()
+    spec, tables, _ = build_lut_model(train_steps)
+    build_s = time.perf_counter() - t0
+
+    tmp = tempfile.mkdtemp(prefix="lut-bench-artifacts-")
+    t0 = time.perf_counter()
+    path = save_artifact(tmp, tables, spec=spec,
+                         provenance={"train_steps": train_steps})
+    save_s = time.perf_counter() - t0
+    loads = []
+    for _ in range(5):
+        t0 = time.perf_counter()
+        art = load_artifact(path)          # verify=True: hash-checked
+        loads.append(time.perf_counter() - t0)
+    cold_load_s = float(np.median(loads))
+
+    # a benchmark of a wrong loader is worthless
+    codes = jax.random.randint(jax.random.key(3),
+                               (256, spec.in_features), 0, 4, jnp.int32)
+    want = np.asarray(lg_ops.lut_network_fused(tables, codes, block_b=256))
+    got = np.asarray(lg_ops.lut_network_fused(art.tables, codes,
+                                              block_b=256))
+    assert np.array_equal(want, got), "artifact round-trip not bit-exact"
+
+    # hot-swap drill: stream long enough that the new engine's
+    # trace+compile warm-up ENDS while requests still arrive
+    requests = 256 if fast else 1024
+    rate = 500.0 if fast else 1000.0
+    swap_tables = LS.synthesise(
+        LD.init_model(jax.random.key(1), spec), spec)
+    rows = np.asarray(jax.random.randint(
+        jax.random.key(4), (requests, spec.in_features), 0, 4), np.int32)
+    with ModelRegistry(microbatch=64, deadline_s=2e-3) as reg:
+        reg.register("m", art)
+        handles: list = []
+        feeder = threading.Thread(target=lambda: handles.extend(
+            replay_open_loop(reg.client("m"), rows, rate, seed=0)))
+        t_span = time.monotonic()
+        feeder.start()
+        time.sleep(0.25 * requests / rate)
+        rep = reg.swap("m", swap_tables)
+        feeder.join()
+        span = time.monotonic() - t_span
+    shutil.rmtree(tmp, ignore_errors=True)
+    # two DISTINCT contract violations: a dropped request never
+    # completed at all; a failed one completed with an engine error
+    dropped = requests - sum(1 for h in handles if h.done)
+    failed = sum(1 for h in handles if h.failed)
+
+    return {
+        "train_steps": train_steps,
+        "build_from_scratch_ms": round(build_s * 1e3, 1),
+        "save_ms": round(save_s * 1e3, 2),
+        "cold_load_ms": round(cold_load_s * 1e3, 2),
+        "speedup_cold_load_vs_build": round(build_s / cold_load_s, 1),
+        "artifact_slab_bytes": int(art.manifest["total_slab_bytes"]),
+        "table_bytes_packed": LS.network_table_bytes(tables),
+        "swap_requests": requests,
+        "swap_rate": rate,
+        "swap_dropped": int(dropped),
+        "swap_failed": int(failed),
+        "swap_blackout_ms": round(rep.blackout_s * 1e3, 4),
+        "swap_warm_ms": round(rep.warm_s * 1e3, 1),
+        "swap_drained_on_old": int(rep.drained_requests),
+        "swap_throughput_req_s": round(len(handles) / span),
+    }
+
+
 def run(fast: bool = False, write_json: bool = False):
     batch = 1024 if fast else 4096
     iters = 3 if fast else 7
     results = [_bench_config(n, kw, batch, iters) for n, kw in CONFIGS]
     serving = _bench_serving(fast)
+    artifact = _bench_artifact(fast)
 
     cols = ["config", "B", "seed(i32)ms", "per-layer(u8)ms",
             "fused(u8)ms", f"sharded-{results[0]['sharded_devices']}d-ms",
@@ -217,15 +318,24 @@ def run(fast: bool = False, write_json: bool = False):
         [[serving["microbatch"], serving["deadline_ms"], serving["rate"],
           serving["p50_ms"], serving["p99_ms"],
           serving["straggler_p99_ms"], serving["p99_under_deadline"]]])
+    print_table(
+        "artifact store: compile-once cold load + hot-swap blackout",
+        ["build_ms", "cold_load_ms", "speedup", "slab_bytes",
+         "swap_dropped", "blackout_ms", "warm_ms"],
+        [[artifact["build_from_scratch_ms"], artifact["cold_load_ms"],
+          f'{artifact["speedup_cold_load_vs_build"]}x',
+          artifact["artifact_slab_bytes"], artifact["swap_dropped"],
+          artifact["swap_blackout_ms"], artifact["swap_warm_ms"]]])
 
     payload = {
         "bench": "lut_infer",
-        "schema_version": 2,
+        "schema_version": 3,
         "backend": jax.default_backend(),
         "interpret": jax.default_backend() != "tpu",
         "fast": fast,
         "configs": results,
         "serving": serving,
+        "artifact": artifact,
     }
     if write_json:
         JSON_PATH.write_text(json.dumps(payload, indent=2) + "\n")

@@ -1,106 +1,168 @@
-"""Async microbatched LUT-mode serving — the deployment artefact.
+"""Multi-model LUT serving: compile-once artifacts + hot-swap registry.
 
-Trains and synthesises a LUT-DNN, then serves a REAL request stream
-through the fused lut_gather engine: the whole network's packed uint8
-truth tables execute in a single pallas_call per microbatch (one HBM
-read of inputs, one write of outputs), the TPU analogue of the paper's
-FPGA bitstream.
+The deployment story in three stages, mirroring the paper's synthesis
+-> bitstream -> serve split:
 
-Serving loop mechanics (all real threads and real clocks — the
-simulated open-loop arrival clock of PR 1 is gone):
-  * a submitter thread offers requests (single samples) as a Poisson
-    process at --rate req/s (launch/batching.replay_open_loop);
-  * the batcher thread (launch/batching.MicroBatcher) flushes a
-    microbatch when it is FULL or when the oldest pending request has
-    waited --deadline-ms — a lone straggler completes within
-    deadline + one kernel time, a full batch never waits;
-  * the flush pads the tail to a fixed shape so the jitted engine
-    never retraces; per-request latency = queueing delay + kernel time.
+  1. **compile once** — each model variant is trained + synthesised to
+     truth tables ONCE and persisted as a content-addressed artifact
+     (repro/artifact: packed table slabs, cached routing matrices,
+     quant/spec metadata, per-slab SHA-256);
+  2. **serve many** — every later process start COLD-LOADS the
+     artifacts (memmap -> jnp, milliseconds, no trainer import) and
+     registers them in a launch/registry.ModelRegistry: one fused
+     lut_gather engine + one deadline-flush MicroBatcher per model id,
+     all serving concurrently from one process;
+  3. **swap live** — a new artifact version warms off-path and replaces
+     its model id atomically: in-flight requests drain on the old
+     tables, racers re-route, ZERO requests drop, and the measured
+     blackout is the microseconds the routing dict swap holds a lock.
 
-Sharded serving
----------------
---shards N runs the fused engine under ``shard_map`` on a 1-D data
-mesh over N devices (parallel/sharding.serving_mesh): the microbatch
-is sharded over the batch axis, every table slab is replicated — LUT
-tables are tiny by construction, so scaling the serving path is pure
-data parallelism with zero cross-device traffic.  The sharded path is
-bit-exact against the single-device oracle (tests/test_lut_sharded.py).
-On CPU, expose virtual devices before jax initialises:
+Usage — compile-once -> serve-many
+----------------------------------
+First run trains both variants and writes artifacts; every later run
+with the same ``--artifact-dir`` skips training entirely:
+
+    PYTHONPATH=src python examples/lut_serve.py \
+        --artifact-dir /tmp/lut-artifacts --train-steps 150
+
+    # later (cold start, no retraining — loads in milliseconds):
+    PYTHONPATH=src python examples/lut_serve.py \
+        --artifact-dir /tmp/lut-artifacts
+
+Sharded serving: ``--shards N`` runs every engine under shard_map on a
+1-D data mesh (batch sharded, tables replicated — bit-exact vs the
+single-device oracle, tests/test_lut_sharded.py).  On CPU expose
+virtual devices first:
 
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
-    PYTHONPATH=src python examples/lut_serve.py --shards 4 \
-        --microbatch 512 --requests 4096 --rate 200000 --deadline-ms 2
+    PYTHONPATH=src python examples/lut_serve.py --shards 4
 
 Knobs: --microbatch (flush size = engine batch), --deadline-ms (max
-straggler queueing delay), --shards (mesh width), --rate (offered
-load).  Reports p50/p95/p99 request latency, sustained throughput,
-flush telemetry, accuracy, a fused-vs-per-layer comparison, and the
-modeled FPGA deployment cost.
+straggler queueing delay), --rate (offered Poisson load per model),
+--requests (stream length per model).  Reports per-model p50/p95/p99
+latency, throughput, accuracy, and the hot-swap blackout/drop count.
 """
 import argparse
+import os
+import tempfile
+import threading
 import time
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import lut_synth as LS
+from repro.artifact import find_artifacts, load_artifact, save_artifact
 from repro.core.cost_model import model_cost
-from repro.kernels.lut_gather import ops as lg_ops
-from repro.launch.serve import build_lut_model, drive_lut_serving
+from repro.launch.batching import latency_percentiles_ms, replay_open_loop
+from repro.launch.registry import ModelRegistry
+from repro.launch.serve import build_lut_model, lut_accuracy, lut_dataset
 from repro.parallel.sharding import serving_mesh
+
+# the fleet: one registry, several architectures + a v2 of the first
+# (the hot-swap payload).  kw feeds launch/serve.build_lut_model.
+MODEL_DEFS = {
+    "jsc-base":    dict(fan_in=3, adder_width=2, seed=0),
+    "jsc-lite":    dict(fan_in=2, adder_width=1, seed=0),
+    "jsc-base-v2": dict(fan_in=3, adder_width=2, seed=99),
+}
+
+
+def compile_or_load(art_dir: str, train_steps: int):
+    """Stage 1+2: per model id, cold-load its artifact when present,
+    otherwise train-synthesise-save then load THROUGH the artifact (so
+    every serving path below runs off the deployable format)."""
+    arts = {}
+    for mid, kw in MODEL_DEFS.items():
+        subdir = os.path.join(art_dir, mid)
+        t0 = time.monotonic()
+        if find_artifacts(subdir):
+            art = load_artifact(subdir)
+            print(f"  {mid}: cold-loaded {art.artifact_id[:12]} in "
+                  f"{(time.monotonic() - t0) * 1e3:.1f} ms (no training)")
+        else:
+            spec, tables, _ = build_lut_model(train_steps, **kw)
+            path = save_artifact(subdir, tables, name=mid, spec=spec,
+                                 provenance=dict(kw,
+                                                 train_steps=train_steps))
+            art = load_artifact(path)
+            print(f"  {mid}: trained+compiled in "
+                  f"{time.monotonic() - t0:.1f} s -> "
+                  f"{art.artifact_id[:12]} "
+                  f"(modeled FPGA: {model_cost(spec)})")
+        arts[mid] = art
+    return arts
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--microbatch", type=int, default=512)
-    ap.add_argument("--requests", type=int, default=4096)
-    ap.add_argument("--rate", type=float, default=200_000.0,
-                    help="offered Poisson load (req/s, real clock)")
-    ap.add_argument("--deadline-ms", type=float, default=2.0,
-                    help="max queueing delay before a partial flush")
-    ap.add_argument("--shards", type=int, default=0,
-                    help="shard_map the engine over N devices "
-                         "(0 = single-device)")
+    ap.add_argument("--artifact-dir", default=None,
+                    help="artifact store (default: fresh tempdir, i.e. "
+                         "compile on every run)")
     ap.add_argument("--train-steps", type=int, default=150)
-    ap.add_argument("--engine", choices=("fused", "per-layer"),
-                    default="fused")
+    ap.add_argument("--microbatch", type=int, default=256)
+    ap.add_argument("--requests", type=int, default=2048,
+                    help="stream length per served model")
+    ap.add_argument("--rate", type=float, default=20_000.0,
+                    help="offered Poisson load per model (req/s)")
+    ap.add_argument("--deadline-ms", type=float, default=2.0)
+    ap.add_argument("--shards", type=int, default=0,
+                    help="shard_map every engine over N devices")
     args = ap.parse_args()
 
-    spec, tables, data = build_lut_model(args.train_steps)
-    print(f"serving {spec.name}: {spec.table_entries} table entries, "
-          f"{LS.network_table_bytes(tables)} B packed "
-          f"(fits VMEM: {lg_ops.can_fuse(tables, args.microbatch)}); "
-          f"modeled FPGA: {model_cost(spec)}")
+    art_dir = args.artifact_dir or tempfile.mkdtemp(prefix="lut-artifacts-")
+    print(f"artifact store: {art_dir}")
+    arts = compile_or_load(art_dir, args.train_steps)
+
+    data = lut_dataset(seed=0)
+    served_ids = ["jsc-base", "jsc-lite"]
+    rng = np.random.default_rng(0)
+    streams = {}
+    for mid in served_ids:
+        fq = arts[mid].spec.layer_specs()[0].in_quant
+        idx = rng.integers(0, data["test"]["x"].shape[0], args.requests)
+        streams[mid] = (idx, np.asarray(fq.to_code(fq.clip(
+            jnp.asarray(np.asarray(data["test"]["x"])[idx])))))
 
     mesh = serving_mesh(args.shards) if args.shards else None
-    serve_fn = lg_ops.make_network_fn(
-        tables, fused=(args.engine == "fused"),
-        block_b=args.microbatch, donate=True, mesh=mesh)
+    with ModelRegistry(args.microbatch, args.deadline_ms / 1e3,
+                       mesh=mesh) as reg:
+        for mid in served_ids:
+            reg.register(mid, arts[mid])
+        print(f"registry serving {reg.model_ids()} "
+              f"(shards={args.shards or 1})")
 
-    drive_lut_serving(
-        serve_fn, spec, data, requests=args.requests,
-        microbatch=args.microbatch, deadline_ms=args.deadline_ms,
-        rate=args.rate,
-        header=f"engine={args.engine} shards={args.shards or 1} "
-               f"microbatch={args.microbatch} deadline={args.deadline_ms}ms "
-               f"rate={args.rate:,.0f}/s:")
+        handles = {mid: [] for mid in served_ids}
+        t0 = time.monotonic()
+        feeders = [threading.Thread(
+            target=lambda m=mid: handles[m].extend(replay_open_loop(
+                reg.client(m), streams[m][1], args.rate)))
+            for mid in served_ids]
+        for f in feeders:
+            f.start()
+        # stage 3: hot-swap jsc-base to v2 mid-stream, under full load
+        # on BOTH models
+        time.sleep(0.4 * args.requests / args.rate)
+        rep = reg.swap("jsc-base", arts["jsc-base-v2"])
+        for f in feeders:
+            f.join()
+        span = time.monotonic() - t0
 
-    # fused-vs-per-layer on the same microbatch, steady state
-    codes = jnp.asarray(np.zeros((args.microbatch, spec.in_features),
-                                 np.int32))
-    for label, fn in [("fused", lg_ops.make_network_fn(
-                          tables, fused=True, block_b=args.microbatch)),
-                      ("per-layer", lg_ops.make_network_fn(
-                          tables, fused=False))]:
-        fn(codes).block_until_ready()
-        ts = []
-        for _ in range(5):
-            t0 = time.perf_counter()
-            fn(codes).block_until_ready()
-            ts.append(time.perf_counter() - t0)
-        ms = np.median(ts) * 1e3
-        print(f"  {label}: {ms:.2f} ms/microbatch "
-              f"({args.microbatch / np.median(ts):,.0f} samples/s)")
+        print(f"hot-swap jsc-base v{rep.old_version}->v{rep.new_version}: "
+              f"warm {rep.warm_s * 1e3:.1f} ms off-path, blackout "
+              f"{rep.blackout_s * 1e6:.1f} us, "
+              f"{rep.drained_requests} drained on old engine")
+        for mid in served_ids:
+            hs = handles[mid]
+            failed = sum(1 for h in hs if h.failed)
+            dropped = args.requests - len(hs)
+            p50, p95, p99 = latency_percentiles_ms(hs)
+            acc = lut_accuracy(hs, data, streams[mid][0])
+            print(f"  {mid}: {len(hs)}/{args.requests} served, "
+                  f"{failed} failed, {dropped} dropped | p50 {p50:.2f} / "
+                  f"p95 {p95:.2f} / p99 {p99:.2f} ms | acc {acc:.4f}")
+        print(f"aggregate throughput "
+              f"{sum(len(h) for h in handles.values()) / span:,.0f} req/s "
+              f"across {len(served_ids)} concurrent models")
     print("(CPU interpret-mode numbers; TPU deploys the same kernels "
           "with VMEM-resident tables — see kernels/lut_gather)")
 

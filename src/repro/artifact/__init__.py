@@ -1,0 +1,3 @@
+from repro.artifact.store import (Artifact, ArtifactError, SCHEMA_VERSION,
+                                  find_artifacts, load_artifact,
+                                  save_artifact)

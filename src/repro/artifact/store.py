@@ -1,0 +1,350 @@
+"""Content-addressed on-disk artifacts for synthesised LUT networks.
+
+The paper's handoff unit between training and hardware is the frozen
+table set — truth tables + connectivity are a *bitstream*, not a model
+checkpoint.  This module is the software analogue: ``save_artifact``
+serialises a synthesised network (``List[core.lut_synth.LayerTables]``:
+packed table slabs, cached routing matrices, quant/spec/connectivity
+metadata) into a versioned directory; ``load_artifact`` reconstructs it
+WITHOUT training, so a serving process cold-starts in milliseconds
+instead of re-running QAT + synthesis (the compile-once → serve-many
+split the launch/registry multi-model path is built on).
+
+Layout (one directory per artifact, name suffixed with the content
+hash, written atomically via checkpoint.atomic_dir):
+
+    <out_dir>/<name>-<hash12>/
+      manifest.json      # schema version, per-layer + per-slab metadata
+      slabs.bin          # every array back to back, 64-byte aligned
+
+Design points
+-------------
+* **Content-addressed**: every slab carries its SHA-256 in the manifest
+  and the artifact id is the SHA-256 of the canonical (layer, slab)
+  metadata — two identical synthesis runs produce the same id, and a
+  flipped byte anywhere in ``slabs.bin`` is rejected at load
+  (``verify=True``).  The hash/IO primitives are shared with the
+  training checkpointer (repro/checkpoint).
+* **Zero-copy load**: ``slabs.bin`` is opened as ONE numpy memmap and
+  each array is a 64-byte-aligned view into it, handed to
+  ``jnp.asarray`` — no per-array file reads, no Python-side copies for
+  ``raw``-encoded slabs.  Loaded tables run through
+  ``lut_network_fused`` / ``lut_network_fused_sharded`` bit-exactly vs
+  in-memory synthesis (tests/test_artifact.py).
+* **int4 nibble packing** (``int4=True``): table slabs whose output
+  codes fit in 4 bits (every beta<=1 and beta<=2-with-adder sub-table,
+  plus narrow adder tables) are stored two codes per byte and unpacked
+  to uint8 at load — halving the on-disk footprint of exactly the slabs
+  the ROADMAP's VMEM follow-up targets.  The manifest records which
+  slabs are nibble-packed (``notes.int4``) so the in-kernel unpack path
+  can later consume the same format directly.
+* **Versioned**: ``schema_version`` gates the reader — a manifest from
+  a FUTURE schema is refused with a clear error instead of being
+  misparsed; truncated slab files are detected before any array is
+  touched.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import atomic_dir, sha256_bytes, sha256_file
+from repro.core.lut_synth import LayerTables
+from repro.core.lutdnn import ModelSpec
+from repro.core.quant import QuantSpec
+
+FORMAT = "lut-artifact"
+SCHEMA_VERSION = 1
+MANIFEST = "manifest.json"
+SLAB_FILE = "slabs.bin"
+_ALIGN = 64
+
+INT4_NOTE = ("slabs with encoding=int4 hold two 4-bit codes per byte "
+             "(low nibble first); loaders unpack to uint8 today — the "
+             "ROADMAP VMEM follow-up is an in-kernel nibble unpack so "
+             "the packed form stays resident end-to-end")
+
+
+class ArtifactError(RuntimeError):
+    """Raised for unreadable, corrupt, or incompatible artifacts."""
+
+
+@dataclasses.dataclass
+class Artifact:
+    """A loaded artifact: reconstructed tables + their manifest."""
+
+    path: str
+    manifest: Dict[str, Any]
+    tables: List[LayerTables]
+
+    @property
+    def artifact_id(self) -> str:
+        return self.manifest["artifact_id"]
+
+    @property
+    def n_in(self) -> int:
+        """Network input width (the serving-side batcher feature count)."""
+        return int(self.manifest["n_in"])
+
+    @property
+    def spec(self) -> Optional[ModelSpec]:
+        """The training-time ModelSpec, when the writer recorded one."""
+        d = self.manifest.get("spec")
+        if d is None:
+            return None
+        kw = dict(d)
+        for k in ("widths", "hidden"):
+            if k in kw and kw[k] is not None:
+                kw[k] = tuple(kw[k])
+        return ModelSpec(**kw)
+
+
+# ---------------------------------------------------------------------------
+# int4 nibble packing (two codes per byte, low nibble first)
+# ---------------------------------------------------------------------------
+
+def _pack_int4(arr: np.ndarray) -> np.ndarray:
+    flat = np.ascontiguousarray(arr, np.uint8).reshape(-1)
+    if flat.size % 2:
+        flat = np.concatenate([flat, np.zeros(1, np.uint8)])
+    return (flat[0::2] | (flat[1::2] << 4)).astype(np.uint8)
+
+
+def _unpack_int4(packed: np.ndarray, shape, dtype) -> np.ndarray:
+    out = np.empty(packed.size * 2, np.uint8)
+    out[0::2] = packed & 0xF
+    out[1::2] = packed >> 4
+    n = int(np.prod(shape, dtype=np.int64))
+    return out[:n].reshape(shape).astype(dtype)
+
+
+def _code_bits(t: LayerTables, which: str) -> int:
+    """Bit width of the codes a table slab stores (decides int4
+    eligibility from metadata, never from a data scan)."""
+    if which == "sub_table":
+        return t.sub_bits if t.adder_width > 1 else \
+            (16 if t.is_output else t.out_bits)
+    return 16 if t.is_output else t.out_bits          # add_table
+
+
+# ---------------------------------------------------------------------------
+# writer
+# ---------------------------------------------------------------------------
+
+def _quant_meta(q: QuantSpec) -> Dict[str, Any]:
+    return {"bits": int(q.bits), "low": float(q.low), "high": float(q.high)}
+
+
+def _spec_meta(spec: ModelSpec) -> Dict[str, Any]:
+    d = dataclasses.asdict(spec)
+    d["widths"] = list(d["widths"])
+    d["hidden"] = list(d["hidden"])
+    return d
+
+
+def _infer_n_in(tables: List[LayerTables]) -> int:
+    t0 = tables[0]
+    if t0.routing is not None:
+        return int(t0.routing.shape[0])
+    return int(np.asarray(t0.conn).max()) + 1
+
+
+def save_artifact(out_dir: str, tables: List[LayerTables], *,
+                  name: str = "lut", spec: Optional[ModelSpec] = None,
+                  provenance: Optional[Dict[str, Any]] = None,
+                  int4: bool = True) -> str:
+    """Serialise a synthesised network under ``out_dir``; returns the
+    artifact directory (``<out_dir>/<name>-<hash12>``).  ``spec`` adds
+    the training ModelSpec + a core/cost_model summary to the manifest;
+    ``provenance`` is free-form (train steps, dataset, seed, ...).
+    ``int4=False`` forces raw byte slabs everywhere (pure zero-copy
+    loads, ~2x bigger tables on disk)."""
+    layers_meta: List[Dict[str, Any]] = []
+    slabs_meta: List[Dict[str, Any]] = []
+    payloads: List[np.ndarray] = []
+    offset = 0
+    any_int4 = False
+
+    def add_slab(slab_name: str, arr: np.ndarray, encoding: str,
+                 logical_shape, logical_dtype) -> str:
+        nonlocal offset, any_int4
+        arr = np.ascontiguousarray(arr)
+        pad = (-offset) % _ALIGN
+        offset += pad
+        payloads.append(np.zeros(pad, np.uint8))
+        slabs_meta.append({
+            "name": slab_name,
+            "offset": offset,
+            "nbytes": int(arr.nbytes),
+            "stored_dtype": str(arr.dtype),
+            "encoding": encoding,
+            "shape": [int(s) for s in logical_shape],
+            "dtype": str(np.dtype(logical_dtype)),
+            "sha256": sha256_bytes(arr.tobytes()),
+        })
+        payloads.append(arr)
+        offset += arr.nbytes
+        any_int4 |= encoding == "int4"
+        return slab_name
+
+    for i, t in enumerate(tables):
+        arrays: Dict[str, Optional[str]] = {}
+        named = [("conn", np.asarray(t.conn)),
+                 ("sub_table", np.asarray(t.sub_table)),
+                 ("add_table", np.asarray(t.add_table)),
+                 ("routing", None if t.routing is None
+                  else np.asarray(t.routing))]
+        for key, arr in named:
+            if arr is None:
+                arrays[key] = None
+                continue
+            sname = f"L{i:02d}.{key}"
+            if (int4 and key in ("sub_table", "add_table")
+                    and arr.dtype == np.uint8 and arr.size
+                    and _code_bits(t, key) <= 4):
+                arrays[key] = add_slab(sname, _pack_int4(arr), "int4",
+                                       arr.shape, arr.dtype)
+            else:
+                arrays[key] = add_slab(sname, arr, "raw",
+                                       arr.shape, arr.dtype)
+        layers_meta.append({
+            "in_bits": int(t.in_bits), "sub_bits": int(t.sub_bits),
+            "out_bits": int(t.out_bits), "fan_in": int(t.fan_in),
+            "adder_width": int(t.adder_width),
+            "is_output": bool(t.is_output),
+            "table_dtype": str(np.dtype(t.table_dtype)),
+            "out_quant": _quant_meta(t.out_quant),
+            "sub_quant": _quant_meta(t.sub_quant),
+            "arrays": arrays,
+        })
+
+    content = {"layers": layers_meta, "slabs": slabs_meta}
+    artifact_id = sha256_bytes(
+        json.dumps(content, sort_keys=True).encode())
+
+    cost = None
+    if spec is not None:
+        from repro.core.cost_model import model_cost
+        cost = model_cost(spec).row()
+
+    manifest: Dict[str, Any] = {
+        "format": FORMAT,
+        "schema_version": SCHEMA_VERSION,
+        "artifact_id": artifact_id,
+        "name": name,
+        "n_in": (int(spec.in_features) if spec is not None
+                 else _infer_n_in(tables)),
+        "total_slab_bytes": offset,
+        "spec": None if spec is None else _spec_meta(spec),
+        "cost_model": cost,
+        "provenance": dict(provenance or {},
+                           created_unix=round(time.time(), 3)),
+        "notes": {"int4": INT4_NOTE} if any_int4 else {},
+    }
+    manifest.update(content)
+
+    final = os.path.join(out_dir, f"{name}-{artifact_id[:12]}")
+    with atomic_dir(final) as tmp:
+        with open(os.path.join(tmp, SLAB_FILE), "wb") as f:
+            for arr in payloads:
+                f.write(arr.tobytes())
+        with open(os.path.join(tmp, MANIFEST), "w") as f:
+            json.dump(manifest, f, indent=1)
+    return final
+
+
+# ---------------------------------------------------------------------------
+# loader
+# ---------------------------------------------------------------------------
+
+def find_artifacts(root: str) -> List[str]:
+    """Artifact directories under ``root`` (``root`` itself when it IS
+    one), newest manifest first."""
+    if os.path.isfile(os.path.join(root, MANIFEST)):
+        return [root]
+    if not os.path.isdir(root):
+        return []
+    # a SIGKILLed writer can leave a '*.tmp' staging dir behind (the
+    # atomic_dir cleanup never ran) — never treat it as an artifact
+    hits = [os.path.join(root, d) for d in os.listdir(root)
+            if not d.endswith(".tmp")
+            and os.path.isfile(os.path.join(root, d, MANIFEST))]
+    return sorted(hits, key=lambda p: os.path.getmtime(
+        os.path.join(p, MANIFEST)), reverse=True)
+
+
+def load_artifact(path: str, verify: bool = True) -> Artifact:
+    """Reconstruct ``LayerTables`` from an artifact directory (or a
+    directory of artifacts — newest wins).  ``verify=True`` re-hashes
+    every slab against the manifest before any array is built."""
+    hits = find_artifacts(path)
+    if not hits:
+        raise ArtifactError(f"no artifact manifest under {path!r}")
+    adir = hits[0]
+    try:
+        with open(os.path.join(adir, MANIFEST)) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise ArtifactError(f"unreadable manifest in {adir!r}: {e}") from e
+    if manifest.get("format") != FORMAT:
+        raise ArtifactError(f"{adir!r} is not a {FORMAT} artifact")
+    if manifest.get("schema_version", 0) > SCHEMA_VERSION:
+        raise ArtifactError(
+            f"artifact schema v{manifest['schema_version']} is newer than "
+            f"this reader (v{SCHEMA_VERSION}) — upgrade before loading")
+
+    slab_path = os.path.join(adir, SLAB_FILE)
+    need = int(manifest["total_slab_bytes"])
+    have = os.path.getsize(slab_path) if os.path.exists(slab_path) else -1
+    if have < need:
+        raise ArtifactError(
+            f"truncated slab file {slab_path!r}: {have} bytes on disk, "
+            f"manifest expects {need}")
+    if verify:
+        for s in manifest["slabs"]:
+            got = sha256_file(slab_path, s["offset"], s["nbytes"])
+            if got != s["sha256"]:
+                raise ArtifactError(
+                    f"content hash mismatch for slab {s['name']!r} — "
+                    f"artifact {manifest['artifact_id'][:12]} is corrupt")
+
+    # ONE memmap; every raw slab is an aligned zero-copy view into it
+    mm = np.memmap(slab_path, dtype=np.uint8, mode="r") if need else \
+        np.zeros(0, np.uint8)
+    by_name = {s["name"]: s for s in manifest["slabs"]}
+
+    def array(slab_name: Optional[str]) -> Optional[np.ndarray]:
+        if slab_name is None:
+            return None
+        s = by_name[slab_name]
+        raw = mm[s["offset"]:s["offset"] + s["nbytes"]]
+        if s["encoding"] == "int4":
+            return _unpack_int4(np.asarray(raw), s["shape"], s["dtype"])
+        if s["encoding"] != "raw":
+            raise ArtifactError(
+                f"unknown slab encoding {s['encoding']!r} for "
+                f"{slab_name!r}")
+        return raw.view(s["dtype"]).reshape(s["shape"])
+
+    tables: List[LayerTables] = []
+    for lm in manifest["layers"]:
+        a = lm["arrays"]
+        routing = array(a["routing"])
+        oq = QuantSpec(**lm["out_quant"])
+        tables.append(LayerTables(
+            conn=jnp.asarray(array(a["conn"])),
+            sub_table=jnp.asarray(array(a["sub_table"])),
+            add_table=jnp.asarray(array(a["add_table"])),
+            in_bits=lm["in_bits"], sub_bits=lm["sub_bits"],
+            out_bits=lm["out_bits"], fan_in=lm["fan_in"],
+            adder_width=lm["adder_width"], is_output=lm["is_output"],
+            out_quant=oq, sub_quant=QuantSpec(**lm["sub_quant"]),
+            table_dtype=jnp.dtype(lm["table_dtype"]),
+            routing=None if routing is None else jnp.asarray(routing)))
+    return Artifact(path=adir, manifest=manifest, tables=tables)

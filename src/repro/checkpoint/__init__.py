@@ -1,2 +1,4 @@
 from repro.checkpoint.checkpoint import (save_checkpoint, restore_checkpoint,
-                                         CheckpointManager, AsyncCheckpointer)
+                                         CheckpointManager, AsyncCheckpointer,
+                                         atomic_dir, sha256_bytes,
+                                         sha256_file)

@@ -21,15 +21,74 @@ Design points for 1000+-node deployments:
 """
 from __future__ import annotations
 
+import contextlib
+import hashlib
 import json
 import os
 import shutil
+import tempfile
 import threading
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 import jax
 import ml_dtypes
+
+
+# ---------------------------------------------------------------------------
+# Shared content-hash + atomic-IO helpers (used here and by
+# repro/artifact — the LUT artifact store content-addresses its slabs
+# with the same primitives the checkpointer uses for atomicity).
+# ---------------------------------------------------------------------------
+
+def sha256_bytes(data: bytes) -> str:
+    """Hex SHA-256 of a bytes payload (content-address primitive)."""
+    return hashlib.sha256(data).hexdigest()
+
+
+def sha256_file(path: str, offset: int = 0, nbytes: Optional[int] = None,
+                chunk: int = 8 * 1024 * 1024) -> str:
+    """Hex SHA-256 of ``nbytes`` of ``path`` starting at ``offset``
+    (whole remainder when None), streamed so slabs never need to fit in
+    memory twice."""
+    h = hashlib.sha256()
+    remaining = nbytes
+    with open(path, "rb") as f:
+        f.seek(offset)
+        while remaining is None or remaining > 0:
+            take = chunk if remaining is None else min(chunk, remaining)
+            buf = f.read(take)
+            if not buf:
+                break
+            h.update(buf)
+            if remaining is not None:
+                remaining -= len(buf)
+    return h.hexdigest()
+
+
+@contextlib.contextmanager
+def atomic_dir(final: str) -> Iterator[str]:
+    """Write a directory atomically: yields a unique ``*.tmp`` staging
+    path next to ``final``; on clean exit the staging dir replaces
+    ``final`` in one rename, so a crashed writer never leaves a
+    half-written directory behind.  The staging name is mkdtemp-unique
+    (while keeping the ``.tmp`` suffix directory scanners filter on)
+    so CONCURRENT writers of the same final path — e.g. two serving
+    processes compiling the identical content-addressed artifact —
+    never stage into, or rmtree, each other's half-written dir; last
+    completed rename wins."""
+    parent = os.path.dirname(os.path.abspath(final)) or "."
+    os.makedirs(parent, exist_ok=True)
+    tmp = tempfile.mkdtemp(prefix=os.path.basename(final) + "-",
+                           suffix=".tmp", dir=parent)
+    try:
+        yield tmp
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
 
 # dtypes numpy's savez cannot roundtrip natively: stored as a bit-view
 # of the same width, dtype name preserved in the manifest.
@@ -64,52 +123,48 @@ def save_checkpoint(path: str, step: int, tree: Any,
     """Atomic write of `tree` under ``path/step_{step:08d}``."""
     leaves, treedef, names = _flatten(tree)
     final = os.path.join(path, f"step_{step:08d}")
-    tmp = final + ".tmp"
-    os.makedirs(tmp, exist_ok=True)
+    with atomic_dir(final) as tmp:
+        manifest: Dict[str, Any] = {
+            "step": step,
+            "treedef": str(treedef),
+            "leaves": [],
+        }
+        shard_id, shard_payload, shard_bytes = 0, {}, 0
 
-    manifest: Dict[str, Any] = {
-        "step": step,
-        "treedef": str(treedef),
-        "leaves": [],
-    }
-    shard_id, shard_payload, shard_bytes = 0, {}, 0
+        def flush():
+            nonlocal shard_id, shard_payload, shard_bytes
+            if shard_payload:
+                np.savez(os.path.join(tmp, f"shard_{shard_id:03d}.npz"),
+                         **shard_payload)
+                shard_id += 1
+                shard_payload, shard_bytes = {}, 0
 
-    def flush():
-        nonlocal shard_id, shard_payload, shard_bytes
-        if shard_payload:
-            np.savez(os.path.join(tmp, f"shard_{shard_id:03d}.npz"),
-                     **shard_payload)
-            shard_id += 1
-            shard_payload, shard_bytes = {}, 0
+        for name, leaf in zip(names, leaves):
+            chunks = max(1, int(np.ceil(leaf.nbytes / max_shard_bytes)))
+            rows = leaf.shape[0] if leaf.ndim else 1
+            chunks = min(chunks, max(rows, 1))
+            entry = {"name": name, "shape": list(leaf.shape),
+                     "dtype": str(leaf.dtype), "chunks": []}
+            if leaf.ndim == 0 or chunks == 1:
+                parts = [(0, leaf)]
+            else:
+                splits = np.array_split(np.arange(rows), chunks)
+                parts = [(int(s[0]), leaf[s[0]:s[-1] + 1])
+                         for s in splits if len(s)]
+            for off, part in parts:
+                keyname = f"{name}_o{off}"
+                entry["chunks"].append({"key": keyname, "offset": off,
+                                        "shard": None})
+                if shard_bytes + part.nbytes > max_shard_bytes:
+                    flush()
+                entry["chunks"][-1]["shard"] = shard_id
+                shard_payload[keyname] = _to_storage(part)
+                shard_bytes += part.nbytes
+            manifest["leaves"].append(entry)
+        flush()
 
-    for name, leaf in zip(names, leaves):
-        chunks = max(1, int(np.ceil(leaf.nbytes / max_shard_bytes)))
-        rows = leaf.shape[0] if leaf.ndim else 1
-        chunks = min(chunks, max(rows, 1))
-        entry = {"name": name, "shape": list(leaf.shape),
-                 "dtype": str(leaf.dtype), "chunks": []}
-        if leaf.ndim == 0 or chunks == 1:
-            parts = [(0, leaf)]
-        else:
-            splits = np.array_split(np.arange(rows), chunks)
-            parts = [(int(s[0]), leaf[s[0]:s[-1] + 1]) for s in splits if len(s)]
-        for off, part in parts:
-            keyname = f"{name}_o{off}"
-            entry["chunks"].append({"key": keyname, "offset": off,
-                                    "shard": None})
-            if shard_bytes + part.nbytes > max_shard_bytes:
-                flush()
-            entry["chunks"][-1]["shard"] = shard_id
-            shard_payload[keyname] = _to_storage(part)
-            shard_bytes += part.nbytes
-        manifest["leaves"].append(entry)
-    flush()
-
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.replace(tmp, final)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
     return final
 
 

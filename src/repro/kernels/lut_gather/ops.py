@@ -213,7 +213,16 @@ def make_network_fn(tables: List, fused: Optional[bool] = None,
     warning on CPU, so it is only applied on TPU.  ``mesh`` switches to
     the shard_map data-parallel path: batch sharded over the mesh,
     tables replicated.
+
+    ``tables`` may also be a loaded ``repro.artifact`` bundle (anything
+    with ``.tables``): the table list is unwrapped and the manifest's
+    recorded input width feeds the fuse decision, so a cold-loaded
+    artifact plugs straight into serving with no synthesis-side state.
     """
+    if hasattr(tables, "tables"):          # repro.artifact.Artifact
+        if n_in0 is None:
+            n_in0 = getattr(tables, "n_in", None)
+        tables = tables.tables
     if fused is None:
         fused = can_fuse(tables, block_b, n_in0)
 

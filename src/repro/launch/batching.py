@@ -58,6 +58,13 @@ class RequestHandle:
         return self._event.is_set()
 
     @property
+    def failed(self) -> bool:
+        """True when the engine raised for this request's batch (the
+        public accessor — callers count failures without touching
+        ``_exc``)."""
+        return self._exc is not None
+
+    @property
     def latency_s(self) -> float:
         """Queueing delay + kernel time (valid once done)."""
         return self.t_done - self.t_submit
@@ -80,6 +87,13 @@ class FlushRecord:
 _STOP = object()
 
 
+class BatcherStopped(RuntimeError):
+    """A request was submitted after drain began.  Subclasses
+    RuntimeError so pre-existing callers keep working; the multi-model
+    registry (launch/registry.py) catches THIS to retry a request on
+    the engine that replaced a hot-swapped one."""
+
+
 class MicroBatcher:
     """Threaded microbatcher with deadline flush.
 
@@ -100,6 +114,12 @@ class MicroBatcher:
         self._q: "queue.Queue" = queue.Queue()
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._stopping = False
+        # serializes submit()'s stopping-check-then-enqueue against
+        # stop() raising the flag: a request either lands in the queue
+        # BEFORE the flag flips (and is served by the loop or the final
+        # drain) or sees the flag and gets BatcherStopped — it can
+        # never slip into the queue after the drain and silently hang
+        self._submit_lock = threading.Lock()
         self.flushes: List[FlushRecord] = []
 
     # -- lifecycle ---------------------------------------------------
@@ -112,7 +132,8 @@ class MicroBatcher:
         Requests that raced past submit()'s stopping check are drained
         and served HERE (on the caller's thread) so no handle is ever
         left unset."""
-        self._stopping = True
+        with self._submit_lock:
+            self._stopping = True
         self._q.put(_STOP)
         self._thread.join()
         leftovers: List[RequestHandle] = []
@@ -136,10 +157,12 @@ class MicroBatcher:
 
     # -- producer side -----------------------------------------------
     def submit(self, x) -> RequestHandle:
-        if self._stopping:
-            raise RuntimeError("batcher is stopping")
         h = RequestHandle(x=np.asarray(x), t_submit=time.monotonic())
-        self._q.put(h)
+        with self._submit_lock:
+            if self._stopping:
+                raise BatcherStopped("batcher is stopping — request "
+                                     "rejected, resubmit elsewhere")
+            self._q.put(h)
         return h
 
     # -- batcher thread ----------------------------------------------
@@ -217,7 +240,10 @@ def replay_open_loop(batcher: MicroBatcher, rows: np.ndarray,
     REAL clock (exponential inter-arrival gaps at ``rate`` req/s; gaps
     the OS cannot sleep are submitted immediately, i.e. the offered
     load saturates at the submitter's speed).  Blocks until every
-    request is served; returns the handles for latency analysis.
+    request COMPLETES and returns the handles for latency analysis.
+    Engine failures do not raise here — they stay recorded on the
+    affected handles (``h.failed``) so callers can count them; only a
+    genuine hang (nothing completing within ``timeout_s``) raises.
     """
     rng = np.random.default_rng(seed)
     gaps = rng.exponential(1.0 / rate, len(rows))
@@ -230,7 +256,10 @@ def replay_open_loop(batcher: MicroBatcher, rows: np.ndarray,
             time.sleep(dt)
         handles.append(batcher.submit(row))
     for h in handles:
-        h.result(timeout=timeout_s)
+        try:
+            h.result(timeout=timeout_s)
+        except RuntimeError:
+            pass                 # failed batch: counted by the caller
     return handles
 
 

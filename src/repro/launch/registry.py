@@ -1,0 +1,265 @@
+"""Multi-model LUT serving registry with zero-retrain hot-swap.
+
+One process, many compiled networks: each registered model id owns its
+own jitted engine (``kernels/lut_gather/ops.make_network_fn`` over a
+synthesised table set — usually cold-loaded from a ``repro/artifact``
+directory, never retrained) and its own threaded deadline-flush
+``MicroBatcher``.  ``submit(model_id, x)`` routes a request to the
+right queue; every model serves concurrently on its own batcher
+thread.
+
+Hot-swap contract (``swap``): the NEW artifact is loaded, traced, and
+warmed on a dummy microbatch entirely OUTSIDE the routing lock; the
+swap itself is one dict assignment under the lock (the measured
+"blackout" — microseconds).  The old engine's batcher is then stopped:
+its queued and in-flight requests finish on the OLD tables, and a
+producer that races the drain gets the typed ``BatcherStopped``
+rejection which ``submit`` absorbs by re-routing to the entry that
+replaced it — so a swap under full Poisson load completes with ZERO
+dropped or failed requests (tests/test_registry.py pins this, the
+benchmark records the blackout).
+
+Accepted model sources, anywhere a model id is (re)bound:
+  * a ``repro.artifact`` directory path (str) — compile-once deploy,
+  * a loaded ``Artifact``,
+  * a raw ``List[LayerTables]`` (in-memory synthesis output).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.batching import BatcherStopped, MicroBatcher, RequestHandle
+
+
+@dataclasses.dataclass
+class ModelEntry:
+    """One registered model: its tables, engine, and request queue."""
+
+    model_id: str
+    version: int
+    tables: List
+    n_features: int
+    artifact_id: Optional[str]
+    serve_fn: Callable
+    batcher: MicroBatcher
+    warm_s: float
+
+
+@dataclasses.dataclass
+class SwapReport:
+    """What a hot-swap cost: ``warm_s`` is off-path (old engine kept
+    serving throughout), ``blackout_s`` is the routing-lock hold — the
+    only interval during which a submit can neither reach the old nor
+    the new engine."""
+
+    model_id: str
+    old_version: int
+    new_version: int
+    old_artifact_id: Optional[str]
+    new_artifact_id: Optional[str]
+    warm_s: float
+    blackout_s: float
+    drained_requests: int
+
+
+class UnknownModelError(KeyError):
+    """Request routed to a model id the registry does not hold."""
+
+
+class ModelRegistry:
+    """Routes requests to per-model microbatched engines; swaps any
+    model's tables live without dropping requests."""
+
+    def __init__(self, microbatch: int = 256, deadline_s: float = 2e-3,
+                 *, mesh=None, force_interpret: Optional[bool] = None):
+        self.microbatch = microbatch
+        self.deadline_s = deadline_s
+        self.mesh = mesh
+        self.force_interpret = force_interpret
+        self._models: Dict[str, ModelEntry] = {}
+        self._lock = threading.Lock()
+        self._closed = False
+
+    # -- assembly -----------------------------------------------------
+    def _resolve(self, source) -> tuple:
+        """source -> (tables, n_features, artifact_id)."""
+        if isinstance(source, str):
+            from repro.artifact import load_artifact
+            source = load_artifact(source)
+        if hasattr(source, "tables"):            # a loaded Artifact
+            return source.tables, source.n_in, source.artifact_id
+        from repro.artifact.store import _infer_n_in
+        tables = list(source)
+        return tables, _infer_n_in(tables), None
+
+    def _build_entry(self, model_id: str, source,
+                     version: int) -> ModelEntry:
+        from repro.kernels.lut_gather import ops as lg_ops
+
+        tables, n_feat, artifact_id = self._resolve(source)
+        serve_fn = lg_ops.make_network_fn(
+            tables, block_b=self.microbatch, n_in0=n_feat,
+            mesh=self.mesh, force_interpret=self.force_interpret)
+        t0 = time.monotonic()
+        jax.block_until_ready(
+            serve_fn(jnp.zeros((self.microbatch, n_feat), jnp.int32)))
+        warm_s = time.monotonic() - t0
+
+        def engine(batch_np):
+            return np.asarray(jax.block_until_ready(
+                serve_fn(jnp.asarray(batch_np))))
+
+        batcher = MicroBatcher(engine, self.microbatch, self.deadline_s,
+                               n_features=n_feat).start()
+        return ModelEntry(model_id=model_id, version=version,
+                          tables=tables, n_features=n_feat,
+                          artifact_id=artifact_id, serve_fn=serve_fn,
+                          batcher=batcher, warm_s=warm_s)
+
+    # -- lifecycle ----------------------------------------------------
+    def register(self, model_id: str, source) -> ModelEntry:
+        """Bind ``model_id`` to a model source (warms the engine and
+        starts its batcher before the id becomes routable)."""
+        entry = self._build_entry(model_id, source, version=1)
+        with self._lock:
+            if self._closed:
+                entry.batcher.stop()
+                raise RuntimeError("registry is closed")
+            if model_id in self._models:
+                entry.batcher.stop()
+                raise ValueError(
+                    f"model id {model_id!r} already registered — "
+                    f"use swap() to replace it live")
+            self._models[model_id] = entry
+        return entry
+
+    def swap(self, model_id: str, source) -> SwapReport:
+        """Atomically rebind ``model_id`` to a new model.  The new
+        engine warms while the old one serves; in-flight and racing
+        requests finish on the old engine's drain or are re-routed —
+        none are dropped."""
+        with self._lock:
+            if model_id not in self._models:
+                raise UnknownModelError(model_id)
+            version = self._models[model_id].version + 1
+        entry = self._build_entry(model_id, source, version=version)
+        t0 = time.monotonic()
+        with self._lock:
+            # the id can vanish during the (long) warm-up — a racing
+            # unregister()/close() wins and the new engine stands down;
+            # a width-mismatched replacement is refused up front, since
+            # re-routed in-flight rows would fail inside its batcher
+            # and break the zero-failed-requests swap contract
+            old = self._models.get(model_id)
+            if old is not None and old.n_features == entry.n_features:
+                entry.version = old.version + 1
+                self._models[model_id] = entry
+        if old is None:
+            entry.batcher.stop()
+            raise UnknownModelError(
+                f"model {model_id!r} was removed while the replacement "
+                f"engine warmed — swap abandoned")
+        if old.n_features != entry.n_features:
+            entry.batcher.stop()
+            raise ValueError(
+                f"swap({model_id!r}): replacement takes "
+                f"{entry.n_features} features, serving entry takes "
+                f"{old.n_features} — in-flight requests could not be "
+                f"re-routed; register it under a new model id instead")
+        blackout_s = time.monotonic() - t0
+        flushed_before = sum(f.fill for f in old.batcher.flushes)
+        old.batcher.stop()                 # serves every queued request
+        drained = sum(f.fill for f in old.batcher.flushes) - flushed_before
+        return SwapReport(
+            model_id=model_id, old_version=old.version,
+            new_version=entry.version, old_artifact_id=old.artifact_id,
+            new_artifact_id=entry.artifact_id, warm_s=entry.warm_s,
+            blackout_s=blackout_s, drained_requests=drained)
+
+    def unregister(self, model_id: str) -> None:
+        with self._lock:
+            entry = self._models.pop(model_id, None)
+        if entry is None:
+            raise UnknownModelError(model_id)
+        entry.batcher.stop()
+
+    def close(self) -> None:
+        """Stop every batcher (each drains its queue first)."""
+        with self._lock:
+            self._closed = True
+            entries = list(self._models.values())
+            self._models.clear()
+        for e in entries:
+            e.batcher.stop()
+
+    def __enter__(self) -> "ModelRegistry":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- request path -------------------------------------------------
+    def submit(self, model_id: str, x) -> RequestHandle:
+        """Route one request.  A concurrent hot-swap can stop the entry
+        we picked between lookup and enqueue; the typed rejection is
+        absorbed by re-looking-up the (new) entry — bounded, since each
+        retry observes a strictly newer version."""
+        while True:
+            with self._lock:
+                entry = self._models.get(model_id)
+                known = sorted(self._models) if entry is None else None
+            if entry is None:
+                raise UnknownModelError(
+                    f"no model {model_id!r} registered (have: {known})")
+            try:
+                return entry.batcher.submit(x)
+            except BatcherStopped:
+                continue
+
+    def client(self, model_id: str) -> "RegistryClient":
+        """A single-model view that duck-types ``MicroBatcher.submit``
+        so per-model load drivers (batching.replay_open_loop) work
+        unchanged against the registry."""
+        return RegistryClient(self, model_id)
+
+    # -- introspection ------------------------------------------------
+    def model_ids(self) -> List[str]:
+        with self._lock:
+            return sorted(self._models)
+
+    def get(self, model_id: str) -> ModelEntry:
+        with self._lock:
+            if model_id not in self._models:
+                raise UnknownModelError(model_id)
+            return self._models[model_id]
+
+    def stats(self) -> Dict[str, Dict[str, Any]]:
+        with self._lock:
+            entries = dict(self._models)
+        return {
+            mid: {
+                "version": e.version,
+                "artifact_id": e.artifact_id,
+                "n_features": e.n_features,
+                "flushes": len(e.batcher.flushes),
+                "served": sum(f.fill for f in e.batcher.flushes),
+                "warm_s": round(e.warm_s, 4),
+            } for mid, e in entries.items()
+        }
+
+
+@dataclasses.dataclass
+class RegistryClient:
+    registry: ModelRegistry
+    model_id: str
+
+    def submit(self, x) -> RequestHandle:
+        return self.registry.submit(self.model_id, x)

@@ -21,6 +21,20 @@ benchmarks/lut_infer_bench.py.
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
     PYTHONPATH=src python -m repro.launch.serve --lut --shards 4 \
         --microbatch 256 --deadline-ms 2 --requests 2048 --rate 50000
+
+Compile-once deployment (repro/artifact): ``--save-artifact`` writes
+the synthesised network to ``--artifact-dir`` as a content-addressed
+artifact after training; a later run with the same ``--artifact-dir``
+COLD-LOADS it (no training, no synthesis — milliseconds) and serves
+identically bit-for-bit.  ``--swap-demo`` exercises the multi-model
+path end to end: two artifact versions are compiled, v1 serves a live
+Poisson stream through launch/registry.ModelRegistry, and v2 is
+hot-swapped in mid-stream — zero requests dropped, blackout reported.
+
+    PYTHONPATH=src python -m repro.launch.serve --lut \
+        --artifact-dir /tmp/lut-artifacts --save-artifact   # compile
+    PYTHONPATH=src python -m repro.launch.serve --lut \
+        --artifact-dir /tmp/lut-artifacts                   # cold-load
 """
 from __future__ import annotations
 
@@ -39,17 +53,27 @@ from repro.models import registry as R
 # LUT-mode serving assembly (shared with examples/ and benchmarks/)
 # ---------------------------------------------------------------------------
 
+def lut_dataset(seed: int = 0):
+    """The deterministic jsc dataset the LUT serving stack trains and
+    evaluates on — separate from training so an artifact cold-load can
+    still score accuracy without touching the trainer."""
+    from repro.data.loader import train_test_split
+    from repro.data.synthetic import make_dataset
+
+    return train_test_split(make_dataset("jsc", n_samples=4000, seed=seed))
+
+
 def build_lut_model(train_steps: int = 150, fan_in: int = 3,
                     adder_width: int = 2, seed: int = 0):
     """Train + synthesise a tiny LUT-DNN (a real deployment loads the
-    tables from disk).  Returns (spec, tables, data)."""
+    tables from disk — see ``load_or_build_lut_model``).  Returns
+    (spec, tables, data)."""
     from repro.configs import paper_models as PM
     from repro.core import lut_synth as LS
     from repro.core import lutdnn as LD
-    from repro.data.loader import batch_iterator, train_test_split
-    from repro.data.synthetic import make_dataset
+    from repro.data.loader import batch_iterator
 
-    data = train_test_split(make_dataset("jsc", n_samples=4000, seed=seed))
+    data = lut_dataset(seed)
     spec = PM.tiny("jsc", degree=1, fan_in=fan_in, adder_width=adder_width)
     init_state, step = LD.make_train_step(spec, lr=5e-3)
     state = init_state(jax.random.key(seed))
@@ -59,6 +83,43 @@ def build_lut_model(train_steps: int = 150, fan_in: int = 3,
         state, _ = jstep(state, next(it))
     tables = LS.synthesise(state["model"], spec)
     return spec, tables, data
+
+
+def load_or_build_lut_model(train_steps: int = 150,
+                            artifact_dir: str = None,
+                            save: bool = False, seed: int = 0):
+    """The compile-once entry: cold-load the newest artifact under
+    ``artifact_dir`` when one exists (NO training — the ≥10x cheaper
+    path the benchmark tracks), otherwise train + synthesise and
+    optionally persist the result.  Returns
+    (spec, source, data, origin) where ``source`` feeds
+    ``ops.make_network_fn`` directly (an Artifact or a table list) and
+    ``origin`` is "artifact" | "trained" | "trained+saved"."""
+    from repro.artifact import find_artifacts, load_artifact
+
+    if artifact_dir and find_artifacts(artifact_dir):
+        t0 = time.monotonic()
+        art = load_artifact(artifact_dir)
+        dt = time.monotonic() - t0
+        spec = art.spec
+        if spec is None:
+            raise SystemExit(
+                f"artifact {art.artifact_id[:12]} carries no ModelSpec — "
+                f"re-save it with spec= to serve through this launcher")
+        print(f"cold-loaded artifact {art.artifact_id[:12]} "
+              f"({art.path}) in {dt * 1e3:.1f} ms — no retraining")
+        return spec, art, lut_dataset(seed), "artifact"
+
+    spec, tables, data = build_lut_model(train_steps, seed=seed)
+    if save and artifact_dir:
+        from repro.artifact import save_artifact
+        path = save_artifact(
+            artifact_dir, tables, name=spec.name.replace(" ", ""),
+            spec=spec, provenance={"train_steps": train_steps,
+                                   "seed": seed, "dataset": "jsc"})
+        print(f"saved artifact {path}")
+        return spec, tables, data, "trained+saved"
+    return spec, tables, data, "trained"
 
 
 def run_lut_load(serve_fn, fq, data, n_requests: int, microbatch: int,
@@ -89,12 +150,17 @@ def run_lut_load(serve_fn, fq, data, n_requests: int, microbatch: int,
 def lut_accuracy(handles, data, idx) -> float:
     """Classification accuracy of served results — ONE batched decode
     (stack every output row, dequantize, argmax), not one dispatch per
-    request."""
+    request.  Handles whose batch failed in the engine are excluded
+    (their result() re-raises); nan when nothing succeeded."""
     from repro.core import lut_synth as LS
 
-    out = jnp.asarray(np.stack([h.result() for h in handles]))
+    ok = [(h, i) for h, i in zip(handles, np.asarray(idx))
+          if h.done and not h.failed]
+    if not ok:
+        return float("nan")
+    out = jnp.asarray(np.stack([h.result() for h, _ in ok]))
     pred = np.asarray(jnp.argmax(LS.OUTPUT_QUANT.from_code(out), -1))
-    y = np.asarray(data["test"]["y"])[idx]
+    y = np.asarray(data["test"]["y"])[[i for _, i in ok]]
     return float((pred == y).mean())
 
 
@@ -134,19 +200,77 @@ def drive_lut_serving(serve_fn, spec, data, *, requests: int,
     return handles, mb
 
 
+def run_swap_demo(args, mesh) -> None:
+    """Compile two artifact versions, serve v1 through the multi-model
+    registry under live Poisson load, hot-swap to v2 mid-stream.
+    Success criteria printed at the end: zero dropped requests, the
+    swap blackout, and which engine served each phase."""
+    import tempfile
+    import threading
+
+    from repro.artifact import save_artifact
+    from repro.launch.batching import replay_open_loop
+    from repro.launch.registry import ModelRegistry
+
+    art_dir = args.artifact_dir or tempfile.mkdtemp(prefix="lut-artifacts-")
+    spec, tables_v1, data = build_lut_model(args.lut_train_steps, seed=0)
+    _, tables_v2, _ = build_lut_model(args.lut_train_steps, seed=1)
+    paths = [save_artifact(art_dir, t, name=f"tiny-jsc-v{i + 1}",
+                           spec=spec, provenance={"seed": i})
+             for i, t in enumerate((tables_v1, tables_v2))]
+    print(f"compiled artifacts:\n  v1 {paths[0]}\n  v2 {paths[1]}")
+
+    fq = spec.layer_specs()[0].in_quant
+    rng = np.random.default_rng(0)
+    idx = rng.integers(0, data["test"]["x"].shape[0], args.requests)
+    codes = np.asarray(fq.to_code(fq.clip(
+        jnp.asarray(np.asarray(data["test"]["x"])[idx]))))
+
+    with ModelRegistry(args.microbatch, args.deadline_ms / 1e3,
+                       mesh=mesh) as reg:
+        reg.register("tiny-jsc", paths[0])
+        handles: list = []
+        t0 = time.monotonic()
+        feeder = threading.Thread(target=lambda: handles.extend(
+            replay_open_loop(reg.client("tiny-jsc"), codes, args.rate)))
+        feeder.start()
+        # land the swap mid-stream: after ~40% of the offered window
+        time.sleep(0.4 * args.requests / args.rate)
+        rep = reg.swap("tiny-jsc", paths[1])
+        feeder.join()
+        span = time.monotonic() - t0
+
+    failed = sum(1 for h in handles if h.failed)
+    acc = lut_accuracy(handles, data, idx)
+    print(f"hot-swap demo: {len(handles)}/{args.requests} served, "
+          f"{failed} failed, {args.requests - len(handles)} dropped")
+    print(f"  swap v{rep.old_version}->v{rep.new_version}: warm "
+          f"{rep.warm_s * 1e3:.1f} ms off-path, blackout "
+          f"{rep.blackout_s * 1e6:.1f} us, drained "
+          f"{rep.drained_requests} in-flight on old engine")
+    print(f"  throughput {len(handles) / span:,.0f} req/s, "
+          f"post-swap accuracy (mixed stream) {acc:.4f}")
+
+
 def serve_lut(args) -> None:
     from repro.kernels.lut_gather import ops as lg_ops
     from repro.parallel.sharding import serving_mesh
 
-    spec, tables, data = build_lut_model(args.lut_train_steps)
     mesh = serving_mesh(args.shards) if args.shards else None
-    serve_fn = lg_ops.make_network_fn(tables, fused=True,
+    if args.swap_demo:
+        run_swap_demo(args, mesh)
+        return
+
+    spec, source, data, origin = load_or_build_lut_model(
+        args.lut_train_steps, artifact_dir=args.artifact_dir,
+        save=args.save_artifact)
+    serve_fn = lg_ops.make_network_fn(source, fused=True,
                                       block_b=args.microbatch, mesh=mesh)
     drive_lut_serving(
         serve_fn, spec, data, requests=args.requests,
         microbatch=args.microbatch, deadline_ms=args.deadline_ms,
         rate=args.rate,
-        header=f"lut-serve shards={args.shards or 1} "
+        header=f"lut-serve[{origin}] shards={args.shards or 1} "
                f"microbatch={args.microbatch} deadline={args.deadline_ms}ms "
                f"rate={args.rate:,.0f}/s:")
 
@@ -158,6 +282,15 @@ def main() -> None:
                     help="serve a synthesised LUT-DNN through the async "
                          "deadline-flush batcher (optionally sharded)")
     ap.add_argument("--lut-train-steps", type=int, default=150)
+    ap.add_argument("--artifact-dir", default=None,
+                    help="compile-once artifact store: cold-load the "
+                         "newest artifact here instead of retraining")
+    ap.add_argument("--save-artifact", action="store_true",
+                    help="persist the synthesised network to "
+                         "--artifact-dir after training")
+    ap.add_argument("--swap-demo", action="store_true",
+                    help="multi-model registry demo: hot-swap a second "
+                         "artifact version under live load")
     ap.add_argument("--microbatch", type=int, default=256)
     ap.add_argument("--deadline-ms", type=float, default=2.0)
     ap.add_argument("--shards", type=int, default=0,

@@ -23,6 +23,7 @@ TOP_KEYS = {
     "fast": bool,
     "configs": list,
     "serving": dict,
+    "artifact": dict,          # compile-once / hot-swap ledger (v3)
 }
 
 CONFIG_NUMERIC = [
@@ -44,6 +45,14 @@ SERVING_NUMERIC = [
     "mean_flush_fill", "deadline_flushes",
 ]
 
+ARTIFACT_NUMERIC = [
+    "train_steps", "build_from_scratch_ms", "save_ms", "cold_load_ms",
+    "speedup_cold_load_vs_build", "artifact_slab_bytes",
+    "table_bytes_packed", "swap_requests", "swap_rate", "swap_dropped",
+    "swap_failed", "swap_blackout_ms", "swap_warm_ms",
+    "swap_drained_on_old", "swap_throughput_req_s",
+]
+
 
 @pytest.fixture(scope="module")
 def payload():
@@ -56,7 +65,7 @@ def test_top_level_schema(payload):
         assert key in payload, f"missing top-level key {key!r}"
         assert isinstance(payload[key], typ), (key, type(payload[key]))
     assert payload["bench"] == "lut_infer"
-    assert payload["schema_version"] >= 2
+    assert payload["schema_version"] >= 3
     assert len(payload["configs"]) >= 1
 
 
@@ -79,3 +88,17 @@ def test_serving_entry_schema(payload):
     assert isinstance(srv["p99_under_deadline"], bool)
     # internal consistency: percentiles are ordered
     assert srv["p50_ms"] <= srv["p95_ms"] <= srv["p99_ms"]
+
+
+def test_artifact_entry_schema(payload):
+    art = payload["artifact"]
+    for key in ARTIFACT_NUMERIC:
+        assert key in art, f"artifact: missing {key!r}"
+        assert isinstance(art[key], numbers.Real) and \
+            not isinstance(art[key], bool), key
+    # the two contractual (hardware-independent) properties of the
+    # compile-once path: hot-swap drops nothing, and a cold load beats
+    # training from scratch by >= 10x (the artifact's reason to exist)
+    assert art["swap_dropped"] == 0
+    assert art["swap_failed"] == 0
+    assert art["speedup_cold_load_vs_build"] >= 10

@@ -11,12 +11,14 @@ are discarded) and a drain-on-stop guarantee.
 Uses a pure-numpy engine fn so the timing assertions measure the
 batcher, not kernel compile time.
 """
+import threading
 import time
 
 import numpy as np
 import pytest
 
-from repro.launch.batching import MicroBatcher, replay_open_loop
+from repro.launch.batching import (BatcherStopped, MicroBatcher,
+                                   replay_open_loop)
 
 N_FEAT = 4
 
@@ -116,6 +118,49 @@ def test_stop_drains_pending_requests():
     assert not mb.flushes[0].deadline_hit
     with pytest.raises(RuntimeError):
         mb.submit(np.arange(N_FEAT))
+
+
+def test_submit_after_stop_raises_batcher_stopped():
+    """A post-stop submit gets the TYPED rejection (BatcherStopped, a
+    RuntimeError subclass) — the registry's hot-swap retry keys on it."""
+    mb = MicroBatcher(_engine, microbatch=4, deadline_s=0.01,
+                      n_features=N_FEAT).start()
+    mb.stop()
+    with pytest.raises(BatcherStopped):
+        mb.submit(np.arange(N_FEAT))
+
+
+def test_no_request_silently_hangs_across_stop_race():
+    """Hammer submit() from several threads while stop() runs: every
+    request must either be REJECTED at submit (BatcherStopped) or be
+    SERVED by the loop/final drain — a request that got a handle but
+    never completes (the pre-fix race: enqueue lands after the drain)
+    is the one forbidden outcome."""
+    for trial in range(10):
+        mb = MicroBatcher(_engine, microbatch=4, deadline_s=0.001,
+                          n_features=N_FEAT).start()
+        served, rejected = [], []
+        go = threading.Event()
+
+        def hammer():
+            go.wait()
+            for i in range(50):
+                try:
+                    served.append(mb.submit(np.full(N_FEAT, i, np.int32)))
+                except BatcherStopped:
+                    rejected.append(i)
+
+        threads = [threading.Thread(target=hammer) for _ in range(4)]
+        for t in threads:
+            t.start()
+        go.set()
+        time.sleep(0.002 * (trial % 3))
+        mb.stop()
+        for t in threads:
+            t.join()
+        for h in served:
+            h.result(timeout=5.0)        # raises TimeoutError on a hang
+        assert all(h.done for h in served)
 
 
 def test_engine_failure_propagates_to_handles():

@@ -1,0 +1,183 @@
+"""Multi-model registry semantics (launch/registry.py).
+
+Three contracts:
+  * **routing** — each model id serves through ITS engine: outputs are
+    bit-exact vs that model's jnp oracle, concurrently across models;
+  * **hot-swap atomicity** — swapping a model under live load drops
+    ZERO requests: every handle completes, every output matches either
+    the old or the new tables' oracle (never garbage), submits that
+    race the old batcher's drain are re-routed transparently;
+  * **lifecycle** — duplicate ids are refused, unknown ids raise,
+    close() drains every queue.
+Engines run the real fused lut_gather path on synthesised tables (the
+tiny shard-test network), so this also covers artifact -> registry ->
+kernel end to end.
+"""
+import functools
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.artifact import save_artifact
+from repro.core import lut_synth as LS
+from repro.core import lutdnn as LD
+from repro.kernels.lut_gather import ref as lg_ref
+from repro.launch.batching import replay_open_loop
+from repro.launch.registry import (ModelRegistry, SwapReport,
+                                   UnknownModelError)
+
+SPEC_KW = dict(in_features=16, widths=(24, 12, 5), bits=2, fan_in=3,
+               degree=1, adder_width=2)
+
+
+@functools.lru_cache(maxsize=None)
+def _net(seed: int):
+    spec = LD.ModelSpec(name=f"reg-{seed}", **SPEC_KW)
+    model = LD.init_model(jax.random.key(seed), spec)
+    return spec, LS.synthesise(model, spec)
+
+
+def _oracle(tables, rows: np.ndarray) -> np.ndarray:
+    import jax.numpy as jnp
+    codes = jnp.asarray(rows)
+    for t in tables:
+        codes = lg_ref.lut_layer(codes, t.conn, t.sub_table, t.add_table,
+                                 t.in_bits, t.sub_bits)
+    return np.asarray(codes)
+
+
+def _rows(n: int, seed: int = 3) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 4, (n, 16)).astype(np.int32)
+
+
+def test_routes_requests_to_the_right_model():
+    _, ta = _net(0)
+    _, tb = _net(1)
+    rows = _rows(24)
+    want_a, want_b = _oracle(ta, rows), _oracle(tb, rows)
+    assert not np.array_equal(want_a, want_b)   # distinguishable models
+    with ModelRegistry(microbatch=8, deadline_s=0.005) as reg:
+        reg.register("a", ta)
+        reg.register("b", tb)
+        assert reg.model_ids() == ["a", "b"]
+        handles = [(reg.submit("a", r), reg.submit("b", r)) for r in rows]
+        for i, (ha, hb) in enumerate(handles):
+            assert np.array_equal(ha.result(timeout=10.0), want_a[i])
+            assert np.array_equal(hb.result(timeout=10.0), want_b[i])
+    stats = reg.stats()
+    assert stats == {}                           # closed registry is empty
+
+
+def test_registry_accepts_artifact_paths(tmp_path):
+    spec, ta = _net(0)
+    path = save_artifact(str(tmp_path), ta, spec=spec)
+    rows = _rows(9)
+    with ModelRegistry(microbatch=4, deadline_s=0.005) as reg:
+        entry = reg.register("from-disk", path)
+        assert entry.artifact_id is not None
+        assert entry.n_features == spec.in_features
+        hs = [reg.submit("from-disk", r) for r in rows]
+        want = _oracle(ta, rows)
+        for i, h in enumerate(hs):
+            assert np.array_equal(h.result(timeout=10.0), want[i])
+
+
+def test_lifecycle_errors():
+    _, ta = _net(0)
+    reg = ModelRegistry(microbatch=4, deadline_s=0.005)
+    reg.register("a", ta)
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register("a", ta)
+    with pytest.raises(UnknownModelError):
+        reg.submit("nope", _rows(1)[0])
+    with pytest.raises(UnknownModelError):
+        reg.swap("nope", ta)
+    with pytest.raises(UnknownModelError):
+        reg.unregister("nope")
+    reg.unregister("a")
+    reg.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        reg.register("late", ta)
+
+
+def test_hot_swap_under_load_drops_nothing():
+    """The acceptance criterion: swap mid-stream under a Poisson open
+    loop — every request completes, every output is a valid row of
+    either the old or the new engine, and the blackout is bounded by
+    the routing-lock hold (far under a kernel time)."""
+    _, ta = _net(0)
+    _, tb = _net(1)
+    rows = _rows(400, seed=11)
+    want_a, want_b = _oracle(ta, rows), _oracle(tb, rows)
+
+    with ModelRegistry(microbatch=16, deadline_s=0.002) as reg:
+        reg.register("m", ta)
+        handles: list = []
+        # ~1s stream: the new engine's warm-up (hundreds of ms of
+        # trace+compile) must END while requests are still arriving,
+        # otherwise the swap trivially lands after the load
+        feeder = threading.Thread(target=lambda: handles.extend(
+            replay_open_loop(reg.client("m"), rows, rate=400.0)))
+        feeder.start()
+        time.sleep(0.01)                 # land the swap mid-stream
+        rep = reg.swap("m", tb)
+        feeder.join()
+
+    assert isinstance(rep, SwapReport)
+    assert (rep.old_version, rep.new_version) == (1, 2)
+    assert rep.blackout_s < 0.05
+    assert len(handles) == len(rows)
+    n_a = n_b = 0
+    for i, h in enumerate(handles):
+        out = h.result(timeout=10.0)     # zero dropped: all complete
+        if np.array_equal(out, want_a[i]):
+            n_a += 1
+        elif np.array_equal(out, want_b[i]):
+            n_b += 1
+        else:
+            pytest.fail(f"row {i} matches neither engine")
+    assert n_a + n_b == len(rows)
+    assert n_b > 0                       # the swap actually took effect
+    assert reg.stats() == {}
+
+
+def test_swap_rejects_width_mismatched_replacement():
+    """A replacement whose input width differs can't absorb re-routed
+    in-flight rows — swap must refuse it up front and keep the old
+    engine serving."""
+    _, ta = _net(0)
+    narrow_spec = LD.ModelSpec(name="reg-narrow", in_features=8,
+                               widths=(12, 5), bits=2, fan_in=3,
+                               degree=1, adder_width=2)
+    narrow = LS.synthesise(
+        LD.init_model(jax.random.key(2), narrow_spec), narrow_spec)
+    rows = _rows(4)
+    with ModelRegistry(microbatch=4, deadline_s=0.002) as reg:
+        reg.register("m", ta)
+        with pytest.raises(ValueError, match="features"):
+            reg.swap("m", narrow)
+        assert reg.get("m").version == 1       # old engine still serves
+        hs = [reg.submit("m", r) for r in rows]
+        want = _oracle(ta, rows)
+        for i, h in enumerate(hs):
+            assert np.array_equal(h.result(timeout=10.0), want[i])
+
+
+def test_swap_preserves_version_and_stats_monotonicity():
+    _, ta = _net(0)
+    _, tb = _net(1)
+    with ModelRegistry(microbatch=4, deadline_s=0.002) as reg:
+        reg.register("m", ta)
+        h = reg.submit("m", _rows(1)[0])
+        h.result(timeout=10.0)
+        rep1 = reg.swap("m", tb)
+        rep2 = reg.swap("m", ta)
+        assert (rep1.new_version, rep2.new_version) == (2, 3)
+        assert reg.get("m").version == 3
+        st = reg.stats()["m"]
+        assert st["version"] == 3
+        assert st["warm_s"] >= 0

@@ -1,0 +1,46 @@
+"""Fast-lane smoke of the compile-once serving CLI.
+
+Runs ``repro.launch.serve --lut --save-artifact`` end to end in a
+subprocess (train -> synthesise -> save artifact -> serve a real
+Poisson stream), then a second invocation that COLD-LOADS the artifact
+— asserting it skips training and serves the identical accuracy
+(bit-exact tables imply bit-exact classifications on the same request
+stream).  This keeps the examples/launcher path green in CI: a
+regression anywhere in the train->compile->deploy chain fails here in
+tens of seconds instead of surfacing only in the benchmark.
+"""
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+ARGS = ["--lut", "--lut-train-steps", "3", "--requests", "48",
+        "--rate", "20000", "--microbatch", "16", "--deadline-ms", "5"]
+
+
+def _run(extra):
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve"] + ARGS + extra,
+        capture_output=True, text=True, timeout=420, cwd=ROOT, env=env)
+    assert out.returncode == 0, out.stderr[-2000:]
+    return out.stdout
+
+
+def _accuracy(stdout: str) -> str:
+    (line,) = [ln for ln in stdout.splitlines() if "accuracy" in ln]
+    return line.rsplit("accuracy", 1)[1].strip()
+
+
+def test_serve_lut_save_artifact_then_cold_load(tmp_path):
+    first = _run(["--artifact-dir", str(tmp_path), "--save-artifact"])
+    assert "saved artifact" in first
+    assert "lut-serve[trained+saved]" in first
+
+    second = _run(["--artifact-dir", str(tmp_path)])
+    assert "cold-loaded artifact" in second
+    assert "no retraining" in second
+    assert "lut-serve[artifact]" in second
+    # same artifact, same request stream -> identical classifications
+    assert _accuracy(first) == _accuracy(second)
