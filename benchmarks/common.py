@@ -57,6 +57,25 @@ def timed(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
     return float(np.median(ts))
 
 
+def paired_timed(fn_a: Callable, fn_b: Callable, *args, warmup: int = 1,
+                 iters: int = 5):
+    """(min_a, min_b) wall seconds over INTERLEAVED a/b calls — for
+    head-to-head comparisons on noisy shared machines: load drift hits
+    both sides equally, and min-of-iters rejects interference spikes."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn_a(*args))
+        jax.block_until_ready(fn_b(*args))
+    ta, tb = [], []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a(*args))
+        ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b(*args))
+        tb.append(time.perf_counter() - t0)
+    return float(np.min(ta)), float(np.min(tb))
+
+
 def print_table(title: str, header: List[str], rows: List[List]) -> None:
     print(f"\n== {title} ==")
     print(",".join(header))

@@ -1,48 +1,78 @@
-"""LUT inference engine benchmark: fused vs per-layer, packed vs int32,
-single-device vs sharded, plus deadline-flush serving tail latency.
+"""LUT inference engine benchmark: fused vs per-layer, packed vs int32
+vs int4-in-kernel, grid-tiled vs double-buffered, single-device vs
+sharded, plus deadline-flush serving tail latency.
 
 Tracks the perf trajectory of the lut_gather serving path across PRs.
-Four execution strategies over identical synthesised networks:
+Six execution strategies over identical synthesised networks:
 
   seed        per-layer pallas_call, int32 tables, broadcast gather —
               the layout/blocking the repo shipped with at seed
   per-layer   per-layer pallas_call, packed uint8 tables, flat gather
   fused       whole network in ONE pallas_call, packed uint8 tables,
               matmul routing, VMEM activation scratch
+  fused-int4  the fused engine on int4 NIBBLE-PACKED slabs — two codes
+              per byte resident in VMEM, shift/mask unpack per lookup
+              (halves table residency; the VMEM ledger below tracks it)
+  pipelined   the fused engine with double-buffered batch tiles: codes
+              in/out stay in HBM and the kernel overlaps tile i+1's DMA
+              with tile i's compute (compared against a serial-tile
+              grid baseline at one fixed multi-tile size — see below)
   sharded     the fused engine shard_map'ed over the batch axis of all
               visible devices, tables replicated
+
+Each config also records the VMEM ledger that gates fusion
+(``vmem_bytes_fused_uint8`` / ``_int4``, the per-tile claim
+``vmem_tile_bytes_grid`` / ``_pipelined``, and
+``table_residency_ratio_int4`` — contractually <= 0.55 for
+4-bit-code adder networks) plus the ``tune_block_b`` sweep winners;
 
 plus a ``serving`` section: a real Poisson request stream through the
 threaded deadline-flush microbatcher (launch/batching.py), reporting
 p50/p95/p99 request latency, the straggler queueing-delay p99, and
 whether p99 lands under the deadline SLO (deadline + 2 kernel times);
 
-plus an ``artifact`` section (schema v3): the compile-once ledger —
-how long ``build_lut_model`` takes from scratch (train + synthesise)
-vs COLD-LOADING the same network from a content-addressed
-repro/artifact directory (the deployment path; tracked speedup must
-stay >= 10x), and a hot-swap drill through launch/registry under live
-Poisson load recording the routing blackout and the dropped-request
-count (contractually zero).
+plus an ``artifact`` section: the compile-once ledger — how long
+``build_lut_model`` takes from scratch (train + synthesise) vs
+COLD-LOADING the same network from a content-addressed repro/artifact
+directory (the deployment path; tracked speedup must stay >= 10x), the
+PACKED cold load (``unpack_int4=False``: int4 slabs stay
+two-codes-per-byte from disk into the kernel, ``cold_load_packed_ms`` /
+``table_bytes_loaded_packed``), and a hot-swap drill through
+launch/registry under live Poisson load recording the routing blackout
+and the dropped-request count (contractually zero).
 
 On this CPU container all kernels run in Pallas interpret mode and the
 "devices" are virtual host devices (the module forces
 ``--xla_force_host_platform_device_count=4`` before jax initialises),
 so the numbers are a proxy (documented in the JSON as
-backend/interpret); the relative ordering is what is tracked.
-``python -m benchmarks.run --json`` (or ``python -m
+backend/interpret); the relative ordering is what is tracked.  (The
+double-buffer win is understated here: interpret mode executes DMAs
+synchronously, so overlap shows up only as the removal of per-grid-step
+block slicing.)  ``python -m benchmarks.run --json`` (or ``python -m
 benchmarks.lut_infer_bench --json``) writes ``BENCH_lut_infer.json``
 at the repo root in a stable schema (pinned by
 tests/test_bench_schema.py):
 
-    {"bench": "lut_infer", "schema_version": 3, "backend": ...,
+    {"bench": "lut_infer", "schema_version": 4, "backend": ...,
      "configs": [{name, batch, widths, ..., fused_packed_ms,
-                  sharded_devices, sharded_fused_ms,
-                  samples_per_sec_sharded, speedup_sharded_vs_fused}],
+                  fused_int4_ms, fused_serial_tile_ms,
+                  fused_pipelined_ms (the last two: an interleaved
+                  min-of-iters pair, BOTH engines at the same fixed
+                  multi-tile size pipeline_pair_block_b =
+                  max(256, batch // 4) — independent of the
+                  block_b_tuned* sweep winners, which are recorded
+                  separately),
+                  speedup_int4_vs_uint8, speedup_pipelined_vs_serial,
+                  vmem_bytes_fused_uint8, vmem_bytes_fused_int4,
+                  vmem_ratio_int4_vs_uint8, table_residency_ratio_int4,
+                  vmem_tile_bytes_grid, vmem_tile_bytes_pipelined,
+                  block_b_tuned, block_b_tuned_pipelined,
+                  sharded_devices, sharded_fused_ms, ...}],
      "serving": {microbatch, deadline_ms, rate, requests, shards,
                  p50_ms, p95_ms, p99_ms, straggler_p99_ms,
                  deadline_slo_ms, p99_under_deadline, ...},
      "artifact": {build_from_scratch_ms, save_ms, cold_load_ms,
+                  cold_load_packed_ms, table_bytes_loaded_packed,
                   speedup_cold_load_vs_build, artifact_slab_bytes,
                   swap_requests, swap_dropped, swap_blackout_ms,
                   swap_warm_ms, ...}}
@@ -70,7 +100,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import print_table, timed
+from benchmarks.common import paired_timed, print_table, timed
 from repro.core import lut_synth as LS
 from repro.core import lutdnn as LD
 from repro.kernels.lut_gather import ops as lg_ops, ref as lg_ref
@@ -98,6 +128,7 @@ def _bench_config(name: str, kw: dict, batch: int, iters: int):
     model = LD.init_model(jax.random.key(0), spec)
     packed = LS.synthesise(model, spec, pack=True)
     legacy = LS.synthesise(model, spec, pack=False)
+    int4 = LS.pack_tables_int4(packed)
     codes = jax.random.randint(
         jax.random.key(1), (batch, spec.in_features), 0,
         2 ** spec.layer_specs()[0].in_quant.bits).astype(jnp.int32)
@@ -112,13 +143,37 @@ def _bench_config(name: str, kw: dict, batch: int, iters: int):
     per_layer_fn = jax.jit(lambda c: lg_ops.lut_network(packed, c))
     per_layer_i32_fn = jax.jit(lambda c: lg_ops.lut_network(legacy, c))
     fused_fn = lg_ops.make_network_fn(packed, fused=True, block_b=batch)
-    for f in (seed_fn, per_layer_fn, fused_fn):
+    int4_fn = lg_ops.make_network_fn(int4, fused=True, block_b=batch)
+    for f in (seed_fn, per_layer_fn, fused_fn, int4_fn):
         assert np.array_equal(np.asarray(f(codes)), np.asarray(want)), name
 
     t_seed = timed(seed_fn, codes, iters=iters)
     t_pl = timed(per_layer_fn, codes, iters=iters)
     t_pl_i32 = timed(per_layer_i32_fn, codes, iters=iters)
     t_fused = timed(fused_fn, codes, iters=iters)
+    t_int4 = timed(int4_fn, codes, iters=iters)
+
+    # block_b autotune sweeps (the serving-entry "auto" path), then the
+    # serial-TILE vs double-buffered comparison in the MULTI-TILE
+    # regime the pipeline exists for (4 tiles: batch // 4) — measured
+    # as an INTERLEAVED min-of-iters pair so machine-load drift hits
+    # both engines equally (this box is a noisy shared CPU; a 1-tile
+    # comparison would measure nothing but that noise)
+    cand = tuple(sorted({256, 1024, 2048, batch}))
+    bb_serial, _ = lg_ops.tune_block_b(packed, batch=batch,
+                                       candidates=cand, iters=2)
+    bb_pipe, _ = lg_ops.tune_block_b(packed, batch=batch,
+                                     candidates=cand, iters=2,
+                                     pipeline=True)
+    bb_pair = max(256, batch // 4)
+    serial_tile_fn = lg_ops.make_network_fn(packed, fused=True,
+                                            block_b=bb_pair)
+    pipe_fn = lg_ops.make_network_fn(packed, fused=True, block_b=bb_pair,
+                                     pipeline=True)
+    assert np.array_equal(np.asarray(pipe_fn(codes)),
+                          np.asarray(want)), f"{name} pipelined"
+    t_serial_tile, t_pipe = paired_timed(serial_tile_fn, pipe_fn, codes,
+                                         iters=max(iters, 10))
 
     # sharded fused: batch over all visible devices, tables replicated
     n_dev = jax.device_count()
@@ -127,6 +182,13 @@ def _bench_config(name: str, kw: dict, batch: int, iters: int):
     assert np.array_equal(np.asarray(sharded_fn(codes)),
                           np.asarray(want)), f"{name} sharded"
     t_sharded = timed(sharded_fn, codes, iters=iters)
+
+    # the VMEM ledger that gates fusion eligibility
+    n_in = spec.in_features
+    vmem_u8 = lg_ops.fused_vmem_bytes(packed, batch, n_in)
+    vmem_i4 = lg_ops.fused_vmem_bytes(int4, batch, n_in)
+    slab_u8 = sum(t.table_bytes for t in packed)
+    slab_i4 = sum(t.table_bytes for t in int4)
 
     sps_fused = batch / t_fused
     return {
@@ -138,15 +200,33 @@ def _bench_config(name: str, kw: dict, batch: int, iters: int):
         "adder_width": kw["adder_width"],
         "table_bytes_int32": LS.network_table_bytes(legacy),
         "table_bytes_packed": LS.network_table_bytes(packed),
+        "table_bytes_int4": LS.network_table_bytes(int4),
+        "table_residency_ratio_int4": round(slab_i4 / slab_u8, 3),
+        "vmem_bytes_fused_uint8": vmem_u8,
+        "vmem_bytes_fused_int4": vmem_i4,
+        "vmem_ratio_int4_vs_uint8": round(vmem_i4 / vmem_u8, 3),
+        "vmem_tile_bytes_grid": lg_ops.fused_tile_bytes(
+            packed, bb_pair, n_in),
+        "vmem_tile_bytes_pipelined": lg_ops.fused_tile_bytes(
+            packed, bb_pair, n_in, pipeline=True),
+        "pipeline_pair_block_b": bb_pair,
         "seed_per_layer_int32_ms": round(t_seed * 1e3, 3),
         "per_layer_int32_flat_ms": round(t_pl_i32 * 1e3, 3),
         "per_layer_packed_ms": round(t_pl * 1e3, 3),
         "fused_packed_ms": round(t_fused * 1e3, 3),
+        "fused_int4_ms": round(t_int4 * 1e3, 3),
+        "fused_serial_tile_ms": round(t_serial_tile * 1e3, 3),
+        "fused_pipelined_ms": round(t_pipe * 1e3, 3),
+        "block_b_tuned": bb_serial,
+        "block_b_tuned_pipelined": bb_pipe,
         "samples_per_sec_seed": round(batch / t_seed),
         "samples_per_sec_fused": round(sps_fused),
+        "samples_per_sec_int4": round(batch / t_int4),
         "tokens_per_sec_fused": round(sps_fused),
         "speedup_fused_vs_seed": round(t_seed / t_fused, 2),
         "speedup_packed_vs_int32": round(t_pl_i32 / t_pl, 2),
+        "speedup_int4_vs_uint8": round(t_fused / t_int4, 2),
+        "speedup_pipelined_vs_serial": round(t_serial_tile / t_pipe, 2),
         "sharded_devices": n_dev,
         "sharded_fused_ms": round(t_sharded * 1e3, 3),
         "samples_per_sec_sharded": round(batch / t_sharded),
@@ -242,6 +322,12 @@ def _bench_artifact(fast: bool):
         art = load_artifact(path)          # verify=True: hash-checked
         loads.append(time.perf_counter() - t0)
     cold_load_s = float(np.median(loads))
+    loads_packed = []
+    for _ in range(5):
+        t0 = time.perf_counter()
+        art_packed = load_artifact(path, unpack_int4=False)
+        loads_packed.append(time.perf_counter() - t0)
+    cold_load_packed_s = float(np.median(loads_packed))
 
     # a benchmark of a wrong loader is worthless
     codes = jax.random.randint(jax.random.key(3),
@@ -250,6 +336,10 @@ def _bench_artifact(fast: bool):
     got = np.asarray(lg_ops.lut_network_fused(art.tables, codes,
                                               block_b=256))
     assert np.array_equal(want, got), "artifact round-trip not bit-exact"
+    got_packed = np.asarray(lg_ops.lut_network_fused(
+        art_packed.tables, codes, block_b=256))
+    assert np.array_equal(want, got_packed), \
+        "packed artifact round-trip not bit-exact"
 
     # hot-swap drill: stream long enough that the new engine's
     # trace+compile warm-up ENDS while requests still arrive
@@ -281,9 +371,12 @@ def _bench_artifact(fast: bool):
         "build_from_scratch_ms": round(build_s * 1e3, 1),
         "save_ms": round(save_s * 1e3, 2),
         "cold_load_ms": round(cold_load_s * 1e3, 2),
+        "cold_load_packed_ms": round(cold_load_packed_s * 1e3, 2),
         "speedup_cold_load_vs_build": round(build_s / cold_load_s, 1),
         "artifact_slab_bytes": int(art.manifest["total_slab_bytes"]),
         "table_bytes_packed": LS.network_table_bytes(tables),
+        "table_bytes_loaded_packed": LS.network_table_bytes(
+            art_packed.tables),
         "swap_requests": requests,
         "swap_rate": rate,
         "swap_dropped": int(dropped),
@@ -303,14 +396,26 @@ def run(fast: bool = False, write_json: bool = False):
     artifact = _bench_artifact(fast)
 
     cols = ["config", "B", "seed(i32)ms", "per-layer(u8)ms",
-            "fused(u8)ms", f"sharded-{results[0]['sharded_devices']}d-ms",
-            "fused-vs-seed", "sharded-vs-fused"]
+            "fused(u8)ms", "fused(i4)ms", "pipelined-ms",
+            f"sharded-{results[0]['sharded_devices']}d-ms",
+            "fused-vs-seed", "pipe-vs-serial"]
     rows = [[r["name"], r["batch"], r["seed_per_layer_int32_ms"],
              r["per_layer_packed_ms"], r["fused_packed_ms"],
+             r["fused_int4_ms"], r["fused_pipelined_ms"],
              r["sharded_fused_ms"],
              f'{r["speedup_fused_vs_seed"]}x',
-             f'{r["speedup_sharded_vs_fused"]}x'] for r in results]
+             f'{r["speedup_pipelined_vs_serial"]}x'] for r in results]
     print_table("LUT inference engine (CPU interpret proxy)", cols, rows)
+    print_table(
+        "VMEM ledger: int4 in-kernel unpack + tile pipeline",
+        ["config", "tables(u8)B", "tables(i4)B", "residency-ratio",
+         "vmem-fused(i4)B", "tile(grid)B", "tile(pipe)B",
+         "block_b", "block_b(pipe)"],
+        [[r["name"], r["table_bytes_packed"],
+          r["table_bytes_int4"], r["table_residency_ratio_int4"],
+          r["vmem_bytes_fused_int4"], r["vmem_tile_bytes_grid"],
+          r["vmem_tile_bytes_pipelined"], r["block_b_tuned"],
+          r["block_b_tuned_pipelined"]] for r in results])
     print_table(
         "deadline-flush serving (real threads, Poisson arrivals)",
         ["microbatch", "deadline_ms", "rate", "p50_ms", "p99_ms",
@@ -320,16 +425,20 @@ def run(fast: bool = False, write_json: bool = False):
           serving["straggler_p99_ms"], serving["p99_under_deadline"]]])
     print_table(
         "artifact store: compile-once cold load + hot-swap blackout",
-        ["build_ms", "cold_load_ms", "speedup", "slab_bytes",
-         "swap_dropped", "blackout_ms", "warm_ms"],
+        ["build_ms", "cold_load_ms", "cold_load_packed_ms", "speedup",
+         "slab_bytes", "packed_table_bytes", "swap_dropped",
+         "blackout_ms", "warm_ms"],
         [[artifact["build_from_scratch_ms"], artifact["cold_load_ms"],
+          artifact["cold_load_packed_ms"],
           f'{artifact["speedup_cold_load_vs_build"]}x',
-          artifact["artifact_slab_bytes"], artifact["swap_dropped"],
+          artifact["artifact_slab_bytes"],
+          artifact["table_bytes_loaded_packed"],
+          artifact["swap_dropped"],
           artifact["swap_blackout_ms"], artifact["swap_warm_ms"]]])
 
     payload = {
         "bench": "lut_infer",
-        "schema_version": 3,
+        "schema_version": 4,
         "backend": jax.default_backend(),
         "interpret": jax.default_backend() != "tpu",
         "fast": fast,

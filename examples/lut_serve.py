@@ -76,7 +76,9 @@ def compile_or_load(art_dir: str, train_steps: int):
         subdir = os.path.join(art_dir, mid)
         t0 = time.monotonic()
         if find_artifacts(subdir):
-            art = load_artifact(subdir)
+            # unpack_int4=False: int4 slabs stay two-codes-per-byte
+            # from disk into the fused kernel (in-kernel nibble unpack)
+            art = load_artifact(subdir, unpack_int4=False)
             print(f"  {mid}: cold-loaded {art.artifact_id[:12]} in "
                   f"{(time.monotonic() - t0) * 1e3:.1f} ms (no training)")
         else:
@@ -84,7 +86,7 @@ def compile_or_load(art_dir: str, train_steps: int):
             path = save_artifact(subdir, tables, name=mid, spec=spec,
                                  provenance=dict(kw,
                                                  train_steps=train_steps))
-            art = load_artifact(path)
+            art = load_artifact(path, unpack_int4=False)
             print(f"  {mid}: trained+compiled in "
                   f"{time.monotonic() - t0:.1f} s -> "
                   f"{art.artifact_id[:12]} "

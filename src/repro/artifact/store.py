@@ -33,11 +33,18 @@ Design points
   in-memory synthesis (tests/test_artifact.py).
 * **int4 nibble packing** (``int4=True``): table slabs whose output
   codes fit in 4 bits (every beta<=1 and beta<=2-with-adder sub-table,
-  plus narrow adder tables) are stored two codes per byte and unpacked
-  to uint8 at load — halving the on-disk footprint of exactly the slabs
-  the ROADMAP's VMEM follow-up targets.  The manifest records which
-  slabs are nibble-packed (``notes.int4``) so the in-kernel unpack path
-  can later consume the same format directly.
+  plus narrow adder tables) are stored two codes per byte — halving the
+  on-disk footprint of exactly the slabs the VMEM budget cares about.
+  ``load_artifact(..., unpack_int4=False)`` keeps them packed: the slab
+  is reshaped (table axis halved) as a zero-copy view straight off the
+  memmap, the ``LayerTables.sub_packed``/``add_packed`` flags are set,
+  and the fused kernel's in-kernel shift/mask unpack
+  (kernels/lut_gather) consumes the two-codes-per-byte layout directly,
+  so table residency stays halved END TO END — disk, host memory, and
+  VMEM.  The default (``unpack_int4=True``) expands to uint8 at load
+  for consumers of the legacy layout (the per-layer reference oracle).
+  Saving already-packed tables writes the bytes back verbatim under
+  ``encoding: int4`` — pack state never changes the artifact id.
 * **Versioned**: ``schema_version`` gates the reader — a manifest from
   a FUTURE schema is refused with a clear error instead of being
   misparsed; truncated slab files are detected before any array is
@@ -55,7 +62,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import atomic_dir, sha256_bytes, sha256_file
-from repro.core.lut_synth import LayerTables
+from repro.core.lut_synth import (LayerTables, code_bits, nibble_pack,
+                                  nibble_unpack)
 from repro.core.lutdnn import ModelSpec
 from repro.core.quant import QuantSpec
 
@@ -66,9 +74,10 @@ SLAB_FILE = "slabs.bin"
 _ALIGN = 64
 
 INT4_NOTE = ("slabs with encoding=int4 hold two 4-bit codes per byte "
-             "(low nibble first); loaders unpack to uint8 today — the "
-             "ROADMAP VMEM follow-up is an in-kernel nibble unpack so "
-             "the packed form stays resident end-to-end")
+             "(low nibble first); load_artifact(unpack_int4=False) "
+             "keeps them packed for the fused kernel's in-kernel "
+             "nibble unpack, so the halved residency survives "
+             "end-to-end (disk -> host -> VMEM)")
 
 
 class ArtifactError(RuntimeError):
@@ -105,33 +114,10 @@ class Artifact:
         return ModelSpec(**kw)
 
 
-# ---------------------------------------------------------------------------
-# int4 nibble packing (two codes per byte, low nibble first)
-# ---------------------------------------------------------------------------
-
-def _pack_int4(arr: np.ndarray) -> np.ndarray:
-    flat = np.ascontiguousarray(arr, np.uint8).reshape(-1)
-    if flat.size % 2:
-        flat = np.concatenate([flat, np.zeros(1, np.uint8)])
-    return (flat[0::2] | (flat[1::2] << 4)).astype(np.uint8)
-
-
-def _unpack_int4(packed: np.ndarray, shape, dtype) -> np.ndarray:
-    out = np.empty(packed.size * 2, np.uint8)
-    out[0::2] = packed & 0xF
-    out[1::2] = packed >> 4
-    n = int(np.prod(shape, dtype=np.int64))
-    return out[:n].reshape(shape).astype(dtype)
-
-
-def _code_bits(t: LayerTables, which: str) -> int:
-    """Bit width of the codes a table slab stores (decides int4
-    eligibility from metadata, never from a data scan)."""
-    if which == "sub_table":
-        return t.sub_bits if t.adder_width > 1 else \
-            (16 if t.is_output else t.out_bits)
-    return 16 if t.is_output else t.out_bits          # add_table
-
+# int4 nibble pack/unpack and the code-width metadata that decides
+# eligibility are shared with the kernel side: core/lut_synth owns them
+# (nibble_pack / nibble_unpack / code_bits) so the on-disk layout and
+# the in-kernel unpack can never diverge.
 
 # ---------------------------------------------------------------------------
 # writer
@@ -205,10 +191,27 @@ def save_artifact(out_dir: str, tables: List[LayerTables], *,
                 arrays[key] = None
                 continue
             sname = f"L{i:02d}.{key}"
-            if (int4 and key in ("sub_table", "add_table")
+            already_packed = (key == "sub_table" and t.sub_packed) or \
+                (key == "add_table" and t.add_packed)
+            if already_packed and not int4:
+                # int4=False promises raw slabs everywhere: expand the
+                # packed slab so the bytes (and artifact id) match a
+                # raw save of the same network from unpacked tables
+                logical = arr.shape[:-1] + (arr.shape[-1] * 2,)
+                arrays[key] = add_slab(
+                    sname, nibble_unpack(arr, logical, np.uint8),
+                    "raw", logical, np.uint8)
+            elif already_packed:
+                # slab bytes ARE the int4 encoding — write verbatim
+                # under the LOGICAL shape, so the artifact id matches a
+                # save of the same network from unpacked tables
+                logical = arr.shape[:-1] + (arr.shape[-1] * 2,)
+                arrays[key] = add_slab(sname, arr, "int4",
+                                       logical, np.uint8)
+            elif (int4 and key in ("sub_table", "add_table")
                     and arr.dtype == np.uint8 and arr.size
-                    and _code_bits(t, key) <= 4):
-                arrays[key] = add_slab(sname, _pack_int4(arr), "int4",
+                    and code_bits(t, key) <= 4):
+                arrays[key] = add_slab(sname, nibble_pack(arr), "int4",
                                        arr.shape, arr.dtype)
             else:
                 arrays[key] = add_slab(sname, arr, "raw",
@@ -279,10 +282,15 @@ def find_artifacts(root: str) -> List[str]:
         os.path.join(p, MANIFEST)), reverse=True)
 
 
-def load_artifact(path: str, verify: bool = True) -> Artifact:
+def load_artifact(path: str, verify: bool = True,
+                  unpack_int4: bool = True) -> Artifact:
     """Reconstruct ``LayerTables`` from an artifact directory (or a
     directory of artifacts — newest wins).  ``verify=True`` re-hashes
-    every slab against the manifest before any array is built."""
+    every slab against the manifest before any array is built.
+    ``unpack_int4=False`` keeps ``encoding: int4`` table slabs in their
+    two-codes-per-byte form (zero-copy memmap view, table axis halved,
+    ``sub_packed``/``add_packed`` set) for the fused kernel's in-kernel
+    unpack — table residency stays halved end-to-end."""
     hits = find_artifacts(path)
     if not hits:
         raise ArtifactError(f"no artifact manifest under {path!r}")
@@ -325,26 +333,42 @@ def load_artifact(path: str, verify: bool = True) -> Artifact:
         s = by_name[slab_name]
         raw = mm[s["offset"]:s["offset"] + s["nbytes"]]
         if s["encoding"] == "int4":
-            return _unpack_int4(np.asarray(raw), s["shape"], s["dtype"])
+            return nibble_unpack(np.asarray(raw), s["shape"], s["dtype"])
         if s["encoding"] != "raw":
             raise ArtifactError(
                 f"unknown slab encoding {s['encoding']!r} for "
                 f"{slab_name!r}")
         return raw.view(s["dtype"]).reshape(s["shape"])
 
+    def table_array(slab_name: str):
+        """-> (array, packed) for a sub/add table slab; packed means
+        the returned array keeps two int4 codes per byte."""
+        s = by_name[slab_name]
+        shape = s["shape"]
+        if (not unpack_int4 and s["encoding"] == "int4"
+                and shape and shape[-1] % 2 == 0
+                and int(np.prod(shape, dtype=np.int64)) == 2 * s["nbytes"]):
+            raw = mm[s["offset"]:s["offset"] + s["nbytes"]]
+            pshape = tuple(shape[:-1]) + (shape[-1] // 2,)
+            return raw.view(np.uint8).reshape(pshape), True
+        return array(slab_name), False
+
     tables: List[LayerTables] = []
     for lm in manifest["layers"]:
         a = lm["arrays"]
         routing = array(a["routing"])
+        sub, sub_packed = table_array(a["sub_table"])
+        add, add_packed = table_array(a["add_table"])
         oq = QuantSpec(**lm["out_quant"])
         tables.append(LayerTables(
             conn=jnp.asarray(array(a["conn"])),
-            sub_table=jnp.asarray(array(a["sub_table"])),
-            add_table=jnp.asarray(array(a["add_table"])),
+            sub_table=jnp.asarray(sub),
+            add_table=jnp.asarray(add),
             in_bits=lm["in_bits"], sub_bits=lm["sub_bits"],
             out_bits=lm["out_bits"], fan_in=lm["fan_in"],
             adder_width=lm["adder_width"], is_output=lm["is_output"],
             out_quant=oq, sub_quant=QuantSpec(**lm["sub_quant"]),
             table_dtype=jnp.dtype(lm["table_dtype"]),
-            routing=None if routing is None else jnp.asarray(routing)))
+            routing=None if routing is None else jnp.asarray(routing),
+            sub_packed=sub_packed, add_packed=add_packed))
     return Artifact(path=adir, manifest=manifest, tables=tables)

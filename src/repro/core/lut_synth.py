@@ -42,6 +42,15 @@ class LayerTables:
     the tables exist, so rebuilding it on every trace (as
     ``ops.lut_network_fused`` used to) was pure waste.  None when the
     packed address is too wide for exact f32 matmul routing.
+
+    ``sub_packed`` / ``add_packed`` mark int4 NIBBLE-packed slabs: two
+    4-bit codes per byte, low nibble first, table axis halved —
+    ``sub_table`` becomes (n_out, A, K//2) uint8 and ``add_table``
+    (n_out, Ka//2) uint8.  The fused kernel unpacks with a shift/mask
+    per lookup (kernels/lut_gather), so the packed form stays resident
+    in VMEM end-to-end; ``pack_tables_int4`` converts a synthesised
+    network in memory and repro/artifact loads ``encoding: int4`` slabs
+    straight into this layout.
     """
 
     conn: jnp.ndarray        # (n_out, A, F) int32 gather indices
@@ -57,10 +66,13 @@ class LayerTables:
     sub_quant: QuantSpec
     table_dtype: jnp.dtype = jnp.int32   # dtype of sub_table (packed: uint8)
     routing: Optional[jnp.ndarray] = None  # (n_in, n_out*A) f32, or None
+    sub_packed: bool = False  # sub_table holds two int4 codes per byte
+    add_packed: bool = False  # add_table holds two int4 codes per byte
 
     @property
     def table_bytes(self) -> int:
-        """Bytes of truth-table payload (sub + adder tables)."""
+        """Bytes of truth-table payload (sub + adder tables) as STORED
+        — int4-packed slabs count their halved residency."""
         return int(self.sub_table.size * self.sub_table.dtype.itemsize
                    + self.add_table.size * self.add_table.dtype.itemsize)
 
@@ -68,6 +80,91 @@ class LayerTables:
 def table_dtype_for(bits: int) -> jnp.dtype:
     """Narrowest supported dtype for `bits`-bit unsigned output codes."""
     return jnp.uint8 if bits <= 8 else jnp.int32
+
+
+# --------------------------------------------------------------------------
+# int4 nibble packing (two codes per byte, low nibble first)
+# --------------------------------------------------------------------------
+
+def code_bits(t: LayerTables, which: str) -> int:
+    """Bit width of the codes a table slab stores (decides int4
+    eligibility from metadata, never from a data scan)."""
+    if which == "sub_table":
+        return t.sub_bits if t.adder_width > 1 else \
+            (16 if t.is_output else t.out_bits)
+    return 16 if t.is_output else t.out_bits          # add_table
+
+
+def nibble_pack(arr: np.ndarray) -> np.ndarray:
+    """Flatten ``arr`` and pack two 4-bit codes per byte (low nibble
+    first: byte j = code 2j | code 2j+1 << 4), zero-padding odd sizes."""
+    flat = np.ascontiguousarray(arr, np.uint8).reshape(-1)
+    if flat.size % 2:
+        flat = np.concatenate([flat, np.zeros(1, np.uint8)])
+    return (flat[0::2] | (flat[1::2] << 4)).astype(np.uint8)
+
+
+def nibble_unpack(packed: np.ndarray, shape, dtype) -> np.ndarray:
+    """Inverse of ``nibble_pack``: bytes (any shape, flat pairing order)
+    back to ``shape`` codes."""
+    packed = np.asarray(packed, np.uint8).reshape(-1)
+    out = np.empty(packed.size * 2, np.uint8)
+    out[0::2] = packed & 0xF
+    out[1::2] = packed >> 4
+    n = int(np.prod(shape, dtype=np.int64))
+    return out[:n].reshape(shape).astype(dtype)
+
+
+def _slab_packable(t: LayerTables, which: str) -> bool:
+    slab = getattr(t, which)
+    return (slab.dtype == jnp.uint8 and slab.size > 0
+            and slab.shape[-1] % 2 == 0 and code_bits(t, which) <= 4)
+
+
+def pack_tables_int4(tables: List[LayerTables]) -> List[LayerTables]:
+    """Nibble-pack every eligible (<=4-bit-code uint8) sub/add slab of a
+    synthesised network, halving its VMEM residency.  The table axis is
+    halved in place — (n_out, A, K) -> (n_out, A, K//2) — so the slab
+    keeps its (neuron, sub-neuron) geometry and the fused kernel can
+    offset flat indices exactly as for unpacked slabs (K = 2**(b*F) is
+    always even, so rows never straddle a byte).  Ineligible slabs
+    (int32 logit tables, >4-bit codes) pass through untouched; already
+    packed tables are returned as-is."""
+    out = []
+    for t in tables:
+        rep = {}
+        if not t.sub_packed and _slab_packable(t, "sub_table"):
+            s = np.asarray(t.sub_table)
+            rep["sub_table"] = jnp.asarray(
+                nibble_pack(s).reshape(s.shape[:-1] + (s.shape[-1] // 2,)))
+            rep["sub_packed"] = True
+        if not t.add_packed and _slab_packable(t, "add_table"):
+            a = np.asarray(t.add_table)
+            rep["add_table"] = jnp.asarray(
+                nibble_pack(a).reshape(a.shape[:-1] + (a.shape[-1] // 2,)))
+            rep["add_packed"] = True
+        out.append(dataclasses.replace(t, **rep) if rep else t)
+    return out
+
+
+def unpack_tables_int4(tables: List[LayerTables]) -> List[LayerTables]:
+    """Expand nibble-packed slabs back to one uint8 code per byte (the
+    layout the per-layer reference oracle consumes)."""
+    out = []
+    for t in tables:
+        rep = {}
+        if t.sub_packed:
+            s = np.asarray(t.sub_table)
+            rep["sub_table"] = jnp.asarray(nibble_unpack(
+                s, s.shape[:-1] + (s.shape[-1] * 2,), np.uint8))
+            rep["sub_packed"] = False
+        if t.add_packed:
+            a = np.asarray(t.add_table)
+            rep["add_table"] = jnp.asarray(nibble_unpack(
+                a, a.shape[:-1] + (a.shape[-1] * 2,), np.uint8))
+            rep["add_packed"] = False
+        out.append(dataclasses.replace(t, **rep) if rep else t)
+    return out
 
 
 def _enum_codes(n_slots: int, bits: int) -> np.ndarray:

@@ -51,6 +51,44 @@ into bandwidth savings.  Steps 1 and 3 are vector gathers (VPU); step 2
 is shift/add; there is no MXU work — LUT inference is gather-bound on
 TPU, and the roofline comparison LUT-vs-matmul inference is reported by
 benchmarks/table8_cost_model.py.
+
+Memory layout
+-------------
+
+**Slab packing.**  Each layer contributes three VMEM-resident inputs:
+the route (the (n_in, TN*A) float32 routing matrix, or the (TN, A, F)
+int32 conn when matmul routing is off), the (TN, A, K) sub-table slab,
+and the (TN, Ka) adder slab.  Slabs are indexed FLAT: code address
+``idx`` is offset by the (neuron, sub-neuron) slab base
+``n*A*K + a*K`` and the (TN, A, K) view is gathered as one 1-D array.
+Slabs whose codes fit 4 bits may arrive int4 NIBBLE-PACKED — two codes
+per byte, low nibble first, table axis halved to (TN, A, K//2) — the
+same two-codes-per-byte layout repro/artifact persists on disk, so a
+cold-loaded ``encoding: int4`` slab flows into the kernel with no
+expansion anywhere.  The unpack is a shift/mask at lookup time: logical
+flat index ``fi`` reads byte ``fi >> 1`` and extracts nibble
+``fi & 1`` via ``(byte >> 4*(fi & 1)) & 0xF``.  K = 2**(b_in*F) and
+Ka = 2**(A*b_sub) are always even, so slab rows never straddle a byte
+and the flat-base arithmetic is unchanged.  Packing halves table
+residency, which is exactly the ``ops.fused_vmem_bytes`` term that
+gates fusion eligibility (``ops.can_fuse``).
+
+**Scratch staging.**  The fused kernel stages inter-layer activation
+codes through ONE (TB, max_width) int32 VMEM scratch buffer: layer l
+reads ``scratch[:, :n_in]`` and writes ``scratch[:, :n_out]``; only the
+first read and last write touch the in/out refs.
+
+**Tile pipeline.**  ``pipeline=False`` (grid mode): the batch axis is a
+pallas grid, one (TB, n_in) block in / (TB, n_out) block out per step,
+tables re-bound (VMEM-resident, index 0) every step.  ``pipeline=True``
+(double-buffered mode): the kernel runs as a SINGLE grid step with the
+codes/out refs left in HBM (``memory_space=ANY``) and drives its own
+tile loop with async DMA — two (TB, n_in) in-slots, two (TB, n_out)
+out-slots, and a pair of DMA semaphore arrays.  Step i starts the copy
+of tile i+1 before waiting on tile i, and an out-slot is reclaimed only
+after tile i-2's store has landed, so the HBM transfers of neighbouring
+tiles overlap the current tile's compute instead of serialising on one
+buffer pair.
 """
 from __future__ import annotations
 
@@ -67,6 +105,11 @@ from jax.experimental.pallas import tpu as pltpu
 # packed table addresses above this width lose f32-matmul exactness
 # headroom (and the tables could never fit VMEM anyway)
 MATMUL_ROUTE_MAX_BITS = 20
+
+# the double-buffered kernel unrolls its tile loop (static slot
+# indices) up to this many tiles; beyond it a rolled fori_loop bounds
+# program size at the cost of dynamic slot slicing
+PIPELINE_UNROLL_MAX_TILES = 32
 
 
 def routing_matrix(conn, in_bits: int, n_in: int) -> jnp.ndarray:
@@ -103,19 +146,33 @@ def _route_pack(codes, conn, in_bits: int):
     return jnp.sum(gathered.astype(jnp.int32) << shifts, axis=-1)
 
 
+def _nibble_gather(slab, fi, out_shape):
+    """Gather int4 codes from a nibble-packed slab by LOGICAL flat
+    index: byte ``fi >> 1``, low nibble when ``fi`` is even."""
+    byte = jnp.take(slab.reshape(-1), (fi >> 1).reshape(-1)
+                    ).reshape(out_shape).astype(jnp.int32)
+    return (byte >> ((fi & 1) * 4)) & 0xF
+
+
 def _layer_compute(codes, route, sub_t, add_t, *, in_bits: int,
                    sub_bits: int, use_adder: bool,
                    matmul_route: bool = False,
-                   broadcast_tables: bool = False):
+                   broadcast_tables: bool = False,
+                   sub_packed: bool = False,
+                   add_packed: bool = False):
     """One LUT layer on in-VMEM values.
 
     codes: (TB, n_in) int32; route: (TN, A, F) int32 conn, or the
     (n_in, TN*A) float32 routing matrix when ``matmul_route``;
-    sub_t: (TN, A, K) uint8|int32; add_t: (TN, Ka) uint8|int32.
-    Returns (TB, TN) int32 output codes.
+    sub_t: (TN, A, K) uint8|int32 — (TN, A, K//2) uint8 two codes per
+    byte when ``sub_packed``; add_t: (TN, Ka) uint8|int32, halved
+    likewise under ``add_packed``.  Returns (TB, TN) int32 codes.
     """
+    assert not (broadcast_tables and (sub_packed or add_packed)), \
+        "int4-packed slabs have no broadcast (seed-layout) form"
     TB = codes.shape[0]
-    TN, A, K = sub_t.shape
+    TN, A, Ks = sub_t.shape
+    K = Ks * 2 if sub_packed else Ks                # logical table width
 
     # 1+2) route + pack the table address (slot 0 = low bits)
     if matmul_route:
@@ -137,17 +194,22 @@ def _layer_compute(codes, route, sub_t, add_t, *, in_bits: int,
             idx[..., None], axis=-1)[..., 0].astype(jnp.int32)
     else:
         # flat-index gather: offset the packed address by the slab base
-        # so the (TN, A, K) slab is indexed as one 1-D array
+        # so the (TN, A, K) slab is indexed as one 1-D array; the base
+        # uses the LOGICAL width, so it is byte-exact for packed slabs
+        # too (K even -> rows are byte-aligned)
         base = (jax.lax.broadcasted_iota(jnp.int32, (1, TN, A), 1) * (A * K)
                 + jax.lax.broadcasted_iota(jnp.int32, (1, TN, A), 2) * K)
-        sub = jnp.take(sub_t.reshape(-1), (base + idx).reshape(-1)
-                       ).reshape(TB, TN, A).astype(jnp.int32)
+        if sub_packed:
+            sub = _nibble_gather(sub_t, base + idx, (TB, TN, A))
+        else:
+            sub = jnp.take(sub_t.reshape(-1), (base + idx).reshape(-1)
+                           ).reshape(TB, TN, A).astype(jnp.int32)
 
     if not use_adder:
         return sub[..., 0]
 
     # 4) PolyLUT-Add: pack the A sub-codes, look up the adder table
-    Ka = add_t.shape[-1]
+    Ka = add_t.shape[-1] * 2 if add_packed else add_t.shape[-1]
     ashift = (sub_bits * jax.lax.broadcasted_iota(jnp.int32, (1, 1, A), 2))
     aidx = jnp.sum(sub << ashift, axis=-1)                    # (TB, TN)
     if broadcast_tables:
@@ -156,39 +218,62 @@ def _layer_compute(codes, route, sub_t, add_t, *, in_bits: int,
             aidx[..., None], axis=-1)[..., 0]
     else:
         abase = jax.lax.broadcasted_iota(jnp.int32, (1, TN), 1) * Ka
-        out = jnp.take(add_t.reshape(-1), (abase + aidx).reshape(-1)
-                       ).reshape(TB, TN)
+        if add_packed:
+            out = _nibble_gather(add_t, abase + aidx, (TB, TN))
+        else:
+            out = jnp.take(add_t.reshape(-1), (abase + aidx).reshape(-1)
+                           ).reshape(TB, TN)
     return out.astype(jnp.int32)
 
 
 def _lut_kernel(codes_ref, conn_ref, sub_ref, add_ref, out_ref,
                 *, in_bits: int, sub_bits: int, use_adder: bool,
-                broadcast_tables: bool):
+                broadcast_tables: bool, sub_packed: bool,
+                add_packed: bool):
     out_ref[...] = _layer_compute(
         codes_ref[...].astype(jnp.int32), conn_ref[...], sub_ref[...],
         add_ref[...], in_bits=in_bits, sub_bits=sub_bits,
-        use_adder=use_adder, broadcast_tables=broadcast_tables)
+        use_adder=use_adder, broadcast_tables=broadcast_tables,
+        sub_packed=sub_packed, add_packed=add_packed)
+
+
+def dummy_add_table(n_rows: int, dtype) -> jnp.ndarray:
+    """Zero-width-safe stand-in for an adder-off layer's add table:
+    Pallas cannot bind a (n, 0) block, so every engine binds this
+    1-entry-per-row dummy instead and statically skips the adder path
+    (``use_adder`` must be derived BEFORE substituting it — a dummy is
+    never packed and never read)."""
+    return jnp.zeros((n_rows, 1), dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("in_bits", "sub_bits",
                                              "block_b", "block_n",
                                              "interpret",
-                                             "broadcast_tables"))
+                                             "broadcast_tables",
+                                             "sub_packed", "add_packed"))
 def lut_gather_pallas(codes: jnp.ndarray, conn: jnp.ndarray,
                       sub_table: jnp.ndarray, add_table: jnp.ndarray,
                       in_bits: int, sub_bits: int,
                       block_b: int = 256, block_n: int = 32,
                       interpret: bool = False,
-                      broadcast_tables: bool = False) -> jnp.ndarray:
+                      broadcast_tables: bool = False,
+                      sub_packed: bool = False,
+                      add_packed: bool = False) -> jnp.ndarray:
     """codes: (B, n_in) int32 activation codes on this layer's grid;
     conn: (n_out, A, F); sub_table: (n_out, A, K) uint8 or int32;
     add_table: (n_out, Ka), Ka == 0 disables the adder path.
-    Returns (B, n_out) int32.  ``broadcast_tables=True`` re-enables the
-    seed kernel's per-batch table broadcast (benchmark baseline only).
+    ``sub_packed`` / ``add_packed`` declare int4 nibble-packed slabs
+    (table axis halved, unpacked in-kernel).  Returns (B, n_out) int32.
+    ``broadcast_tables=True`` re-enables the seed kernel's per-batch
+    table broadcast (benchmark baseline only).
     """
     B, n_in = codes.shape
     n_out, A, F = conn.shape
+    # adder on/off is decided by the REAL table's width, before the
+    # zero-width dummy is substituted; an adder-off layer's add slab is
+    # by definition unread, so its packing flag is forced off too
     use_adder = add_table.shape[-1] > 0
+    add_packed = add_packed and use_adder
 
     TB = min(block_b, B)
     TN = min(block_n, n_out)
@@ -196,18 +281,19 @@ def lut_gather_pallas(codes: jnp.ndarray, conn: jnp.ndarray,
     pad_n = (-n_out) % TN
     if pad_b:
         codes = jnp.pad(codes, ((0, pad_b), (0, 0)))
+    if not use_adder:      # zero-width-safe: bind the 1-entry dummy
+        add_table = dummy_add_table(n_out, sub_table.dtype)
     if pad_n:
         conn = jnp.pad(conn, ((0, pad_n), (0, 0), (0, 0)))
         sub_table = jnp.pad(sub_table, ((0, pad_n), (0, 0), (0, 0)))
-        if use_adder:
-            add_table = jnp.pad(add_table, ((0, pad_n), (0, 0)))
-    if not use_adder:      # give the kernel a non-empty ref to bind
-        add_table = jnp.zeros((n_out + pad_n, 1), sub_table.dtype)
+        add_table = jnp.pad(add_table, ((0, pad_n), (0, 0)))
     Bp, Np = B + pad_b, n_out + pad_n
 
     kernel = functools.partial(_lut_kernel, in_bits=in_bits,
                                sub_bits=sub_bits, use_adder=use_adder,
-                               broadcast_tables=broadcast_tables)
+                               broadcast_tables=broadcast_tables,
+                               sub_packed=sub_packed,
+                               add_packed=add_packed)
     out = pl.pallas_call(
         kernel,
         grid=(Bp // TB, Np // TN),
@@ -229,50 +315,147 @@ def lut_gather_pallas(codes: jnp.ndarray, conn: jnp.ndarray,
 # Fused multi-layer engine: the whole network in one pallas_call
 # --------------------------------------------------------------------------
 
+def _run_layers(refs, metas, codes, scratch, emit):
+    """Shared fused-layer loop: stage ``codes`` into ``scratch``, run
+    every layer of ``metas`` through ``_layer_compute``, hand the last
+    layer's output to ``emit``."""
+    n_layers = len(metas)
+    n_in0 = metas[0][3]
+    scratch[:, :n_in0] = codes.astype(jnp.int32)
+    for l, (in_bits, sub_bits, use_adder, n_in, n_out, mm,
+            sub_packed, add_packed) in enumerate(metas):
+        out = _layer_compute(
+            scratch[:, :n_in], refs[1 + 3 * l][...], refs[2 + 3 * l][...],
+            refs[3 + 3 * l][...], in_bits=in_bits, sub_bits=sub_bits,
+            use_adder=use_adder, matmul_route=mm,
+            sub_packed=sub_packed, add_packed=add_packed)
+        if l == n_layers - 1:
+            emit(out)
+        else:
+            scratch[:, :n_out] = out
+
+
 def _fused_kernel(*refs, metas: Tuple[Tuple[int, int, bool, int, int,
-                                            bool], ...]):
+                                            bool, bool, bool], ...]):
     """refs = [codes, (route, sub, add) * L, out, scratch].
 
-    metas[l] = (in_bits, sub_bits, use_adder, n_in, n_out, matmul_route)
-    — static.  route is the (n_in, n_out*A) float32 routing matrix when
-    matmul_route else the (n_out, A, F) int32 conn.  Inter-layer
-    activation codes are staged through the (TB, max_width) int32 VMEM
-    scratch; only the input read and output write touch HBM.
+    metas[l] = (in_bits, sub_bits, use_adder, n_in, n_out, matmul_route,
+    sub_packed, add_packed) — static.  route is the (n_in, n_out*A)
+    float32 routing matrix when matmul_route else the (n_out, A, F)
+    int32 conn.  Inter-layer activation codes are staged through the
+    (TB, max_width) int32 VMEM scratch; only the input read and output
+    write touch HBM.
     """
     n_layers = len(metas)
     codes_ref = refs[0]
     out_ref = refs[1 + 3 * n_layers]
     scratch = refs[2 + 3 * n_layers]
 
-    n_in0 = metas[0][3]
-    scratch[:, :n_in0] = codes_ref[...].astype(jnp.int32)
-    for l, (in_bits, sub_bits, use_adder, n_in, n_out, mm) in enumerate(metas):
-        out = _layer_compute(
-            scratch[:, :n_in], refs[1 + 3 * l][...], refs[2 + 3 * l][...],
-            refs[3 + 3 * l][...], in_bits=in_bits, sub_bits=sub_bits,
-            use_adder=use_adder, matmul_route=mm)
-        if l == n_layers - 1:
-            out_ref[...] = out
-        else:
-            scratch[:, :n_out] = out
+    def emit(out):
+        out_ref[...] = out
+
+    _run_layers(refs, metas, codes_ref[...], scratch, emit)
+
+
+def _fused_pipelined_kernel(*refs, metas, n_tiles: int):
+    """Double-buffered fused kernel: ONE grid step, codes/out refs in
+    HBM (``memory_space=ANY``), the batch-tile loop driven in-kernel
+    with async DMA.  refs = [codes_hbm, (route, sub, add) * L, out_hbm,
+    inbuf(2, TB, n_in), outbuf(2, TB, n_out), scratch, insem(2),
+    outsem(2)].
+
+    Tile i's schedule: start tile i+1's HBM->VMEM copy, wait tile i's,
+    reclaim this out-slot (wait tile i-2's VMEM->HBM store), compute,
+    start tile i's store.  Neighbouring tiles' transfers therefore
+    overlap the current tile's compute — the grid-mode path reuses one
+    buffer pair serially instead.
+    """
+    n_layers = len(metas)
+    codes_hbm = refs[0]
+    out_hbm = refs[1 + 3 * n_layers]
+    inbuf, outbuf, scratch, insem, outsem = refs[2 + 3 * n_layers:]
+    TB = inbuf.shape[1]
+
+    def in_dma(slot, i):
+        return pltpu.make_async_copy(
+            codes_hbm.at[pl.ds(i * TB, TB)], inbuf.at[slot],
+            insem.at[slot])
+
+    def out_dma(slot, i):
+        return pltpu.make_async_copy(
+            outbuf.at[slot], out_hbm.at[pl.ds(i * TB, TB)],
+            outsem.at[slot])
+
+    in_dma(0, 0).start()
+
+    if n_tiles <= PIPELINE_UNROLL_MAX_TILES:
+        # n_tiles is static: unroll with STATIC slot indices — every
+        # buffer access is a plain (not dynamic) slice and every
+        # schedule branch folds away at trace time
+        for i in range(n_tiles):
+            slot = i % 2
+            if i + 1 < n_tiles:
+                in_dma((i + 1) % 2, i + 1).start()
+            in_dma(slot, i).wait()
+            if i >= 2:             # reclaim: this slot's previous store
+                out_dma(slot, i - 2).wait()
+
+            def emit(out, slot=slot):
+                outbuf[slot] = out
+
+            _run_layers(refs, metas, inbuf[slot], scratch, emit)
+            out_dma(slot, i).start()
+    else:
+        # huge tile counts: a rolled loop bounds program size; slot
+        # indices become dynamic (traced fori_loop induction variable)
+        def step(i, carry):
+            slot = i % 2
+
+            @pl.when(i + 1 < n_tiles)
+            def _():
+                in_dma((i + 1) % 2, i + 1).start()
+
+            in_dma(slot, i).wait()
+
+            @pl.when(i >= 2)
+            def _():
+                out_dma(slot, i - 2).wait()
+
+            def emit(out):
+                outbuf[slot] = out
+
+            _run_layers(refs, metas, inbuf[slot], scratch, emit)
+            out_dma(slot, i).start()
+            return carry
+
+        jax.lax.fori_loop(0, n_tiles, step, 0)
+
+    # drain the (up to two) stores still in flight
+    if n_tiles >= 2:
+        out_dma((n_tiles - 2) % 2, n_tiles - 2).wait()
+    out_dma((n_tiles - 1) % 2, n_tiles - 1).wait()
 
 
 @functools.partial(jax.jit, static_argnames=("metas", "block_b",
-                                             "interpret"))
+                                             "interpret", "pipeline"))
 def lut_network_fused_pallas(codes: jnp.ndarray,
                              flat_tables: Tuple[jnp.ndarray, ...],
                              metas: Tuple[Tuple[int, int, bool, int, int,
-                                                bool], ...],
+                                                bool, bool, bool], ...],
                              block_b: int = 256,
-                             interpret: bool = False) -> jnp.ndarray:
+                             interpret: bool = False,
+                             pipeline: bool = False) -> jnp.ndarray:
     """Run every layer of a synthesised LUT network in one kernel.
 
     codes: (B, n_in) int32.  flat_tables: (route_l, sub_l, add_l) for
     each layer, concatenated — route_l is the matmul routing matrix or
     the conn array, per metas[l] = (in_bits, sub_bits, use_adder, n_in,
-    n_out, matmul_route).  Returns (B, n_out_last) int32.  Empty adder
-    tables must be pre-replaced by a 1-entry dummy
-    (ops.lut_network_fused does this).
+    n_out, matmul_route, sub_packed, add_packed).  Returns
+    (B, n_out_last) int32.  Empty adder tables must be pre-replaced by
+    ``dummy_add_table`` (ops.lut_network_fused does this).
+    ``pipeline=True`` switches from the grid-per-tile path to the
+    double-buffered in-kernel tile loop (module docstring, "Tile
+    pipeline").
     """
     B, n_in = codes.shape
     n_layers = len(metas)
@@ -285,6 +468,27 @@ def lut_network_fused_pallas(codes: jnp.ndarray,
     if pad_b:
         codes = jnp.pad(codes, ((0, pad_b), (0, 0)))
     Bp = B + pad_b
+
+    if pipeline:
+        kernel = functools.partial(_fused_pipelined_kernel, metas=metas,
+                                   n_tiles=Bp // TB)
+        out = pl.pallas_call(
+            kernel,
+            in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)] +
+                     [pl.BlockSpec(memory_space=pltpu.VMEM)
+                      for _ in flat_tables],
+            out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+            out_shape=jax.ShapeDtypeStruct((Bp, n_out_last), jnp.int32),
+            scratch_shapes=[
+                pltpu.VMEM((2, TB, n_in), jnp.int32),        # in slots
+                pltpu.VMEM((2, TB, n_out_last), jnp.int32),  # out slots
+                pltpu.VMEM((TB, max_width), jnp.int32),      # activations
+                pltpu.SemaphoreType.DMA((2,)),
+                pltpu.SemaphoreType.DMA((2,)),
+            ],
+            interpret=interpret,
+        )(codes, *flat_tables)
+        return out[:B]
 
     # batch tile moves through the grid; every table slab is the whole
     # array, VMEM-resident across all grid steps

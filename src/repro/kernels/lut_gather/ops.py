@@ -4,8 +4,14 @@
 synthesised LUT-DNN (list of core/lut_synth.LayerTables) layer by
 layer, and ``lut_network_fused`` runs it in a SINGLE pallas_call —
 every table slab VMEM-resident, inter-layer codes in VMEM scratch, one
-HBM read + one HBM write per forward pass.  All paths match
-core/lut_synth.lut_forward bit-exactly (tested).
+HBM read + one HBM write per forward pass.  int4 nibble-packed slabs
+(lut_synth.pack_tables_int4 or a packed artifact load) stay packed in
+VMEM and unpack per lookup in-kernel, halving table residency;
+``pipeline=True`` double-buffers the fused kernel's batch tiles so a
+tile's HBM transfers overlap its neighbour's compute; and
+``tune_block_b`` sweeps the batch-tile size.  All paths match
+core/lut_synth.lut_forward bit-exactly (tested by the cross-engine
+conformance harness, tests/test_conformance.py).
 
 ``lut_network_fused_sharded`` scales the fused engine across devices:
 shard_map over the batch axis of a data-parallel mesh, every table
@@ -36,6 +42,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.kernels.lut_gather.lut_gather import (MATMUL_ROUTE_MAX_BITS,
+                                                 dummy_add_table,
                                                  lut_gather_pallas,
                                                  lut_network_fused_pallas,
                                                  routing_matrix)
@@ -60,81 +67,69 @@ def lut_layer(codes: jnp.ndarray, conn: jnp.ndarray,
               sub_table: jnp.ndarray, add_table: jnp.ndarray,
               in_bits: int, sub_bits: int,
               force_interpret: Optional[bool] = None,
-              broadcast_tables: bool = False) -> jnp.ndarray:
+              broadcast_tables: bool = False,
+              sub_packed: bool = False,
+              add_packed: bool = False) -> jnp.ndarray:
     return lut_gather_pallas(codes, conn, sub_table, add_table,
                              in_bits=in_bits, sub_bits=sub_bits,
                              interpret=_default_interpret(force_interpret),
-                             broadcast_tables=broadcast_tables)
+                             broadcast_tables=broadcast_tables,
+                             sub_packed=sub_packed, add_packed=add_packed)
 
 
 def lut_network(tables: List, codes: jnp.ndarray,
                 force_interpret: Optional[bool] = None,
                 broadcast_tables: bool = False) -> jnp.ndarray:
     """Per-layer path: one pallas_call per layer, codes round-trip
-    through HBM between layers.  tables: List[LayerTables]."""
+    through HBM between layers.  tables: List[LayerTables]; int4
+    nibble-packed slabs run through the in-kernel unpack."""
     for t in tables:
         codes = lut_layer(codes, t.conn, t.sub_table, t.add_table,
                           t.in_bits, t.sub_bits,
                           force_interpret=force_interpret,
-                          broadcast_tables=broadcast_tables)
+                          broadcast_tables=broadcast_tables,
+                          sub_packed=getattr(t, "sub_packed", False),
+                          add_packed=getattr(t, "add_packed", False))
     return codes
 
 
-def fused_vmem_bytes(tables: List, block_b: int = 1024,
-                     n_in0: Optional[int] = None) -> int:
-    """Estimated VMEM claim of the fused kernel: all table slabs and
-    float32 routing matrices plus the int32 activation scratch and
-    in/out batch tiles.  Pass ``n_in0`` (the network's input width)
-    when known — without it the first layer's width is inferred from
-    the highest conn index, which under-counts if the connectivity
-    never touches the top input features."""
-    slab = 0
-    n_in = n_in0
-    for t in tables:
-        n_out, A, _ = t.conn.shape
-        if n_in is None:  # first layer: exact width from the cached
-            # routing matrix when synthesis stored one, else inferred
-            # from the conn indices
-            route = getattr(t, "routing", None)
-            if route is not None:
-                n_in = route.shape[0]
-            else:
-                try:
-                    n_in = int(np.asarray(t.conn).max()) + 1
-                except Exception:  # traced conn — conn-size lower bound
-                    n_in = t.conn.shape[2]
-        slab += 4 * n_in * n_out * A + t.table_bytes
-        n_in = n_out
-    widths = [t.conn.shape[0] for t in tables]
-    max_w = max(widths)
-    return slab + block_b * 4 * (max_w * 2 + widths[-1])
+def _infer_n_in0(tables: List, n_in0: Optional[int]) -> int:
+    """Network input width: as given, else exact from the first layer's
+    cached routing matrix, else inferred from the highest conn index
+    (which under-counts if connectivity never touches the top input
+    features — pass ``n_in0`` when known)."""
+    if n_in0 is not None:
+        return n_in0
+    t0 = tables[0]
+    route = getattr(t0, "routing", None)
+    if route is not None:
+        return route.shape[0]
+    try:
+        return int(np.asarray(t0.conn).max()) + 1
+    except Exception:          # traced conn — conn-size lower bound
+        return t0.conn.shape[2]
 
 
-def can_fuse(tables: List, block_b: int = 1024,
-             n_in0: Optional[int] = None) -> bool:
-    return fused_vmem_bytes(tables, block_b, n_in0) <= \
-        FUSED_VMEM_BUDGET_BYTES
-
-
-def lut_network_fused(tables: List, codes: jnp.ndarray,
-                      block_b: int = 1024,
-                      force_interpret: Optional[bool] = None) -> jnp.ndarray:
-    """Fused path: the whole network in one pallas_call.  Requires the
-    table slabs to fit the VMEM budget (see ``can_fuse``).
+def _flatten_network(tables: List, n_in0: int):
+    """Build the fused kernel's inputs: the flat (route, sub, add) list
+    and the static metas tuple — metas[l] = (in_bits, sub_bits,
+    use_adder, n_in, n_out, matmul_route, sub_packed, add_packed).
 
     Routing uses the matmul formulation (codes @ routing_matrix) per
     layer whenever the packed address width allows it.  The matrices
     come from the ``LayerTables.routing`` cache filled at synthesis
     time; only hand-built tables without one (or a width mismatch)
-    fall back to deriving the matrix from conn at trace time.
+    fall back to deriving the matrix from conn at trace time.  Empty
+    adder tables are replaced by the zero-width-safe dummy (never
+    read, never marked packed).
     """
     flat, metas = [], []
-    n_in = codes.shape[1]
+    n_in = n_in0
     for t in tables:
         n_out, _, fan_in = t.conn.shape
         use_adder = t.add_table.shape[-1] > 0
         add = (t.add_table if use_adder
-               else jnp.zeros((n_out, 1), t.sub_table.dtype))
+               else dummy_add_table(n_out, t.sub_table.dtype))
         cached = getattr(t, "routing", None)
         if cached is not None and cached.shape[0] != n_in:
             cached = None                    # synthesised for another width
@@ -144,11 +139,119 @@ def lut_network_fused(tables: List, codes: jnp.ndarray,
         route = (cached if cached is not None else
                  routing_matrix(t.conn, t.in_bits, n_in) if mm else t.conn)
         flat.extend([route, t.sub_table, add])
-        metas.append((t.in_bits, t.sub_bits, use_adder, n_in, n_out, mm))
+        metas.append((t.in_bits, t.sub_bits, use_adder, n_in, n_out, mm,
+                      getattr(t, "sub_packed", False),
+                      use_adder and getattr(t, "add_packed", False)))
         n_in = n_out
+    return tuple(flat), tuple(metas)
+
+
+def _tile_bytes(n_in0: int, widths: List[int], block_b: int,
+                pipeline: bool) -> int:
+    """int32 batch-tile + activation-scratch bytes of the fused kernel.
+    Grid mode holds one (TB, n_in) in block and one (TB, n_out_last)
+    out block; the double-buffered pipeline holds TWO of each (its DMA
+    slots).  Both stage activations through one (TB, max_width)
+    scratch."""
+    max_w = max([n_in0] + widths)
+    n_buf = 2 if pipeline else 1
+    return block_b * 4 * (n_buf * (n_in0 + widths[-1]) + max_w)
+
+
+def fused_vmem_bytes(tables: List, block_b: int = 1024,
+                     n_in0: Optional[int] = None,
+                     pipeline: bool = False) -> int:
+    """Estimated VMEM claim of the fused kernel: every table slab AT
+    ITS STORED WIDTH (int4 nibble-packed slabs count half), per-layer
+    routing (float32 matrix when matmul routing applies, int32 conn
+    otherwise, 1-entry dummy for adder-off layers), plus the int32
+    batch tiles and activation scratch of ``_tile_bytes``.
+
+    This analytic estimate is pinned against the ACTUAL flattened
+    allocation (``fused_vmem_actual``) by tests/test_conformance.py, so
+    it cannot silently drift from what the kernel binds."""
+    slab = 0
+    n_in = _infer_n_in0(tables, n_in0)
+    n_in0 = n_in
+    for t in tables:
+        n_out, A, fan_in = t.conn.shape
+        cached = getattr(t, "routing", None)
+        if cached is not None and cached.shape[0] != n_in:
+            cached = None
+        mm = cached is not None or \
+            (t.in_bits * fan_in <= MATMUL_ROUTE_MAX_BITS
+             and not isinstance(t.conn, jax.core.Tracer))
+        slab += (4 * n_in * n_out * A if mm
+                 else 4 * n_out * A * fan_in)                 # route/conn
+        slab += int(t.sub_table.size * t.sub_table.dtype.itemsize)
+        use_adder = t.add_table.shape[-1] > 0
+        slab += (int(t.add_table.size * t.add_table.dtype.itemsize)
+                 if use_adder
+                 else n_out * t.sub_table.dtype.itemsize)     # dummy
+        n_in = n_out
+    widths = [t.conn.shape[0] for t in tables]
+    return slab + _tile_bytes(n_in0, widths, block_b, pipeline)
+
+
+def fused_vmem_actual(tables: List, block_b: int = 1024,
+                      n_in0: Optional[int] = None,
+                      pipeline: bool = False) -> int:
+    """MEASURED VMEM claim: the summed bytes of the exact arrays
+    ``lut_network_fused`` hands to the kernel (flattened routes, slabs,
+    dummies) plus the buffer shapes ``lut_network_fused_pallas``
+    allocates — mirrored HERE independently of the ``_tile_bytes``
+    estimate term, so the estimator property test compares two separate
+    derivations.  The oracle ``fused_vmem_bytes`` is tested against."""
+    n_in = _infer_n_in0(tables, n_in0)
+    flat, metas = _flatten_network(tables, n_in)
+    slab = sum(int(a.size) * a.dtype.itemsize for a in flat)
+    # mirror of lut_network_fused_pallas's in/out specs + scratch_shapes
+    n_out_last = metas[-1][4]
+    max_width = max([n_in] + [m[4] for m in metas])
+    itemsize = jnp.dtype(jnp.int32).itemsize
+    if pipeline:
+        tiles = itemsize * (2 * block_b * n_in          # inbuf slots
+                            + 2 * block_b * n_out_last  # outbuf slots
+                            + block_b * max_width)      # activations
+    else:
+        tiles = itemsize * (block_b * n_in              # in block
+                            + block_b * n_out_last      # out block
+                            + block_b * max_width)      # activations
+    return slab + tiles
+
+
+def fused_tile_bytes(tables: List, block_b: int = 1024,
+                     n_in0: Optional[int] = None,
+                     pipeline: bool = False) -> int:
+    """VMEM-per-tile: just the batch-tile + activation-scratch term of
+    ``fused_vmem_bytes`` (the part that scales with ``block_b``)."""
+    n_in = _infer_n_in0(tables, n_in0)
+    return _tile_bytes(n_in, [t.conn.shape[0] for t in tables],
+                       block_b, pipeline)
+
+
+def can_fuse(tables: List, block_b: int = 1024,
+             n_in0: Optional[int] = None,
+             pipeline: bool = False) -> bool:
+    return fused_vmem_bytes(tables, block_b, n_in0, pipeline) <= \
+        FUSED_VMEM_BUDGET_BYTES
+
+
+def lut_network_fused(tables: List, codes: jnp.ndarray,
+                      block_b: int = 1024,
+                      force_interpret: Optional[bool] = None,
+                      pipeline: bool = False) -> jnp.ndarray:
+    """Fused path: the whole network in one pallas_call.  Requires the
+    table slabs to fit the VMEM budget (see ``can_fuse``).  int4
+    nibble-packed slabs (``LayerTables.sub_packed``/``add_packed``,
+    from ``lut_synth.pack_tables_int4`` or a packed artifact load) stay
+    packed in VMEM and unpack per lookup in-kernel.  ``pipeline=True``
+    double-buffers the batch tiles' HBM transfers against compute.
+    """
+    flat, metas = _flatten_network(tables, codes.shape[1])
     return lut_network_fused_pallas(
-        codes, tuple(flat), tuple(metas), block_b=block_b,
-        interpret=_default_interpret(force_interpret))
+        codes, flat, metas, block_b=block_b,
+        interpret=_default_interpret(force_interpret), pipeline=pipeline)
 
 
 def _mesh_batch_shards(mesh: Mesh) -> int:
@@ -166,7 +269,8 @@ def _mesh_batch_spec(mesh: Mesh) -> P:
 def lut_network_fused_sharded(tables: List, codes: jnp.ndarray,
                               mesh: Mesh, block_b: int = 1024,
                               force_interpret: Optional[bool] = None,
-                              fused: bool = True) -> jnp.ndarray:
+                              fused: bool = True,
+                              pipeline: bool = False) -> jnp.ndarray:
     """Data-parallel fused inference: batch sharded over the mesh's DP
     axes via shard_map, table slabs replicated (closed over — they are
     tiny by construction, so replication is free relative to moving
@@ -187,7 +291,8 @@ def lut_network_fused_sharded(tables: List, codes: jnp.ndarray,
     if fused:
         def local(c):
             return lut_network_fused(tables, c, block_b=block_b,
-                                     force_interpret=force_interpret)
+                                     force_interpret=force_interpret,
+                                     pipeline=pipeline)
     else:
         def local(c):
             return lut_network(tables, c, force_interpret=force_interpret)
@@ -198,43 +303,114 @@ def lut_network_fused_sharded(tables: List, codes: jnp.ndarray,
     return out[:B]
 
 
+def tune_block_b(tables: List, batch: int = 2048,
+                 candidates=(128, 256, 512, 1024, 2048),
+                 iters: int = 3, n_in0: Optional[int] = None,
+                 force_interpret: Optional[bool] = None,
+                 pipeline: bool = False):
+    """Sweep the fused kernel's batch-tile size and return
+    ``(best_block_b, {block_b: seconds})``.
+
+    Candidates are clamped to the probe batch and filtered to those
+    whose tile+scratch claim still fits the VMEM budget; each survivor
+    is timed over ``iters`` synchronous runs on random codes (after one
+    warm-up/compile call).  The CPU interpret proxy picks a tile as
+    readily as real hardware does — only the winner differs — so the
+    sweep is cheap enough to run at serving-process start via
+    ``make_network_fn(block_b="auto")``.
+    """
+    import time as _time
+
+    n_in = _infer_n_in0(tables, n_in0)
+    cand = sorted({min(c, batch) for c in candidates})
+    cand = [c for c in cand if can_fuse(tables, c, n_in, pipeline)]
+    if not cand:
+        # never time a config already known not to fit — on real TPU
+        # that probe can OOM the serving process at startup
+        raise ValueError(
+            "no block_b candidate fits the fused VMEM budget for this "
+            "network — serve it through the per-layer engine "
+            "(make_network_fn(fused=False))")
+    codes = jax.random.randint(jax.random.key(0), (batch, n_in), 0,
+                               2 ** tables[0].in_bits).astype(jnp.int32)
+    timings = {}
+    for bb in cand:
+        fn = jax.jit(functools.partial(
+            lut_network_fused, tables, block_b=bb,
+            force_interpret=force_interpret, pipeline=pipeline))
+        jax.block_until_ready(fn(codes))             # compile + warm
+        t0 = _time.perf_counter()
+        for _ in range(iters):
+            jax.block_until_ready(fn(codes))
+        timings[bb] = (_time.perf_counter() - t0) / iters
+    best = min(timings, key=timings.get)
+    return best, timings
+
+
 def make_network_fn(tables: List, fused: Optional[bool] = None,
-                    block_b: int = 1024,
+                    block_b=1024,
                     force_interpret: Optional[bool] = None,
                     donate: bool = False,
                     n_in0: Optional[int] = None,
-                    mesh: Optional[Mesh] = None) -> Callable:
+                    mesh: Optional[Mesh] = None,
+                    pipeline: bool = False,
+                    tune_batch: int = 2048) -> Callable:
     """Close over a synthesised network once and return one jitted
     ``fn(codes) -> out_codes`` for serving.  ``fused=None`` picks the
     fused engine whenever the tables fit VMEM — pass ``n_in0`` (the
     network input width) for an exact first-layer routing-matrix
-    estimate in that decision.  ``donate=True`` donates the input codes
-    buffer (the serving loop overwrites it anyway); donation is a no-op
-    warning on CPU, so it is only applied on TPU.  ``mesh`` switches to
-    the shard_map data-parallel path: batch sharded over the mesh,
-    tables replicated.
+    estimate in that decision.  ``block_b="auto"`` runs the
+    ``tune_block_b`` sweep (probing at ``tune_batch``) before closing
+    over the winner.  ``pipeline=True`` selects the double-buffered
+    fused kernel.  ``donate=True`` donates the input codes buffer (the
+    serving loop overwrites it anyway); donation is a no-op warning on
+    CPU, so it is only applied on TPU.  ``mesh`` switches to the
+    shard_map data-parallel path: batch sharded over the mesh, tables
+    replicated.
 
     ``tables`` may also be a loaded ``repro.artifact`` bundle (anything
     with ``.tables``): the table list is unwrapped and the manifest's
-    recorded input width feeds the fuse decision, so a cold-loaded
-    artifact plugs straight into serving with no synthesis-side state.
+    recorded input width feeds the fuse decision — including a PACKED
+    load (``load_artifact(..., unpack_int4=False)``), whose int4 slabs
+    flow through the fused and sharded engines unexpanded.
     """
     if hasattr(tables, "tables"):          # repro.artifact.Artifact
         if n_in0 is None:
             n_in0 = getattr(tables, "n_in", None)
         tables = tables.tables
+    if block_b == "auto":
+        # decide fusion BEFORE the sweep (at the smallest plausible
+        # tile, the most favourable case) so an over-budget network
+        # never executes a fused probe it could not serve with
+        if fused is None:
+            fused = can_fuse(tables, 128, n_in0, pipeline)
+        if fused:
+            # under a mesh each device sees only its batch shard, so
+            # the sweep must probe at the PER-SHARD batch — a winner
+            # tuned on the global batch would be clamped (TB=min) to a
+            # tile size that never ran
+            probe = (max(1, tune_batch // _mesh_batch_shards(mesh))
+                     if mesh is not None else tune_batch)
+            block_b, _ = tune_block_b(tables, batch=probe,
+                                      n_in0=n_in0,
+                                      force_interpret=force_interpret,
+                                      pipeline=pipeline)
+        else:
+            block_b = 1024             # per-layer path: tile unused
     if fused is None:
-        fused = can_fuse(tables, block_b, n_in0)
+        fused = can_fuse(tables, block_b, n_in0, pipeline)
 
     if mesh is not None:
         def fn(codes):
             return lut_network_fused_sharded(
                 tables, codes, mesh, block_b=block_b,
-                force_interpret=force_interpret, fused=fused)
+                force_interpret=force_interpret, fused=fused,
+                pipeline=pipeline)
     elif fused:
         def fn(codes):
             return lut_network_fused(tables, codes, block_b=block_b,
-                                     force_interpret=force_interpret)
+                                     force_interpret=force_interpret,
+                                     pipeline=pipeline)
     else:
         def fn(codes):
             return lut_network(tables, codes,

@@ -93,7 +93,9 @@ class ModelRegistry:
         """source -> (tables, n_features, artifact_id)."""
         if isinstance(source, str):
             from repro.artifact import load_artifact
-            source = load_artifact(source)
+            # packed load: int4 slabs feed the fused kernel directly,
+            # halving per-model table residency across the fleet
+            source = load_artifact(source, unpack_int4=False)
         if hasattr(source, "tables"):            # a loaded Artifact
             return source.tables, source.n_in, source.artifact_id
         from repro.artifact.store import _infer_n_in

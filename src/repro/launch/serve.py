@@ -99,7 +99,10 @@ def load_or_build_lut_model(train_steps: int = 150,
 
     if artifact_dir and find_artifacts(artifact_dir):
         t0 = time.monotonic()
-        art = load_artifact(artifact_dir)
+        # unpack_int4=False: int4 slabs stay two-codes-per-byte all the
+        # way into the fused kernel (in-kernel nibble unpack), so the
+        # serving process keeps the halved table residency
+        art = load_artifact(artifact_dir, unpack_int4=False)
         dt = time.monotonic() - t0
         spec = art.spec
         if spec is None:

@@ -37,6 +37,14 @@ CONFIG_NUMERIC = [
     # sharded serving series (PR 2)
     "sharded_devices", "sharded_fused_ms", "samples_per_sec_sharded",
     "speedup_sharded_vs_fused",
+    # int4 in-kernel unpack + double-buffered tiles + autotune (v4)
+    "table_bytes_int4", "table_residency_ratio_int4",
+    "vmem_bytes_fused_uint8", "vmem_bytes_fused_int4",
+    "vmem_ratio_int4_vs_uint8", "vmem_tile_bytes_grid",
+    "vmem_tile_bytes_pipelined", "pipeline_pair_block_b",
+    "fused_int4_ms", "fused_serial_tile_ms", "fused_pipelined_ms",
+    "block_b_tuned", "block_b_tuned_pipelined", "samples_per_sec_int4",
+    "speedup_int4_vs_uint8", "speedup_pipelined_vs_serial",
 ]
 
 SERVING_NUMERIC = [
@@ -51,6 +59,8 @@ ARTIFACT_NUMERIC = [
     "table_bytes_packed", "swap_requests", "swap_rate", "swap_dropped",
     "swap_failed", "swap_blackout_ms", "swap_warm_ms",
     "swap_drained_on_old", "swap_throughput_req_s",
+    # packed cold load: int4 slabs stay two-codes-per-byte (v4)
+    "cold_load_packed_ms", "table_bytes_loaded_packed",
 ]
 
 
@@ -65,7 +75,7 @@ def test_top_level_schema(payload):
         assert key in payload, f"missing top-level key {key!r}"
         assert isinstance(payload[key], typ), (key, type(payload[key]))
     assert payload["bench"] == "lut_infer"
-    assert payload["schema_version"] >= 3
+    assert payload["schema_version"] >= 4
     assert len(payload["configs"]) >= 1
 
 
@@ -77,6 +87,26 @@ def test_config_entries_schema(payload):
             assert key in cfg, f"config {cfg['name']}: missing {key!r}"
             assert isinstance(cfg[key], numbers.Real) and \
                 not isinstance(cfg[key], bool), (cfg["name"], key)
+
+
+def test_int4_residency_contract(payload):
+    """Hardware-independent byte accounting: for a 4-bit-code
+    PolyLUT-Add network (adder_width >= 2, bits <= 3: every hidden
+    slab nibble-packs, only the output logit tail stays int32) the
+    in-kernel int4 layout must report <= 0.55x the uint8 table
+    residency, and the fused-VMEM estimate must shrink with it."""
+    checked = 0
+    for cfg in payload["configs"]:
+        if cfg["adder_width"] >= 2 and cfg["bits"] <= 3:
+            assert cfg["table_residency_ratio_int4"] <= 0.55, cfg["name"]
+            checked += 1
+        assert cfg["vmem_bytes_fused_int4"] <= \
+            cfg["vmem_bytes_fused_uint8"], cfg["name"]
+        # both tile terms are reported at the same pair block size, so
+        # the double-buffered claim is strictly larger than grid mode's
+        assert 0 < cfg["vmem_tile_bytes_grid"] < \
+            cfg["vmem_tile_bytes_pipelined"]
+    assert checked >= 1, "no 4-bit-code adder config in the bench"
 
 
 def test_serving_entry_schema(payload):

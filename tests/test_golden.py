@@ -1,0 +1,156 @@
+"""Deterministic golden vectors: every engine reproduces a COMMITTED
+network bit-exactly.
+
+Property tests with fresh seeds (tests/test_conformance.py) catch
+engines disagreeing with each other *today*; they cannot catch every
+engine drifting *together* across a jax upgrade, a table-format change,
+or a quantisation edit.  This test pins absolute behaviour: a tiny
+synthesised network is committed under ``tests/golden/`` as a
+content-addressed artifact (manifest + slabs — the deployment format,
+so the golden ALSO locks the on-disk layout), together with input codes
+and expected output codes in ``golden_io.npz``.  Every engine — per
+layer, fused (grid + pipelined), int4-packed, sharded {1, 2, 4} — must
+reproduce the committed outputs exactly, and the artifact id must match
+the recorded one (a re-serialisation that changes the slab bytes is a
+format break, not a refactor).
+
+Regenerating (ONLY after an intentional, conformance-verified format
+change):
+
+    PYTHONPATH=src python tests/test_golden.py --regen
+"""
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+GOLDEN_DIR = pathlib.Path(__file__).resolve().parent / "golden"
+IO_FILE = GOLDEN_DIR / "golden_io.npz"
+
+# frozen: changing this invalidates the committed artifact
+SPEC_KW = dict(in_features=12, widths=(16, 10, 5), bits=2, fan_in=3,
+               degree=2, adder_width=2)
+SEED = 0
+INPUT_SEED = 123
+BATCH = 64
+
+
+def _spec():
+    from repro.core import lutdnn as LD
+    return LD.ModelSpec(name="golden", **SPEC_KW)
+
+
+def _golden_inputs(spec):
+    return jax.random.randint(
+        jax.random.key(INPUT_SEED), (BATCH, spec.in_features), 0,
+        2 ** spec.layer_specs()[0].in_quant.bits).astype(jnp.int32)
+
+
+@pytest.fixture(scope="module")
+def golden():
+    from repro.artifact import load_artifact
+    assert IO_FILE.exists(), \
+        "tests/golden/golden_io.npz missing — regenerate with " \
+        "`PYTHONPATH=src python tests/test_golden.py --regen`"
+    io = np.load(IO_FILE)
+    art = load_artifact(str(GOLDEN_DIR))
+    art_packed = load_artifact(str(GOLDEN_DIR), unpack_int4=False)
+    return io, art, art_packed
+
+
+def test_golden_artifact_id_pinned(golden):
+    io, art, _ = golden
+    assert art.artifact_id == str(io["artifact_id"]), \
+        "committed artifact bytes changed — this is a FORMAT break; " \
+        "regen only if intentional"
+
+
+def test_golden_vectors_all_engines(golden):
+    from repro.core import lut_synth as LS
+    from repro.kernels.lut_gather import ops as lg_ops
+    from repro.parallel.sharding import serving_mesh
+
+    io, art, art_packed = golden
+    codes = jnp.asarray(io["inputs"])
+    want = io["outputs"]
+    int4 = LS.pack_tables_int4(art.tables)
+    assert any(t.sub_packed for t in art_packed.tables)
+
+    runs = {
+        "per-layer": lambda: lg_ops.lut_network(art.tables, codes),
+        "fused": lambda: lg_ops.lut_network_fused(art.tables, codes,
+                                                  block_b=16),
+        "fused-pipelined": lambda: lg_ops.lut_network_fused(
+            art.tables, codes, block_b=16, pipeline=True),
+        "fused-int4": lambda: lg_ops.lut_network_fused(int4, codes,
+                                                       block_b=16),
+        "fused-int4-loaded": lambda: lg_ops.lut_network_fused(
+            art_packed.tables, codes, block_b=16),
+        "fused-int4-pipelined": lambda: lg_ops.lut_network_fused(
+            art_packed.tables, codes, block_b=16, pipeline=True),
+    }
+    for nd in (1, 2, 4):
+        if jax.device_count() >= nd:
+            runs[f"sharded-{nd}d"] = (
+                lambda nd=nd: lg_ops.lut_network_fused_sharded(
+                    art_packed.tables, codes, serving_mesh(nd)))
+    for name, fn in runs.items():
+        got = np.asarray(fn())
+        assert np.array_equal(got, want), \
+            f"engine {name!r} no longer reproduces the golden vectors"
+
+
+def test_golden_logits_decode(golden):
+    """The committed output codes decode to finite logits on the wide
+    output grid (guards the OUTPUT_QUANT convention itself)."""
+    from repro.core import lut_synth as LS
+    io, _, _ = golden
+    logits = np.asarray(LS.OUTPUT_QUANT.from_code(jnp.asarray(
+        io["outputs"])))
+    assert np.all(np.isfinite(logits))
+    assert logits.shape == (BATCH, SPEC_KW["widths"][-1])
+
+
+def _regen():
+    import shutil
+
+    from repro.artifact import load_artifact, save_artifact
+    from repro.core import lut_synth as LS
+    from repro.core import lutdnn as LD
+    from repro.kernels.lut_gather import ref as lg_ref
+
+    spec = _spec()
+    model = LD.init_model(jax.random.key(SEED), spec)
+    tables = LS.synthesise(model, spec, pack=True)
+    if GOLDEN_DIR.exists():
+        shutil.rmtree(GOLDEN_DIR)
+    GOLDEN_DIR.mkdir(parents=True)
+    path = save_artifact(str(GOLDEN_DIR), tables, name="golden",
+                         spec=spec, provenance={"golden": True,
+                                                "seed": SEED})
+    art = load_artifact(path)
+    codes = _golden_inputs(spec)
+    out = codes
+    for t in art.tables:          # the jnp reference chain is the oracle
+        out = lg_ref.lut_layer(out, t.conn, t.sub_table, t.add_table,
+                               t.in_bits, t.sub_bits)
+    np.savez(IO_FILE, inputs=np.asarray(codes),
+             outputs=np.asarray(out), artifact_id=art.artifact_id)
+    print(f"wrote {path} and {IO_FILE} "
+          f"(artifact {art.artifact_id[:12]})")
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+
+    sys.path.insert(0, str(
+        pathlib.Path(__file__).resolve().parent.parent / "src"))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--regen", action="store_true")
+    if ap.parse_args().regen:
+        _regen()
+    else:
+        ap.error("nothing to do (use --regen)")
