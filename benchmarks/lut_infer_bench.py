@@ -31,6 +31,16 @@ threaded deadline-flush microbatcher (launch/batching.py), reporting
 p50/p95/p99 request latency, the straggler queueing-delay p99, and
 whether p99 lands under the deadline SLO (deadline + 2 kernel times);
 
+plus a ``fleet`` section (schema v5): the multi-replica serving ledger
+— open-loop throughput behind the least-outstanding router at {1, 2, 4}
+replicas (threads stand in for hosts on this box, so the series tracks
+ROUTING overhead, not parallel speedup), the router's submit-side
+overhead p50/p99, the two-phase coordinated swap's prepare/commit
+window and per-replica blackout, and the replica-crash drill — both
+drills contractually complete with zero dropped requests
+(tests/test_bench_schema.py pins this, tests/test_fleet.py pins the
+mechanism);
+
 plus an ``artifact`` section: the compile-once ledger — how long
 ``build_lut_model`` takes from scratch (train + synthesise) vs
 COLD-LOADING the same network from a content-addressed repro/artifact
@@ -388,12 +398,110 @@ def _bench_artifact(fast: bool):
     }
 
 
+def _bench_fleet(fast: bool):
+    """Multi-replica fleet ledger (schema v5): per-replica-count
+    throughput {1, 2, 4}, the router's own submit-side overhead
+    (p50/p99 of the time spent picking a replica + enqueueing, the cost
+    the fleet adds over a bare batcher), the two-phase coordinated-swap
+    blackout, and the crash drill's zero-drop count.
+
+    On this box the "replicas" are threads sharing one CPU, so the
+    replica-count series tracks ROUTING overhead and contract
+    compliance, not parallel speedup — real scaling needs real hosts
+    (the ROADMAP's recorded residual).  The two hardware-independent
+    contracts (pinned by tests/test_bench_schema.py): the crash drill
+    and the swap drill both complete with ZERO dropped requests."""
+    from repro.artifact import save_artifact
+    from repro.launch.fleet import LutFleet
+    from repro.launch.serve import build_lut_model
+
+    microbatch = 64
+    deadline_s = 2e-3
+    requests = 384 if fast else 1024
+    rate = 1e9                 # open loop saturated at submitter speed
+    train_steps = 40 if fast else 150
+
+    spec, tables_v1, _ = build_lut_model(train_steps, seed=0)
+    _, tables_v2, _ = build_lut_model(train_steps, seed=1)
+    tmp = tempfile.mkdtemp(prefix="lut-bench-fleet-")
+    p1 = save_artifact(tmp, tables_v1, name="fleet-v1", spec=spec)
+    p2 = save_artifact(tmp, tables_v2, name="fleet-v2", spec=spec)
+    rows = np.asarray(jax.random.randint(
+        jax.random.key(5), (requests, spec.in_features), 0, 4), np.int32)
+
+    out = {
+        "microbatch": microbatch,
+        "deadline_ms": deadline_s * 1e3,
+        "requests": requests,
+        "replica_counts": [1, 2, 4],
+    }
+    route_us: list = []
+    for n in (1, 2, 4):
+        with LutFleet(n, microbatch, deadline_s) as fleet:
+            fleet.distribute_artifact(p1, "m")
+            t0 = time.monotonic()
+            handles = replay_open_loop(fleet.client("m"), rows, rate,
+                                       seed=0)
+            span = time.monotonic() - t0
+        out[f"throughput_req_s_r{n}"] = round(len(handles) / span)
+        if n == 4:
+            route_us = [h.route_s * 1e6 for h in handles]
+    out["scaling_r4_vs_r1"] = round(
+        out["throughput_req_s_r4"] / out["throughput_req_s_r1"], 2)
+    out["route_overhead_p50_us"] = round(
+        float(np.percentile(route_us, 50)), 2)
+    out["route_overhead_p99_us"] = round(
+        float(np.percentile(route_us, 99)), 2)
+
+    # coordinated swap drill under live load: prepare fleet-wide
+    # off-path, commit cuts every replica in one tight loop
+    with LutFleet(2, microbatch, deadline_s) as fleet:
+        fleet.distribute_artifact(p1, "m")
+        handles = []
+        feeder = threading.Thread(target=lambda: handles.extend(
+            replay_open_loop(fleet.client("m"),
+                             np.tile(rows, (3, 1)), 800.0, seed=1)))
+        feeder.start()
+        time.sleep(0.02)
+        rep = fleet.swap_fleet("m", p2)
+        feeder.join()
+    out["swap_requests"] = len(handles)
+    out["swap_dropped"] = int(sum(1 for h in handles if not h.done))
+    out["swap_prepare_ms"] = round(rep.prepare_s * 1e3, 1)
+    out["swap_commit_window_ms"] = round(rep.commit_window_s * 1e3, 3)
+    out["swap_blackout_max_us"] = round(rep.max_blackout_s * 1e6, 1)
+    out["swap_new_version_served"] = int(
+        sum(1 for h in handles if h.version_tag == rep.new_tag))
+
+    # crash drill: host death with requests in flight — re-dispatch
+    # must leave nothing dropped or hung
+    with LutFleet(3, microbatch, deadline_s=0.05) as fleet:
+        fleet.distribute_artifact(p1, "m")
+        handles = [fleet.submit("m", r) for r in rows]
+        victim = max(fleet.stats().items(),
+                     key=lambda kv: kv[1]["outstanding"])[0]
+        fleet.kill_replica(victim)
+        done = 0
+        for h in handles:
+            try:
+                h.result(timeout=60.0)
+                done += 1
+            except RuntimeError:
+                pass
+    shutil.rmtree(tmp, ignore_errors=True)
+    out["crash_requests"] = len(handles)
+    out["crash_dropped"] = int(len(handles) - done)
+    out["crash_retried"] = int(sum(h.retries for h in handles))
+    return out
+
+
 def run(fast: bool = False, write_json: bool = False):
     batch = 1024 if fast else 4096
     iters = 3 if fast else 7
     results = [_bench_config(n, kw, batch, iters) for n, kw in CONFIGS]
     serving = _bench_serving(fast)
     artifact = _bench_artifact(fast)
+    fleet = _bench_fleet(fast)
 
     cols = ["config", "B", "seed(i32)ms", "per-layer(u8)ms",
             "fused(u8)ms", "fused(i4)ms", "pipelined-ms",
@@ -435,16 +543,27 @@ def run(fast: bool = False, write_json: bool = False):
           artifact["table_bytes_loaded_packed"],
           artifact["swap_dropped"],
           artifact["swap_blackout_ms"], artifact["swap_warm_ms"]]])
+    print_table(
+        "serving fleet: replica routing + coordinated swap + crash drill",
+        ["r1 req/s", "r2 req/s", "r4 req/s", "route-p99-us",
+         "swap-commit-ms", "swap-blackout-us", "swap-dropped",
+         "crash-dropped", "crash-retried"],
+        [[fleet["throughput_req_s_r1"], fleet["throughput_req_s_r2"],
+          fleet["throughput_req_s_r4"], fleet["route_overhead_p99_us"],
+          fleet["swap_commit_window_ms"], fleet["swap_blackout_max_us"],
+          fleet["swap_dropped"], fleet["crash_dropped"],
+          fleet["crash_retried"]]])
 
     payload = {
         "bench": "lut_infer",
-        "schema_version": 4,
+        "schema_version": 5,
         "backend": jax.default_backend(),
         "interpret": jax.default_backend() != "tpu",
         "fast": fast,
         "configs": results,
         "serving": serving,
         "artifact": artifact,
+        "fleet": fleet,
     }
     if write_json:
         JSON_PATH.write_text(json.dumps(payload, indent=2) + "\n")

@@ -37,6 +37,22 @@ virtual devices first:
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \
     PYTHONPATH=src python examples/lut_serve.py --shards 4
 
+Fleet serving (launch/fleet.py) scales the SAME artifacts across
+replica "hosts": a ``LutFleet`` stands N registry replicas behind a
+least-outstanding router, ships each artifact to every replica's local
+store, and admits a copy only after re-verifying its manifest hashes
+(``repro.artifact.verify_artifact`` — the content-addressed ids make
+this free).  Version upgrades are TWO-PHASE: ``prepare_swap`` warms the
+new engine off-path on every replica, ``commit_swap`` cuts them all
+over in one tight loop, and every response echoes the artifact id that
+served it (``FleetHandle.version_tag``).  A replica crash mid-request
+re-dispatches transparently — zero requests dropped
+(tests/test_fleet.py is the fault-injection harness).  Try it:
+
+    PYTHONPATH=src python -m repro.launch.serve --lut --replicas 4
+    PYTHONPATH=src python -m repro.launch.serve --lut --fleet-swap-demo \
+        --replicas 2 --requests 2048 --rate 1000
+
 Knobs: --microbatch (flush size = engine batch), --deadline-ms (max
 straggler queueing delay), --rate (offered Poisson load per model),
 --requests (stream length per model).  Reports per-model p50/p95/p99

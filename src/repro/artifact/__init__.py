@@ -1,3 +1,4 @@
 from repro.artifact.store import (Artifact, ArtifactError, SCHEMA_VERSION,
-                                  find_artifacts, load_artifact,
-                                  save_artifact)
+                                  copy_artifact, find_artifacts,
+                                  load_artifact, save_artifact,
+                                  verify_artifact)

@@ -55,6 +55,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import shutil
 import time
 from typing import Any, Dict, List, Optional
 
@@ -280,6 +281,71 @@ def find_artifacts(root: str) -> List[str]:
             and os.path.isfile(os.path.join(root, d, MANIFEST))]
     return sorted(hits, key=lambda p: os.path.getmtime(
         os.path.join(p, MANIFEST)), reverse=True)
+
+
+def verify_artifact(path: str) -> Dict[str, Any]:
+    """Hash-only admission check: re-hash every slab of the artifact at
+    ``path`` against its manifest WITHOUT building any array.  Returns
+    the manifest on success; raises ``ArtifactError`` on a missing /
+    unreadable / truncated / bit-flipped artifact.  This is the fleet's
+    replica-side gate — a distributed copy is admitted for serving only
+    once its bytes provably match the content-addressed id the
+    coordinator shipped."""
+    hits = find_artifacts(path)
+    if not hits:
+        raise ArtifactError(f"no artifact manifest under {path!r}")
+    adir = hits[0]
+    try:
+        with open(os.path.join(adir, MANIFEST)) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise ArtifactError(f"unreadable manifest in {adir!r}: {e}") from e
+    if manifest.get("format") != FORMAT:
+        raise ArtifactError(f"{adir!r} is not a {FORMAT} artifact")
+    slab_path = os.path.join(adir, SLAB_FILE)
+    try:
+        # a bit flip can land in the manifest too: parseable JSON with
+        # mangled keys/types must still come out as ArtifactError so
+        # the fleet's delete-and-refetch path handles it
+        need = int(manifest["total_slab_bytes"])
+        have = (os.path.getsize(slab_path)
+                if os.path.exists(slab_path) else -1)
+        if have < need:
+            raise ArtifactError(
+                f"truncated slab file {slab_path!r}: {have} bytes on "
+                f"disk, manifest expects {need}")
+        for s in manifest["slabs"]:
+            got = sha256_file(slab_path, s["offset"], s["nbytes"])
+            if got != s["sha256"]:
+                raise ArtifactError(
+                    f"content hash mismatch for slab {s['name']!r} — "
+                    f"artifact {manifest['artifact_id'][:12]} is corrupt")
+    except (KeyError, TypeError, ValueError) as e:
+        raise ArtifactError(
+            f"structurally corrupt manifest in {adir!r}: {e!r}") from e
+    return manifest
+
+
+def copy_artifact(src: str, dst_root: str) -> str:
+    """Ship an artifact directory to another store: copy
+    ``manifest.json`` + ``slabs.bin`` under ``dst_root`` (keeping the
+    content-addressed directory name), atomically — a reader of
+    ``dst_root`` never observes a half-copied artifact.  This is the
+    transport primitive behind fleet artifact distribution; the
+    receiver still runs ``verify_artifact`` before admission (transport
+    is where bits flip).  Returns the destination directory.
+    """
+    hits = find_artifacts(src)
+    if not hits:
+        raise ArtifactError(f"no artifact manifest under {src!r}")
+    adir = hits[0]
+    dst = os.path.join(dst_root, os.path.basename(os.path.normpath(adir)))
+    with atomic_dir(dst) as tmp:             # re-fetch replaces the copy
+        for fname in (MANIFEST, SLAB_FILE):
+            fsrc = os.path.join(adir, fname)
+            if os.path.exists(fsrc):
+                shutil.copyfile(fsrc, os.path.join(tmp, fname))
+    return dst
 
 
 def load_artifact(path: str, verify: bool = True,

@@ -362,10 +362,14 @@ def make_network_fn(tables: List, fused: Optional[bool] = None,
     estimate in that decision.  ``block_b="auto"`` runs the
     ``tune_block_b`` sweep (probing at ``tune_batch``) before closing
     over the winner.  ``pipeline=True`` selects the double-buffered
-    fused kernel.  ``donate=True`` donates the input codes buffer (the
-    serving loop overwrites it anyway); donation is a no-op warning on
-    CPU, so it is only applied on TPU.  ``mesh`` switches to the
-    shard_map data-parallel path: batch sharded over the mesh, tables
+    fused kernel.  ``donate=True`` donates the input codes buffer on
+    EVERY path — single-device and sharded alike (the serving loop
+    builds a fresh device array per microbatch and never reads the
+    codes again): the argument is marked a buffer donor
+    (``jax.buffer_donor`` in the lowering) so the runtime may reuse its
+    memory for the padded/sharded staging copies; a donated array must
+    not be passed twice.  ``mesh`` switches to the shard_map
+    data-parallel path: batch sharded over the mesh, tables
     replicated.
 
     ``tables`` may also be a loaded ``repro.artifact`` bundle (anything
@@ -416,8 +420,11 @@ def make_network_fn(tables: List, fused: Optional[bool] = None,
             return lut_network(tables, codes,
                                force_interpret=force_interpret)
 
-    donate_argnums = (0,) if (donate and _backend() == "tpu") else ()
-    return jax.jit(fn, donate_argnums=donate_argnums)
+    # donation used to be TPU-gated (old CPU runtimes warned and
+    # dropped it); current jax accepts buffer donors on every backend,
+    # and the sharded path in particular wants the input freed for its
+    # padded per-shard staging copies — so apply it wherever asked
+    return jax.jit(fn, donate_argnums=(0,) if donate else ())
 
 
 lut_layer_reference = ref.lut_layer

@@ -36,11 +36,23 @@ import numpy as np
 class RequestHandle:
     """One in-flight request.  ``result()`` blocks until the batcher
     has flushed the microbatch containing it (re-raising the engine's
-    exception if that flush failed)."""
+    exception if that flush failed).
+
+    ``tag`` echoes the serving batcher's version tag (set at FLUSH
+    time, so a request that races a hot-swap reports the engine that
+    ACTUALLY served it) and ``flush_key`` identifies the exact
+    microbatch it rode in — together they let the fleet consistency
+    harness prove no batch ever mixes artifact versions.  ``on_done``
+    (set at submit) fires once on the batcher thread when the handle
+    completes, success or failure — the router's outstanding-count
+    bookkeeping hook."""
 
     x: np.ndarray                       # (n_features,) input row
     t_submit: float                     # monotonic submit time
     t_done: float = 0.0                 # monotonic completion time
+    tag: Optional[str] = None           # serving engine's version tag
+    flush_key: Optional[tuple] = None   # (batcher id, flush seq)
+    on_done: Optional[Callable] = None  # called with the handle, once
     _out: Optional[np.ndarray] = None   # (n_out,) engine output row
     _exc: Optional[BaseException] = None
     _event: threading.Event = dataclasses.field(
@@ -78,6 +90,7 @@ class FlushRecord:
     waited_s: float     # oldest request's queueing delay at flush time
     kernel_s: float     # engine wall time for the batch
     cause: str          # "full" | "deadline" | "stop"
+    tag: Optional[str] = None   # batcher's version tag at flush time
 
     @property
     def deadline_hit(self) -> bool:
@@ -104,12 +117,17 @@ class MicroBatcher:
 
     def __init__(self, serve_fn: Callable, microbatch: int,
                  deadline_s: float, n_features: int,
-                 dtype=np.int32):
+                 dtype=np.int32, tag: Optional[str] = None):
         if microbatch < 1:
             raise ValueError("microbatch must be >= 1")
         self.serve_fn = serve_fn
         self.microbatch = microbatch
         self.deadline_s = float(deadline_s)
+        # version tag echoed on every handle this batcher completes —
+        # the registry stamps it with the serving artifact id so a
+        # response always says WHICH engine version produced it
+        self.tag = tag
+        self._flush_seq = 0
         self._buf = np.zeros((microbatch, n_features), dtype)
         self._q: "queue.Queue" = queue.Queue()
         self._thread = threading.Thread(target=self._loop, daemon=True)
@@ -156,8 +174,9 @@ class MicroBatcher:
         self.stop()
 
     # -- producer side -----------------------------------------------
-    def submit(self, x) -> RequestHandle:
-        h = RequestHandle(x=np.asarray(x), t_submit=time.monotonic())
+    def submit(self, x, on_done: Optional[Callable] = None) -> RequestHandle:
+        h = RequestHandle(x=np.asarray(x), t_submit=time.monotonic(),
+                          on_done=on_done)
         with self._submit_lock:
             if self._stopping:
                 raise BatcherStopped("batcher is stopping — request "
@@ -198,31 +217,49 @@ class MicroBatcher:
             cause = "full"
         return pending, cause
 
+    def _complete(self, h: RequestHandle) -> None:
+        h._event.set()
+        if h.on_done is not None:
+            try:
+                h.on_done(h)
+            except Exception:
+                pass           # bookkeeping must never kill the batcher
+
     def _flush(self, pending: Sequence[RequestHandle],
                cause: str) -> None:
         n = len(pending)
+        self._flush_seq += 1
+        fkey = (id(self), self._flush_seq)
         t0 = time.monotonic()
         waited = t0 - pending[0].t_submit
-        for i, h in enumerate(pending):
-            self._buf[i] = h.x
-        self._buf[n:] = self._buf[0]          # pad: fixed shape, no retrace
         try:
+            # the buffer fill is INSIDE the try: a malformed row (wrong
+            # width/dtype) must fail its batch like an engine error,
+            # not kill the batcher thread and hang everything behind it
+            for i, h in enumerate(pending):
+                self._buf[i] = h.x
+            self._buf[n:] = self._buf[0]      # pad: fixed shape, no retrace
             out = np.asarray(self.serve_fn(self._buf))
         except BaseException as e:
             # the engine failed: fail THIS batch's handles (result()
             # re-raises) and keep the batcher alive for later batches
             for h in pending:
                 h._exc = e
+                h.tag = self.tag
+                h.flush_key = fkey
                 h.t_done = time.monotonic()
-                h._event.set()
+                self._complete(h)
             return
         t1 = time.monotonic()
         self.flushes.append(FlushRecord(
-            fill=n, waited_s=waited, kernel_s=t1 - t0, cause=cause))
+            fill=n, waited_s=waited, kernel_s=t1 - t0, cause=cause,
+            tag=self.tag))
         for i, h in enumerate(pending):
             h._out = out[i]
+            h.tag = self.tag
+            h.flush_key = fkey
             h.t_done = t1
-            h._event.set()
+            self._complete(h)
 
     def _loop(self) -> None:
         while True:

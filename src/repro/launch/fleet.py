@@ -1,0 +1,579 @@
+"""Multi-replica LUT serving fleet: routing, artifact distribution,
+and coordinated hot-swap.
+
+One ``ModelRegistry`` covers one host (many models, many devices —
+PR 3/4).  This module lifts that to a FLEET: N registry replicas
+(threads standing in for hosts, the same stand-in pattern the
+MicroBatcher uses for async serving) behind a ``LutFleet`` router.
+Three fleet-level contracts, each pinned by tests/test_fleet.py:
+
+* **Routing** — ``submit`` picks the healthy replica with the fewest
+  outstanding requests (least-outstanding, ties by replica id) among
+  those that have ADMITTED the model's artifact.  A replica that dies
+  with requests in flight fails those batches with the typed
+  ``ReplicaCrashed``; their ``FleetHandle``s re-dispatch to a healthy
+  replica transparently, and submits that race the death are absorbed
+  the same way — zero requests dropped, zero silently hung.  Responses
+  are bit-exact vs the single-host ``make_network_fn`` oracle: a
+  replica is a pure execution placement, never a numeric change.
+
+* **Artifact distribution** — ``distribute_artifact`` ships a
+  content-addressed artifact (repro/artifact) to every replica's local
+  store (``copy_artifact``) and gates admission on a full manifest-hash
+  re-verification (``verify_artifact``) AT THE REPLICA — transport is
+  where bits flip, and the content-addressed ids from PR 3 make the
+  check free.  A copy that fails verification is deleted and
+  re-fetched; a replica that exhausts its fetch budget is simply never
+  admitted for that model and the router excludes it.
+
+* **Coordinated swap** — two-phase: ``prepare_swap`` distributes +
+  verifies the new artifact and warms a replacement engine OFF-PATH on
+  every replica (old version keeps serving throughout; any failure
+  aborts the whole cutover with every replica still on the old
+  version); ``commit_swap`` then cuts replicas over one registry-commit
+  at a time — each commit is a microsecond dict swap, so the fleet
+  converges within one tight loop.  Every response echoes the version
+  tag of the engine that ACTUALLY served it (stamped at flush time by
+  the MicroBatcher), so the harness can prove the cutover window never
+  serves anything but old-or-new and no microbatch ever mixes versions.
+
+What is deliberately NOT here (recorded in ROADMAP.md): a real RPC
+transport (replicas share an address space; ``copy_artifact`` stands in
+for the wire) and cross-process replica discovery.  The routing,
+verification, and two-phase-commit logic is transport-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import shutil
+import tempfile
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.artifact import (ArtifactError, copy_artifact, load_artifact,
+                            verify_artifact)
+from repro.artifact.store import SLAB_FILE
+from repro.launch.registry import (ModelEntry, ModelRegistry, SwapReport,
+                                   UnknownModelError)
+
+
+class FleetError(RuntimeError):
+    """Fleet-level routing/coordination failure."""
+
+
+class NoHealthyReplica(FleetError):
+    """No healthy replica has admitted the requested model."""
+
+
+class ReplicaCrashed(RuntimeError):
+    """Injected host death: the replica's engine gate raises this for
+    every batch once the replica is killed, failing in-flight requests
+    the way a severed host connection would (they re-dispatch via their
+    FleetHandle, they do not drain gracefully)."""
+
+
+class FleetSwapError(FleetError):
+    """A two-phase swap could not prepare everywhere — the commit was
+    never attempted and every replica still serves the old version."""
+
+
+@dataclasses.dataclass
+class Replica:
+    """One in-process 'host': its registry, local artifact store, and
+    the router-side bookkeeping (health, load, fault injection)."""
+
+    replica_id: str
+    registry: ModelRegistry
+    store_dir: str
+    healthy: bool = True
+    crashed: bool = False
+    outstanding: int = 0                 # in-flight requests (router lock)
+    served: int = 0                      # completed requests
+    fetches: int = 0                     # artifact transfer attempts
+    verify_failures: int = 0             # copies rejected at admission
+    fetch_faults: int = 0                # injected corruptions pending
+    admitted: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class ReplicaDistribution:
+    """Per-replica outcome of one distribute/prepare round."""
+
+    replica_id: str
+    admitted: bool
+    artifact_id: Optional[str]
+    fetches: int
+    verify_failures: int
+    error: Optional[str] = None
+
+
+@dataclasses.dataclass
+class PreparedFleetSwap:
+    """Phase-1 token: every target replica holds a warmed, verified,
+    NOT-yet-routable engine for ``new_tag``."""
+
+    model_id: str
+    new_tag: str
+    entries: Dict[str, Tuple[Replica, ModelEntry]]
+    distribution: Dict[str, ReplicaDistribution]
+    prepare_s: float = 0.0
+
+
+@dataclasses.dataclass
+class FleetSwapReport:
+    """What the fleet cutover cost.  ``commit_window_s`` spans the
+    first replica's cut to the last's — the only interval during which
+    different replicas may serve different versions (each individual
+    response is still exactly old or new, stamped by tag)."""
+
+    model_id: str
+    old_tags: Dict[str, str]
+    new_tag: str
+    commit_window_s: float
+    blackout_s: Dict[str, float]
+    drained_requests: Dict[str, int]
+    prepare_s: float
+
+    @property
+    def max_blackout_s(self) -> float:
+        return max(self.blackout_s.values(), default=0.0)
+
+    @property
+    def total_drained(self) -> int:
+        return sum(self.drained_requests.values())
+
+
+class FleetHandle:
+    """One fleet-level request.  Wraps the replica-local
+    ``RequestHandle`` it is currently riding; if that replica's batch
+    fails (host death, engine fault), ``result()`` re-dispatches to a
+    healthy replica and keeps waiting — the caller sees one completed
+    request or one typed error, never a silent drop.
+
+    ``version_tag`` (valid once done) echoes the artifact version of
+    the engine that actually served the final attempt; ``flush_key``
+    identifies the exact (replica, microbatch) it rode in."""
+
+    def __init__(self, fleet: "LutFleet", model_id: str, x):
+        self._fleet = fleet
+        self.model_id = model_id
+        self.x = np.asarray(x)
+        self.t_submit = time.monotonic()
+        self.replica_ids: List[str] = []   # dispatch history, last = current
+        self.retries = 0                   # re-dispatches after a failure
+        self.route_s = 0.0                 # cumulative router-side time
+        self._inner = None                 # current RequestHandle
+
+    @property
+    def replica_id(self) -> Optional[str]:
+        return self.replica_ids[-1] if self.replica_ids else None
+
+    @property
+    def done(self) -> bool:
+        return self._inner is not None and self._inner.done
+
+    @property
+    def failed(self) -> bool:
+        return self._inner is not None and self._inner.failed
+
+    @property
+    def version_tag(self) -> Optional[str]:
+        return None if self._inner is None else self._inner.tag
+
+    @property
+    def flush_key(self) -> Optional[tuple]:
+        if self._inner is None or self._inner.flush_key is None:
+            return None
+        return (self.replica_id,) + tuple(self._inner.flush_key)
+
+    @property
+    def latency_s(self) -> float:
+        """Submit-to-completion, across re-dispatches (valid once done)."""
+        return self._inner.t_done - self.t_submit
+
+    def result(self, timeout: Optional[float] = 60.0) -> np.ndarray:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            left = (None if deadline is None
+                    else max(0.0, deadline - time.monotonic()))
+            try:
+                return self._inner.result(timeout=left)
+            except TimeoutError:
+                raise
+            except RuntimeError:
+                # this attempt's batch failed (replica death / engine
+                # fault) — re-dispatch; NoHealthyReplica ends the loop.
+                # A persistently fast-failing replica must not turn the
+                # timeout into an infinite retry spin: a failed handle
+                # completes instantly (the event IS set), so the
+                # deadline has to be enforced here, between attempts.
+                if deadline is not None and time.monotonic() >= deadline:
+                    raise TimeoutError(
+                        f"request not served within timeout after "
+                        f"{self.retries} re-dispatches")
+                self.retries += 1
+                self._fleet._dispatch(self)
+
+
+class LutFleet:
+    """N registry replicas behind a least-outstanding router, with
+    verified artifact distribution and two-phase coordinated swap.
+    Context-manages like the registry: ``close()`` tears every replica
+    down (draining queues) and removes the fleet-owned store."""
+
+    def __init__(self, n_replicas: int = 2, microbatch: int = 64,
+                 deadline_s: float = 2e-3, *, mesh=None,
+                 force_interpret: Optional[bool] = None,
+                 store_root: Optional[str] = None,
+                 max_fetch_retries: int = 2):
+        if n_replicas < 1:
+            raise ValueError("a fleet needs at least one replica")
+        self.max_fetch_retries = max_fetch_retries
+        self._lock = threading.Lock()
+        self._own_store = store_root is None
+        self.store_root = store_root or tempfile.mkdtemp(prefix="lut-fleet-")
+        self.replicas: List[Replica] = []
+        for i in range(n_replicas):
+            rid = f"r{i}"
+            store = os.path.join(self.store_root, rid)
+            os.makedirs(store, exist_ok=True)
+            reg = ModelRegistry(
+                microbatch, deadline_s, mesh=mesh,
+                force_interpret=force_interpret,
+                engine_hook=lambda mid, batch, rid=rid:
+                    self._engine_gate(rid))
+            self.replicas.append(Replica(replica_id=rid, registry=reg,
+                                         store_dir=store))
+
+    # -- lifecycle ----------------------------------------------------
+    def close(self) -> None:
+        for r in self.replicas:
+            r.registry.close()
+        if self._own_store:
+            shutil.rmtree(self.store_root, ignore_errors=True)
+
+    def __enter__(self) -> "LutFleet":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- fault injection ----------------------------------------------
+    def _replica(self, replica_id: str) -> Replica:
+        for r in self.replicas:
+            if r.replica_id == replica_id:
+                return r
+        raise FleetError(f"no replica {replica_id!r}")
+
+    def _engine_gate(self, replica_id: str) -> None:
+        """Runs on the replica's batcher thread before every engine
+        dispatch — the point where an injected host death takes effect
+        for batches already in flight."""
+        if self._replica(replica_id).crashed:
+            raise ReplicaCrashed(replica_id)
+
+    def kill_replica(self, replica_id: str) -> None:
+        """Simulated host death.  The replica leaves the routing set
+        immediately, every batch it still holds FAILS (no graceful
+        drain — the engine gate raises), and its registry is torn down.
+        Affected requests re-dispatch through their FleetHandle; the
+        fleet-level contract stays zero-dropped."""
+        r = self._replica(replica_id)
+        with self._lock:
+            r.healthy = False
+            r.crashed = True
+        r.registry.close()
+
+    def inject_fetch_corruption(self, replica_id: str, n: int = 1) -> None:
+        """The next ``n`` artifact fetches landing on this replica get
+        one bit flipped in ``slabs.bin`` after the copy — a transport
+        corruption the manifest-hash admission gate must catch."""
+        with self._lock:
+            self._replica(replica_id).fetch_faults += n
+
+    # -- artifact distribution ----------------------------------------
+    def _fetch_verified(self, r: Replica, source: str):
+        """Ship ``source`` to the replica's local store and admit it
+        only after the copy re-verifies against its manifest hashes.
+        Corrupt copies are deleted and re-fetched up to the retry
+        budget; returns the PACKED loaded artifact."""
+        last: Optional[ArtifactError] = None
+        for _ in range(1 + self.max_fetch_retries):
+            with self._lock:
+                r.fetches += 1
+                corrupt = r.fetch_faults > 0
+                if corrupt:
+                    r.fetch_faults -= 1
+            dst = copy_artifact(source, r.store_dir)
+            if corrupt:
+                _flip_one_bit(os.path.join(dst, SLAB_FILE))
+            try:
+                verify_artifact(dst)
+            except ArtifactError as e:
+                last = e
+                with self._lock:
+                    r.verify_failures += 1
+                # never leave a copy that could be admitted by a later
+                # (non-verifying) reader
+                shutil.rmtree(dst, ignore_errors=True)
+                continue
+            # hashes checked above — load without re-hashing, packed so
+            # the replica keeps the halved int4 table residency
+            return load_artifact(dst, verify=False, unpack_int4=False)
+        raise ArtifactError(
+            f"{r.replica_id}: artifact from {source!r} failed hash "
+            f"verification {1 + self.max_fetch_retries} times — replica "
+            f"not admitted") from last
+
+    def distribute_artifact(self, source: str, model_id: str) \
+            -> Dict[str, ReplicaDistribution]:
+        """Roll an artifact out to every healthy replica: fetch, verify,
+        register (or hot-swap, when the replica already serves
+        ``model_id``), admit.  Replicas fetch + warm in parallel — the
+        engine warm-up is the long pole and hosts would do it
+        concurrently.  Raises only when NO replica admitted; partial
+        admission is reported per replica and the router simply excludes
+        the failures."""
+        report: Dict[str, ReplicaDistribution] = {}
+
+        def one(r: Replica) -> None:
+            f0, v0 = r.fetches, r.verify_failures
+            try:
+                art = self._fetch_verified(r, source)
+                if model_id in r.registry.model_ids():
+                    r.registry.swap(model_id, art)
+                else:
+                    r.registry.register(model_id, art)
+            # broad on purpose: ANY failure (incl. UnknownModelError —
+            # a KeyError — from a racing kill) must land in the report
+            # as a non-admitted replica, never kill the worker thread
+            # and vanish from the rollout accounting
+            except Exception as e:
+                report[r.replica_id] = ReplicaDistribution(
+                    r.replica_id, False, None, r.fetches - f0,
+                    r.verify_failures - v0, error=str(e))
+                return
+            with self._lock:
+                r.admitted[model_id] = art.artifact_id
+            report[r.replica_id] = ReplicaDistribution(
+                r.replica_id, True, art.artifact_id, r.fetches - f0,
+                r.verify_failures - v0)
+
+        targets = [r for r in self.replicas if r.healthy]
+        if not targets:
+            raise NoHealthyReplica("fleet has no healthy replica")
+        threads = [threading.Thread(target=one, args=(r,)) for r in targets]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        if not any(d.admitted for d in report.values()):
+            raise FleetError(
+                f"artifact rollout of {model_id!r} admitted on no "
+                f"replica: { {k: d.error for k, d in report.items()} }")
+        return report
+
+    # -- two-phase coordinated swap -----------------------------------
+    def prepare_swap(self, model_id: str, source: str) -> PreparedFleetSwap:
+        """Phase 1: distribute + verify the new artifact and warm a
+        replacement engine OFF-PATH on every serving replica.  All-or-
+        nothing: one failed replica aborts the fleet cutover (prepared
+        engines stand down) and every replica keeps serving the old
+        version."""
+        targets = [r for r in self.replicas
+                   if r.healthy and model_id in r.admitted]
+        if not targets:
+            raise NoHealthyReplica(
+                f"no healthy replica serves {model_id!r}")
+        t0 = time.monotonic()
+        entries: Dict[str, Tuple[Replica, ModelEntry]] = {}
+        dist: Dict[str, ReplicaDistribution] = {}
+        errors: Dict[str, str] = {}
+
+        def one(r: Replica) -> None:
+            f0, v0 = r.fetches, r.verify_failures
+            try:
+                art = self._fetch_verified(r, source)
+                entries[r.replica_id] = (
+                    r, r.registry.prepare(model_id, art))
+                dist[r.replica_id] = ReplicaDistribution(
+                    r.replica_id, True, art.artifact_id,
+                    r.fetches - f0, r.verify_failures - v0)
+            # broad on purpose: a failure that escaped the worker (e.g.
+            # UnknownModelError, a KeyError, from a kill racing this
+            # prepare) would skip the all-or-nothing abort check below
+            except Exception as e:
+                errors[r.replica_id] = str(e)
+                dist[r.replica_id] = ReplicaDistribution(
+                    r.replica_id, False, None, r.fetches - f0,
+                    r.verify_failures - v0, error=str(e))
+
+        threads = [threading.Thread(target=one, args=(r,)) for r in targets]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        if errors or not entries:
+            for r, entry in entries.values():
+                r.registry.abandon(entry)
+            raise FleetSwapError(
+                f"prepare_swap({model_id!r}) failed on "
+                f"{sorted(errors)} ({errors}); commit never attempted — "
+                f"all replicas still serve the old version")
+        new_tag = next(iter(entries.values()))[1].version_tag
+        prepared = PreparedFleetSwap(model_id=model_id, new_tag=new_tag,
+                                     entries=entries, distribution=dist)
+        prepared.prepare_s = time.monotonic() - t0
+        return prepared
+
+    def commit_swap(self, prepared: PreparedFleetSwap) -> FleetSwapReport:
+        """Phase 2: cut every prepared replica over.  Each registry
+        commit is one dict assignment under that replica's routing lock
+        (microseconds), so the whole fleet converges within one tight
+        loop; in-flight requests finish on whichever engine holds them
+        and every response is tagged with the version that served it."""
+        old_tags: Dict[str, str] = {}
+        blackout: Dict[str, float] = {}
+        drained: Dict[str, int] = {}
+        t0 = time.monotonic()
+        for rid, (r, entry) in sorted(prepared.entries.items()):
+            if not r.healthy:
+                # the host died between prepare and commit: its engine
+                # stands down, the survivors still cut over
+                r.registry.abandon(entry)
+                continue
+            with self._lock:
+                old_tags[rid] = r.admitted.get(prepared.model_id, "")
+            rep: SwapReport = r.registry.commit(prepared.model_id, entry)
+            with self._lock:
+                r.admitted[prepared.model_id] = entry.version_tag
+            blackout[rid] = rep.blackout_s
+            drained[rid] = rep.drained_requests
+        window = time.monotonic() - t0
+        return FleetSwapReport(
+            model_id=prepared.model_id, old_tags=old_tags,
+            new_tag=prepared.new_tag, commit_window_s=window,
+            blackout_s=blackout, drained_requests=drained,
+            prepare_s=prepared.prepare_s)
+
+    def swap_fleet(self, model_id: str, source: str) -> FleetSwapReport:
+        """prepare + commit in one call (the CLI demo entry)."""
+        return self.commit_swap(self.prepare_swap(model_id, source))
+
+    # -- request path -------------------------------------------------
+    def _pick(self, model_id: str, exclude=()) -> Optional[Replica]:
+        with self._lock:
+            cands = [r for r in self.replicas
+                     if r.healthy and model_id in r.admitted
+                     and r.replica_id not in exclude]
+            if not cands:
+                return None
+            return min(cands, key=lambda r: (r.outstanding, r.replica_id))
+
+    def _dispatch(self, h: FleetHandle) -> None:
+        """Place (or re-place) a request on the best replica.  Prefers
+        replicas this request has not failed on; a submit that races a
+        replica death is absorbed and re-routed, mirroring the
+        registry's own BatcherStopped re-route one level down."""
+        t0 = time.perf_counter()
+        tried = set(h.replica_ids)
+        attempts = 0
+        while True:
+            r = self._pick(h.model_id, exclude=tried)
+            if r is None:
+                # every untried replica is out — fall back to ANY
+                # healthy one (a transient engine fault is retryable on
+                # the same host) before giving up
+                tried = set()
+                r = self._pick(h.model_id)
+            attempts += 1
+            if r is None or attempts > 2 * len(self.replicas):
+                h.route_s += time.perf_counter() - t0
+                raise NoHealthyReplica(
+                    f"no healthy replica can serve {h.model_id!r} "
+                    f"(request re-dispatched {h.retries} times)")
+
+            def done_cb(_h, r=r):
+                with self._lock:
+                    r.outstanding -= 1
+                    r.served += 1
+
+            with self._lock:
+                r.outstanding += 1
+            try:
+                inner = r.registry.submit(h.model_id, h.x, on_done=done_cb)
+            except UnknownModelError:
+                # raced a kill/unregister: un-count, exclude, move on
+                with self._lock:
+                    r.outstanding -= 1
+                tried.add(r.replica_id)
+                continue
+            h._inner = inner
+            h.replica_ids.append(r.replica_id)
+            h.route_s += time.perf_counter() - t0
+            return
+
+    def submit(self, model_id: str, x) -> FleetHandle:
+        """Route one request to the least-loaded healthy replica that
+        has admitted ``model_id``.  The returned handle re-dispatches
+        itself on replica failure — ``result()`` returns the one true
+        response or raises ``NoHealthyReplica``."""
+        h = FleetHandle(self, model_id, x)
+        self._dispatch(h)
+        return h
+
+    def client(self, model_id: str) -> "FleetClient":
+        """Single-model view duck-typing ``MicroBatcher.submit`` so the
+        open-loop Poisson driver (batching.replay_open_loop) can drive
+        a fleet unchanged."""
+        return FleetClient(self, model_id)
+
+    # -- introspection ------------------------------------------------
+    def healthy_replicas(self) -> List[str]:
+        with self._lock:
+            return [r.replica_id for r in self.replicas if r.healthy]
+
+    def admitted_tags(self, model_id: str) -> Dict[str, str]:
+        """replica id -> artifact/version tag currently admitted (the
+        post-commit consistency check: all equal)."""
+        with self._lock:
+            return {r.replica_id: r.admitted[model_id]
+                    for r in self.replicas
+                    if r.healthy and model_id in r.admitted}
+
+    def stats(self) -> Dict[str, Dict[str, Any]]:
+        with self._lock:
+            return {r.replica_id: {
+                "healthy": r.healthy,
+                "outstanding": r.outstanding,
+                "served": r.served,
+                "fetches": r.fetches,
+                "verify_failures": r.verify_failures,
+                "admitted": dict(r.admitted),
+            } for r in self.replicas}
+
+
+@dataclasses.dataclass
+class FleetClient:
+    fleet: LutFleet
+    model_id: str
+
+    def submit(self, x) -> FleetHandle:
+        return self.fleet.submit(self.model_id, x)
+
+
+def _flip_one_bit(path: str) -> None:
+    """Deterministic transport-corruption injector: flip one bit in the
+    middle of ``path`` (used by inject_fetch_corruption and the fault
+    harness)."""
+    size = os.path.getsize(path)
+    off = size // 2
+    with open(path, "r+b") as f:
+        f.seek(off)
+        byte = f.read(1)
+        f.seek(off)
+        f.write(bytes([byte[0] ^ 0x01]))

@@ -8,10 +8,13 @@ directory, never retrained) and its own threaded deadline-flush
 right queue; every model serves concurrently on its own batcher
 thread.
 
-Hot-swap contract (``swap``): the NEW artifact is loaded, traced, and
-warmed on a dummy microbatch entirely OUTSIDE the routing lock; the
-swap itself is one dict assignment under the lock (the measured
-"blackout" — microseconds).  The old engine's batcher is then stopped:
+Hot-swap contract (``swap`` = ``prepare`` + ``commit``): the NEW
+artifact is loaded, traced, and warmed on a dummy microbatch entirely
+OUTSIDE the routing lock (``prepare`` — the fleet coordinator,
+launch/fleet.py, runs this phase on every replica before committing
+any); the swap itself is one dict assignment under the lock
+(``commit`` — the measured "blackout", microseconds).  The old
+engine's batcher is then stopped:
 its queued and in-flight requests finish on the OLD tables, and a
 producer that races the drain gets the typed ``BatcherStopped``
 rejection which ``submit`` absorbs by re-routing to the entry that
@@ -52,6 +55,15 @@ class ModelEntry:
     batcher: MicroBatcher
     warm_s: float
 
+    @property
+    def version_tag(self) -> str:
+        """The tag echoed on every response this entry serves: the
+        content-addressed artifact id when the model came from an
+        artifact (fleet replicas compare THESE across hosts), else a
+        registry-local synthetic tag."""
+        return (self.artifact_id if self.artifact_id is not None
+                else f"{self.model_id}#v{self.version}")
+
 
 @dataclasses.dataclass
 class SwapReport:
@@ -79,11 +91,18 @@ class ModelRegistry:
     model's tables live without dropping requests."""
 
     def __init__(self, microbatch: int = 256, deadline_s: float = 2e-3,
-                 *, mesh=None, force_interpret: Optional[bool] = None):
+                 *, mesh=None, force_interpret: Optional[bool] = None,
+                 engine_hook: Optional[Callable] = None):
         self.microbatch = microbatch
         self.deadline_s = deadline_s
         self.mesh = mesh
         self.force_interpret = force_interpret
+        # fault-injection surface: called as engine_hook(model_id,
+        # batch) on the batcher thread BEFORE every engine dispatch; an
+        # exception it raises fails that batch exactly like an engine
+        # crash (handles complete failed, batcher survives).  The fleet
+        # harness uses this to kill a "host" with requests in flight.
+        self.engine_hook = engine_hook
         self._models: Dict[str, ModelEntry] = {}
         self._lock = threading.Lock()
         self._closed = False
@@ -116,15 +135,19 @@ class ModelRegistry:
         warm_s = time.monotonic() - t0
 
         def engine(batch_np):
+            if self.engine_hook is not None:
+                self.engine_hook(model_id, batch_np)
             return np.asarray(jax.block_until_ready(
                 serve_fn(jnp.asarray(batch_np))))
 
         batcher = MicroBatcher(engine, self.microbatch, self.deadline_s,
                                n_features=n_feat).start()
-        return ModelEntry(model_id=model_id, version=version,
-                          tables=tables, n_features=n_feat,
-                          artifact_id=artifact_id, serve_fn=serve_fn,
-                          batcher=batcher, warm_s=warm_s)
+        entry = ModelEntry(model_id=model_id, version=version,
+                           tables=tables, n_features=n_feat,
+                           artifact_id=artifact_id, serve_fn=serve_fn,
+                           batcher=batcher, warm_s=warm_s)
+        batcher.tag = entry.version_tag
+        return entry
 
     # -- lifecycle ----------------------------------------------------
     def register(self, model_id: str, source) -> ModelEntry:
@@ -143,16 +166,32 @@ class ModelRegistry:
             self._models[model_id] = entry
         return entry
 
-    def swap(self, model_id: str, source) -> SwapReport:
-        """Atomically rebind ``model_id`` to a new model.  The new
-        engine warms while the old one serves; in-flight and racing
-        requests finish on the old engine's drain or are re-routed —
-        none are dropped."""
+    def prepare(self, model_id: str, source) -> ModelEntry:
+        """Phase 1 of a swap: build + warm the replacement engine
+        entirely OFF-PATH (the old engine keeps serving; nothing is
+        routable to the new one yet).  Returns the prepared entry for a
+        later ``commit`` — or ``abandon`` if the swap is called off.
+        The fleet coordinator runs this phase on EVERY replica before
+        committing any, so a replica that fails to prepare aborts the
+        whole fleet cutover while all hosts still serve the old
+        version."""
         with self._lock:
             if model_id not in self._models:
                 raise UnknownModelError(model_id)
             version = self._models[model_id].version + 1
-        entry = self._build_entry(model_id, source, version=version)
+        return self._build_entry(model_id, source, version=version)
+
+    def abandon(self, entry: ModelEntry) -> None:
+        """Stand down a prepared-but-uncommitted entry (stops its
+        never-routed batcher and joins the thread)."""
+        entry.batcher.stop()
+
+    def commit(self, model_id: str, entry: ModelEntry) -> SwapReport:
+        """Phase 2 of a swap: atomically cut ``model_id`` over to the
+        prepared ``entry`` (one dict assignment under the routing lock
+        — the measured blackout), then drain the old engine.  In-flight
+        and racing requests finish on the old engine or re-route to the
+        new one; none are dropped."""
         t0 = time.monotonic()
         with self._lock:
             # the id can vanish during the (long) warm-up — a racing
@@ -163,6 +202,10 @@ class ModelRegistry:
             old = self._models.get(model_id)
             if old is not None and old.n_features == entry.n_features:
                 entry.version = old.version + 1
+                # re-stamp BEFORE the entry becomes routable: the
+                # version may have moved during the warm-up and the tag
+                # must name the version actually served
+                entry.batcher.tag = entry.version_tag
                 self._models[model_id] = entry
         if old is None:
             entry.batcher.stop()
@@ -185,6 +228,13 @@ class ModelRegistry:
             new_version=entry.version, old_artifact_id=old.artifact_id,
             new_artifact_id=entry.artifact_id, warm_s=entry.warm_s,
             blackout_s=blackout_s, drained_requests=drained)
+
+    def swap(self, model_id: str, source) -> SwapReport:
+        """Atomically rebind ``model_id`` to a new model: ``prepare``
+        (warm off-path) immediately followed by ``commit``.  In-flight
+        and racing requests finish on the old engine's drain or are
+        re-routed — none are dropped."""
+        return self.commit(model_id, self.prepare(model_id, source))
 
     def unregister(self, model_id: str) -> None:
         with self._lock:
@@ -209,11 +259,13 @@ class ModelRegistry:
         self.close()
 
     # -- request path -------------------------------------------------
-    def submit(self, model_id: str, x) -> RequestHandle:
+    def submit(self, model_id: str, x,
+               on_done: Optional[Callable] = None) -> RequestHandle:
         """Route one request.  A concurrent hot-swap can stop the entry
         we picked between lookup and enqueue; the typed rejection is
         absorbed by re-looking-up the (new) entry — bounded, since each
-        retry observes a strictly newer version."""
+        retry observes a strictly newer version.  ``on_done`` rides the
+        handle (see MicroBatcher.submit)."""
         while True:
             with self._lock:
                 entry = self._models.get(model_id)
@@ -222,7 +274,7 @@ class ModelRegistry:
                 raise UnknownModelError(
                     f"no model {model_id!r} registered (have: {known})")
             try:
-                return entry.batcher.submit(x)
+                return entry.batcher.submit(x, on_done=on_done)
             except BatcherStopped:
                 continue
 
@@ -263,5 +315,5 @@ class RegistryClient:
     registry: ModelRegistry
     model_id: str
 
-    def submit(self, x) -> RequestHandle:
-        return self.registry.submit(self.model_id, x)
+    def submit(self, x, on_done=None) -> RequestHandle:
+        return self.registry.submit(self.model_id, x, on_done=on_done)

@@ -255,13 +255,139 @@ def run_swap_demo(args, mesh) -> None:
           f"post-swap accuracy (mixed stream) {acc:.4f}")
 
 
+def _fleet_artifact_path(args, spec, source, origin) -> str:
+    """Fleet distribution ships BYTES (copy + hash-verify at every
+    replica), so the model must exist as an on-disk artifact; persist
+    an in-memory synthesis result to a tempdir when needed."""
+    import tempfile
+
+    if hasattr(source, "path"):            # a loaded Artifact
+        return source.path
+    from repro.artifact import save_artifact
+    out = args.artifact_dir or tempfile.mkdtemp(prefix="lut-fleet-src-")
+    path = save_artifact(out, source, name=spec.name.replace(" ", ""),
+                         spec=spec, provenance={"origin": origin})
+    print(f"persisted artifact for fleet distribution: {path}")
+    return path
+
+
+def run_fleet_serving(args, mesh) -> None:
+    """Serve the Poisson load through an N-replica fleet: artifact
+    distributed + hash-verified on every replica, requests routed
+    least-outstanding, every response tagged with the serving artifact
+    id."""
+    from repro.launch.batching import replay_open_loop
+    from repro.launch.fleet import LutFleet
+
+    spec, source, data, origin = load_or_build_lut_model(
+        args.lut_train_steps, artifact_dir=args.artifact_dir,
+        save=args.save_artifact)
+    path = _fleet_artifact_path(args, spec, source, origin)
+
+    fq = spec.layer_specs()[0].in_quant
+    rng = np.random.default_rng(0)
+    idx = rng.integers(0, data["test"]["x"].shape[0], args.requests)
+    codes = np.asarray(fq.to_code(fq.clip(
+        jnp.asarray(np.asarray(data["test"]["x"])[idx]))))
+
+    with LutFleet(args.replicas, args.microbatch,
+                  args.deadline_ms / 1e3, mesh=mesh) as fleet:
+        dist = fleet.distribute_artifact(path, "m")
+        print(f"distributed to {sorted(dist)}: "
+              f"{ {k: d.admitted for k, d in dist.items()} }")
+        t0 = time.monotonic()
+        handles = replay_open_loop(fleet.client("m"), codes, args.rate)
+        span = time.monotonic() - t0
+        stats = fleet.stats()
+
+    from repro.launch.batching import latency_percentiles_ms
+    p50, p95, p99 = latency_percentiles_ms(handles)
+    acc = lut_accuracy(handles, data, idx)
+    print(f"lut-serve[fleet x{args.replicas}, {origin}] "
+          f"microbatch={args.microbatch} deadline={args.deadline_ms}ms "
+          f"rate={args.rate:,.0f}/s:")
+    print(f"  latency p50 {p50:.2f} ms / p95 {p95:.2f} ms / "
+          f"p99 {p99:.2f} ms")
+    print(f"  throughput {len(handles) / span:,.0f} req/s, "
+          f"accuracy {acc:.4f}, per-replica served "
+          f"{ {k: v['served'] for k, v in stats.items()} }")
+
+
+def run_fleet_swap_demo(args, mesh) -> None:
+    """Two artifact versions, an N-replica fleet under live Poisson
+    load, and a TWO-PHASE coordinated swap mid-stream: prepare warms
+    the new engine off-path on every replica, commit cuts them all
+    over — zero dropped requests, every response tagged old or new,
+    post-commit every replica on the new id."""
+    import tempfile
+    import threading
+
+    from repro.artifact import save_artifact
+    from repro.launch.batching import replay_open_loop
+    from repro.launch.fleet import LutFleet
+
+    replicas = args.replicas or 2
+    art_dir = args.artifact_dir or tempfile.mkdtemp(prefix="lut-artifacts-")
+    spec, tables_v1, data = build_lut_model(args.lut_train_steps, seed=0)
+    _, tables_v2, _ = build_lut_model(args.lut_train_steps, seed=1)
+    paths = [save_artifact(art_dir, t, name=f"tiny-jsc-v{i + 1}",
+                           spec=spec, provenance={"seed": i})
+             for i, t in enumerate((tables_v1, tables_v2))]
+    print(f"compiled artifacts:\n  v1 {paths[0]}\n  v2 {paths[1]}")
+
+    fq = spec.layer_specs()[0].in_quant
+    rng = np.random.default_rng(0)
+    idx = rng.integers(0, data["test"]["x"].shape[0], args.requests)
+    codes = np.asarray(fq.to_code(fq.clip(
+        jnp.asarray(np.asarray(data["test"]["x"])[idx]))))
+
+    with LutFleet(replicas, args.microbatch,
+                  args.deadline_ms / 1e3, mesh=mesh) as fleet:
+        fleet.distribute_artifact(paths[0], "m")
+        handles: list = []
+        t0 = time.monotonic()
+        feeder = threading.Thread(target=lambda: handles.extend(
+            replay_open_loop(fleet.client("m"), codes, args.rate)))
+        feeder.start()
+        time.sleep(0.1 * args.requests / args.rate)
+        prepared = fleet.prepare_swap("m", paths[1])
+        rep = fleet.commit_swap(prepared)
+        feeder.join()
+        span = time.monotonic() - t0
+        tags = fleet.admitted_tags("m")
+
+    dropped = args.requests - sum(1 for h in handles if h.done)
+    by_tag: dict = {}
+    for h in handles:
+        by_tag[h.version_tag[:12]] = by_tag.get(h.version_tag[:12], 0) + 1
+    acc = lut_accuracy(handles, data, idx)
+    print(f"fleet swap demo (x{replicas} replicas): "
+          f"{len(handles)}/{args.requests} served, {dropped} dropped")
+    print(f"  prepare {rep.prepare_s * 1e3:.1f} ms off-path (all "
+          f"replicas), commit window {rep.commit_window_s * 1e3:.2f} ms, "
+          f"max blackout {rep.max_blackout_s * 1e6:.1f} us, "
+          f"{rep.total_drained} drained on old engines")
+    print(f"  responses by version tag: {by_tag}")
+    print(f"  post-commit fleet consistent: "
+          f"{len(set(tags.values())) == 1} "
+          f"(all on {rep.new_tag[:12]})")
+    print(f"  throughput {len(handles) / span:,.0f} req/s, "
+          f"accuracy (mixed stream) {acc:.4f}")
+
+
 def serve_lut(args) -> None:
     from repro.kernels.lut_gather import ops as lg_ops
     from repro.parallel.sharding import serving_mesh
 
     mesh = serving_mesh(args.shards) if args.shards else None
+    if args.fleet_swap_demo:
+        run_fleet_swap_demo(args, mesh)
+        return
     if args.swap_demo:
         run_swap_demo(args, mesh)
+        return
+    if args.replicas:
+        run_fleet_serving(args, mesh)
         return
 
     spec, source, data, origin = load_or_build_lut_model(
@@ -294,6 +420,12 @@ def main() -> None:
     ap.add_argument("--swap-demo", action="store_true",
                     help="multi-model registry demo: hot-swap a second "
                          "artifact version under live load")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="serve through an N-replica fleet (router + "
+                         "verified artifact distribution; 0 = one host)")
+    ap.add_argument("--fleet-swap-demo", action="store_true",
+                    help="fleet demo: two-phase coordinated hot-swap "
+                         "across all replicas under live load")
     ap.add_argument("--microbatch", type=int, default=256)
     ap.add_argument("--deadline-ms", type=float, default=2.0)
     ap.add_argument("--shards", type=int, default=0,

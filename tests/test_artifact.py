@@ -264,3 +264,69 @@ def test_missing_and_foreign_dirs_rejected(tmp_path):
     (alien / A.MANIFEST).write_text(json.dumps({"format": "other"}))
     with pytest.raises(ArtifactError, match="not a lut-artifact"):
         load_artifact(str(alien))
+
+
+# ---------------------------------------------------------------------------
+# fleet transport primitives: copy (ship) + verify (admission gate)
+# ---------------------------------------------------------------------------
+
+def test_copy_artifact_preserves_identity_and_bytes(tmp_path):
+    from repro.artifact import copy_artifact, verify_artifact
+
+    src = _fresh(tmp_path / "src")
+    dst = copy_artifact(src, str(tmp_path / "replica"))
+    assert os.path.basename(dst) == os.path.basename(src)
+    man = verify_artifact(dst)                   # hash-only, no arrays
+    assert man["artifact_id"] == load_artifact(src).artifact_id
+    # the copy loads and runs like the original
+    spec, tables = _tables(True)
+    codes = _codes(spec, 17)
+    assert np.array_equal(
+        np.asarray(lg_ops.lut_network_fused(
+            load_artifact(dst).tables, codes, block_b=17)),
+        _oracle(tables, codes))
+
+
+def test_copy_artifact_refetch_replaces_corrupt_copy(tmp_path):
+    from repro.artifact import copy_artifact, verify_artifact
+
+    src = _fresh(tmp_path / "src")
+    dst = copy_artifact(src, str(tmp_path / "replica"))
+    slab = os.path.join(dst, A.SLAB_FILE)
+    blob = bytearray(open(slab, "rb").read())
+    blob[len(blob) // 2] ^= 0x01                 # transport bit flip
+    open(slab, "wb").write(bytes(blob))
+    with pytest.raises(ArtifactError, match="hash mismatch"):
+        verify_artifact(dst)
+    dst2 = copy_artifact(src, str(tmp_path / "replica"))   # re-fetch
+    assert dst2 == dst
+    verify_artifact(dst2)                        # clean again
+
+
+def test_verify_artifact_rejects_truncation_and_missing(tmp_path):
+    from repro.artifact import verify_artifact
+
+    with pytest.raises(ArtifactError, match="no artifact manifest"):
+        verify_artifact(str(tmp_path / "nope"))
+    p = _fresh(tmp_path)
+    slab = os.path.join(p, A.SLAB_FILE)
+    blob = open(slab, "rb").read()
+    open(slab, "wb").write(blob[:len(blob) - 3])
+    with pytest.raises(ArtifactError, match="truncated"):
+        verify_artifact(p)
+
+
+def test_verify_artifact_rejects_structurally_corrupt_manifest(tmp_path):
+    """A bit flip landing in manifest.json can keep it parseable while
+    mangling keys — that must still be the typed ArtifactError (the
+    fleet's delete-and-refetch path keys on it), never a raw
+    KeyError."""
+    from repro.artifact import verify_artifact
+
+    p = _fresh(tmp_path)
+    mpath = os.path.join(p, A.MANIFEST)
+    man = json.load(open(mpath))
+    man["slaps"] = man.pop("slabs")              # key mangled in flight
+    json.dump(man, open(mpath, "w"))
+    with pytest.raises(ArtifactError, match="structurally corrupt"):
+        verify_artifact(p)

@@ -24,6 +24,7 @@ TOP_KEYS = {
     "configs": list,
     "serving": dict,
     "artifact": dict,          # compile-once / hot-swap ledger (v3)
+    "fleet": dict,             # multi-replica serving ledger (v5)
 }
 
 CONFIG_NUMERIC = [
@@ -63,6 +64,16 @@ ARTIFACT_NUMERIC = [
     "cold_load_packed_ms", "table_bytes_loaded_packed",
 ]
 
+FLEET_NUMERIC = [
+    "microbatch", "deadline_ms", "requests",
+    "throughput_req_s_r1", "throughput_req_s_r2", "throughput_req_s_r4",
+    "scaling_r4_vs_r1", "route_overhead_p50_us", "route_overhead_p99_us",
+    "swap_requests", "swap_dropped", "swap_prepare_ms",
+    "swap_commit_window_ms", "swap_blackout_max_us",
+    "swap_new_version_served",
+    "crash_requests", "crash_dropped", "crash_retried",
+]
+
 
 @pytest.fixture(scope="module")
 def payload():
@@ -75,7 +86,7 @@ def test_top_level_schema(payload):
         assert key in payload, f"missing top-level key {key!r}"
         assert isinstance(payload[key], typ), (key, type(payload[key]))
     assert payload["bench"] == "lut_infer"
-    assert payload["schema_version"] >= 4
+    assert payload["schema_version"] >= 5
     assert len(payload["configs"]) >= 1
 
 
@@ -132,3 +143,21 @@ def test_artifact_entry_schema(payload):
     assert art["swap_dropped"] == 0
     assert art["swap_failed"] == 0
     assert art["speedup_cold_load_vs_build"] >= 10
+
+
+def test_fleet_entry_schema(payload):
+    fleet = payload["fleet"]
+    for key in FLEET_NUMERIC:
+        assert key in fleet, f"fleet: missing {key!r}"
+        assert isinstance(fleet[key], numbers.Real) and \
+            not isinstance(fleet[key], bool), key
+    assert fleet["replica_counts"] == [1, 2, 4]
+    assert fleet["route_overhead_p50_us"] <= fleet["route_overhead_p99_us"]
+    # the fleet's hardware-independent contracts: a replica crash with
+    # requests in flight and a two-phase coordinated swap under load
+    # both finish with ZERO dropped requests, the crash drill actually
+    # re-dispatched work, and the swap actually served the new version
+    assert fleet["crash_dropped"] == 0
+    assert fleet["crash_retried"] > 0
+    assert fleet["swap_dropped"] == 0
+    assert fleet["swap_new_version_served"] > 0

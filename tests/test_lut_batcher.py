@@ -185,6 +185,42 @@ def test_engine_failure_propagates_to_handles():
                               _engine(np.arange(N_FEAT)[None])[0])
 
 
+def test_malformed_row_fails_its_batch_not_the_batcher():
+    """A wrong-width row must fail like an engine error — its batch's
+    handles complete failed — and the batcher thread must SURVIVE to
+    serve later requests.  (Regression: the buffer fill used to run
+    outside the try, so a bad row killed the thread and silently hung
+    everything behind it.)"""
+    with MicroBatcher(_engine, microbatch=2, deadline_s=0.01,
+                      n_features=N_FEAT) as mb:
+        bad = mb.submit(np.arange(N_FEAT + 3))       # wrong width
+        with pytest.raises(RuntimeError):
+            bad.result(timeout=5.0)
+        assert bad.failed
+        good = mb.submit(np.arange(N_FEAT))
+        out = good.result(timeout=5.0)               # batcher alive
+        assert np.array_equal(out, _engine(np.arange(
+            N_FEAT).reshape(1, -1))[0])
+
+
+def test_flush_stamps_tag_and_flush_key():
+    """Version-tag echo: every completed handle carries the batcher's
+    tag and the identity of the exact microbatch that served it, and
+    on_done fires once on completion."""
+    fired = []
+    with MicroBatcher(_engine, microbatch=2, deadline_s=0.2,
+                      n_features=N_FEAT, tag="v-abc") as mb:
+        h1 = mb.submit(np.arange(N_FEAT), on_done=fired.append)
+        h2 = mb.submit(np.arange(N_FEAT))
+        h1.result(timeout=5.0), h2.result(timeout=5.0)
+        h3 = mb.submit(np.arange(N_FEAT))
+        h3.result(timeout=5.0)
+    assert h1.tag == h2.tag == h3.tag == "v-abc"
+    assert h1.flush_key == h2.flush_key != h3.flush_key
+    assert fired == [h1]
+    assert all(f.tag == "v-abc" for f in mb.flushes)
+
+
 def test_replay_open_loop_serves_everything():
     rows = np.tile(np.arange(N_FEAT, dtype=np.int32), (40, 1))
     rows += np.arange(40, dtype=np.int32)[:, None]

@@ -116,6 +116,58 @@ def test_make_network_fn_sharded_serving_entry(lut_mesh):
     assert np.array_equal(np.asarray(fn(codes)), want)
 
 
+@pytest.mark.parametrize("ndev", [1, 2, 4])
+def test_donate_sharded_bit_exact(lut_mesh, ndev):
+    """Input donation on the SHARDED serving path is numerically
+    invisible: fresh device buffers per call (the microbatcher's usage
+    pattern), remainder batches included, all bit-exact vs the
+    single-device oracle."""
+    spec, tables = _tables(True)
+    fn = lg_ops.make_network_fn(tables, mesh=lut_mesh(ndev), donate=True)
+    for seed, B in ((0, 37), (1, 64), (2, 5)):
+        codes = _codes(spec, B, seed=seed)
+        want = _oracle(tables, np.asarray(codes))
+        got = np.asarray(fn(codes))      # donates THIS buffer
+        assert np.array_equal(got, want), (ndev, B)
+
+
+def test_donate_is_wired_through_sharded_lowering(lut_mesh):
+    """No-use-after-donate contract, pinned at the lowering: with
+    donate=True the sharded fn marks its input a buffer donor (the
+    runtime MAY reclaim it, so the serving loop must never reuse a
+    submitted buffer — and doesn't: every microbatch is a fresh
+    jnp.asarray); with donate=False the marker is absent.  Guards the
+    old regression where donation was silently dropped off the mesh
+    path."""
+    spec, tables = _tables(True)
+    mesh = lut_mesh(4)
+    codes = _codes(spec, 64)
+    donated = lg_ops.make_network_fn(tables, mesh=mesh, donate=True)
+    plain = lg_ops.make_network_fn(tables, mesh=mesh, donate=False)
+    txt_d = donated.lower(codes).as_text()
+    txt_p = plain.lower(codes).as_text()
+    marker = ("jax.buffer_donor", "tf.aliasing_output")
+    assert any(m in txt_d for m in marker)
+    assert not any(m in txt_p for m in marker)
+
+
+def test_donated_input_never_yields_garbage(lut_mesh):
+    """Passing the SAME buffer twice to a donating fn must either be
+    refused by the runtime (buffer reclaimed -> error) or still return
+    the bit-exact result — never silently corrupt output computed from
+    reused memory."""
+    spec, tables = _tables(True)
+    fn = lg_ops.make_network_fn(tables, mesh=lut_mesh(4), donate=True)
+    codes = _codes(spec, 48)
+    want = _oracle(tables, np.asarray(codes))
+    assert np.array_equal(np.asarray(fn(codes)), want)
+    try:
+        again = np.asarray(fn(codes))    # use-after-donate
+    except RuntimeError:
+        return                           # reclaimed: loud refusal is correct
+    assert np.array_equal(again, want)
+
+
 def test_sharded_output_is_batch_sharded(lut_mesh):
     """The output stays sharded over the mesh — downstream consumers
     (argmax, dequant) keep data parallelism without a reshard."""

@@ -167,6 +167,41 @@ def test_swap_rejects_width_mismatched_replacement():
             assert np.array_equal(h.result(timeout=10.0), want[i])
 
 
+def test_prepare_commit_split_and_abandon():
+    """The two-phase primitives the fleet coordinator builds on:
+    prepare warms OFF-PATH (old engine keeps serving and tagging),
+    abandon stands a prepared entry down without a cutover, commit is
+    the atomic cut — and every response's tag names the engine that
+    served it."""
+    _, ta = _net(0)
+    _, tb = _net(1)
+    rows = _rows(6)
+    want_a, want_b = _oracle(ta, rows), _oracle(tb, rows)
+    with ModelRegistry(microbatch=4, deadline_s=0.002) as reg:
+        reg.register("m", ta)
+        tag_v1 = reg.get("m").version_tag
+        prepared = reg.prepare("m", tb)
+        assert prepared.version == 2
+        # off-path: still serving (and tagging) v1 after prepare
+        h = reg.submit("m", rows[0])
+        assert np.array_equal(h.result(timeout=10.0), want_a[0])
+        assert h.tag == tag_v1
+        reg.abandon(prepared)                    # swap called off
+        assert reg.get("m").version == 1
+        h = reg.submit("m", rows[1])
+        assert np.array_equal(h.result(timeout=10.0), want_a[1])
+        # prepare again and commit: atomic cut, new tag echoed
+        rep = reg.commit("m", reg.prepare("m", tb))
+        assert (rep.old_version, rep.new_version) == (1, 2)
+        tag_v2 = reg.get("m").version_tag
+        assert tag_v2 != tag_v1
+        hs = [reg.submit("m", r) for r in rows]
+        for i, h in enumerate(hs):
+            assert np.array_equal(h.result(timeout=10.0), want_b[i])
+            assert h.tag == tag_v2
+            assert h.flush_key is not None
+
+
 def test_swap_preserves_version_and_stats_monotonicity():
     _, ta = _net(0)
     _, tb = _net(1)
