@@ -41,6 +41,17 @@ drills contractually complete with zero dropped requests
 (tests/test_bench_schema.py pins this, tests/test_fleet.py pins the
 mechanism);
 
+plus a ``segmented`` section (schema v6): the over-budget regime — a
+deeper/wider net whose table slabs want ~3x the fused VMEM budget, so
+``ops.plan_segments`` cuts it into the fewest fused segments that fit
+(adopting int4-packed slabs when that saves a segment) and chains the
+inter-segment activation codes through HBM.  Records the plan
+(segments, bounds, cut widths, per-segment VMEM), the HBM bytes each
+cut moves (``2 * B * width * 4``: one store + one load of int32
+codes), and an interleaved timing pair against the per-layer fallback
+— ``speedup_segmented_vs_per_layer`` is contractually > 1.5x (the
+whole point of segmenting instead of falling off the fusion cliff);
+
 plus an ``artifact`` section: the compile-once ledger — how long
 ``build_lut_model`` takes from scratch (train + synthesise) vs
 COLD-LOADING the same network from a content-addressed repro/artifact
@@ -241,6 +252,83 @@ def _bench_config(name: str, kw: dict, batch: int, iters: int):
         "sharded_fused_ms": round(t_sharded * 1e3, 3),
         "samples_per_sec_sharded": round(batch / t_sharded),
         "speedup_sharded_vs_fused": round(t_fused / t_sharded, 2),
+    }
+
+
+# deliberately OVER the 12 MiB fused-VMEM budget (~3x): six 512-wide
+# fan-in-6 adder layers put ~34 MB of table slabs on the wish list, so
+# the cost model MUST cut the net into fused segments — the series this
+# section tracks is "segmented beats the per-layer fallback"
+SEG_CONFIG = ("deeper-wider-3x",
+              dict(in_features=16,
+                   widths=(512, 512, 512, 512, 512, 512, 5),
+                   bits=2, fan_in=6, degree=1, adder_width=2))
+
+
+def _bench_segmented(fast: bool):
+    """Cost-model-driven segmented execution on an over-budget net:
+    ``plan_segments`` splits the layer list into the fewest fused
+    pallas_calls whose slabs fit VMEM, chaining activation codes
+    through HBM between segments.  Timed as an interleaved pair against
+    the per-layer fallback (what an over-budget net ran as before the
+    planner existed); the oracle is the jnp reference chain."""
+    name, kw = SEG_CONFIG
+    batch = 1024 if fast else 4096
+    iters = 2 if fast else 3
+    spec = LD.ModelSpec(name=name, **kw)
+    model = LD.init_model(jax.random.key(2), spec)
+    packed = LS.synthesise(model, spec, pack=True)
+    codes = jax.random.randint(
+        jax.random.key(3), (batch, spec.in_features), 0,
+        2 ** spec.layer_specs()[0].in_quant.bits).astype(jnp.int32)
+
+    n_in = spec.in_features
+    budget = lg_ops.FUSED_VMEM_BUDGET_BYTES
+    vmem_u8 = lg_ops.fused_vmem_bytes(packed, 1024, n_in)
+
+    # the plan-driven serving entry: fused=None -> plan_segments picks
+    # the execution shape (and may adopt int4 packing when it saves a
+    # segment); the same call an in-budget net takes to ONE segment
+    seg_fn = lg_ops.make_network_fn(packed, n_in0=n_in)
+    plan = seg_fn.execution_plan
+    assert plan.mode == "segmented" and plan.n_segments >= 2, \
+        plan.describe()
+    per_layer_fn = jax.jit(lambda c: lg_ops.lut_network(packed, c))
+
+    # bit-exactness guard: a benchmark of a wrong kernel is worthless
+    want = codes
+    for t in packed:
+        want = LS.lut_layer_forward(t, want)
+    assert np.array_equal(np.asarray(seg_fn(codes)),
+                          np.asarray(want)), name
+    assert np.array_equal(np.asarray(per_layer_fn(codes)),
+                          np.asarray(want)), f"{name} per-layer"
+
+    t_pl, t_seg = paired_timed(per_layer_fn, seg_fn, codes, iters=iters)
+
+    hbm_per_cut = list(plan.hbm_bytes_per_cut(batch))
+    return {
+        "name": name,
+        "batch": batch,
+        "widths": list(kw["widths"]),
+        "fan_in": kw["fan_in"],
+        "mode": plan.mode,
+        "segments": plan.n_segments,
+        "segment_bounds": [list(b) for b in plan.bounds],
+        "block_b": list(plan.block_b),
+        "pack_int4": plan.pack_int4,
+        "pipeline": plan.pipeline,
+        "cut_widths": list(plan.cut_widths),
+        "hbm_bytes_per_cut": hbm_per_cut,
+        "hbm_bytes_per_pass": sum(hbm_per_cut),
+        "vmem_bytes_fused_uint8": vmem_u8,
+        "vmem_bytes_per_segment": list(plan.vmem_bytes),
+        "budget_bytes": budget,
+        "over_budget_ratio": round(vmem_u8 / budget, 2),
+        "segmented_ms": round(t_seg * 1e3, 3),
+        "per_layer_ms": round(t_pl * 1e3, 3),
+        "samples_per_sec_segmented": round(batch / t_seg),
+        "speedup_segmented_vs_per_layer": round(t_pl / t_seg, 2),
     }
 
 
@@ -499,6 +587,7 @@ def run(fast: bool = False, write_json: bool = False):
     batch = 1024 if fast else 4096
     iters = 3 if fast else 7
     results = [_bench_config(n, kw, batch, iters) for n, kw in CONFIGS]
+    segmented = _bench_segmented(fast)
     serving = _bench_serving(fast)
     artifact = _bench_artifact(fast)
     fleet = _bench_fleet(fast)
@@ -524,6 +613,16 @@ def run(fast: bool = False, write_json: bool = False):
           r["vmem_bytes_fused_int4"], r["vmem_tile_bytes_grid"],
           r["vmem_tile_bytes_pipelined"], r["block_b_tuned"],
           r["block_b_tuned_pipelined"]] for r in results])
+    print_table(
+        "segmented execution: over-budget net, fused segments vs per-layer",
+        ["config", "B", "vmem/budget", "segs", "int4", "cut-w",
+         "seg-ms", "per-layer-ms", "speedup", "HBM/cut-B"],
+        [[segmented["name"], segmented["batch"],
+          f'{segmented["over_budget_ratio"]}x', segmented["segments"],
+          segmented["pack_int4"], segmented["cut_widths"][0],
+          segmented["segmented_ms"], segmented["per_layer_ms"],
+          f'{segmented["speedup_segmented_vs_per_layer"]}x',
+          segmented["hbm_bytes_per_cut"][0]]])
     print_table(
         "deadline-flush serving (real threads, Poisson arrivals)",
         ["microbatch", "deadline_ms", "rate", "p50_ms", "p99_ms",
@@ -556,11 +655,12 @@ def run(fast: bool = False, write_json: bool = False):
 
     payload = {
         "bench": "lut_infer",
-        "schema_version": 5,
+        "schema_version": 6,
         "backend": jax.default_backend(),
         "interpret": jax.default_backend() != "tpu",
         "fast": fast,
         "configs": results,
+        "segmented": segmented,
         "serving": serving,
         "artifact": artifact,
         "fleet": fleet,

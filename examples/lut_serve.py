@@ -53,6 +53,19 @@ re-dispatches transparently — zero requests dropped
     PYTHONPATH=src python -m repro.launch.serve --lut --fleet-swap-demo \
         --replicas 2 --requests 2048 --rate 1000
 
+Segmented execution: each engine's shape is chosen by a cost model,
+not a binary fits/doesn't-fit gate.  ``ops.plan_segments`` partitions
+the layer list into the fewest segments whose table slabs fit the
+fused VMEM budget — models this size plan to ONE segment (the classic
+fully fused kernel); a deeper/wider net plans to N fused segments
+chained through HBM, each double-buffering its tile DMAs, paying only
+``2 * batch * cut_width * 4`` HBM bytes per cut instead of the ~5x
+per-layer cliff.  The chosen plan ships INSIDE the artifact manifest
+(with the per-segment tuned ``block_b``), so stage 2's cold loads
+adopt it without re-planning or re-tuning, and the registry reports it
+per model (``stats()["<id>"]["exec_mode"]``) — the fusion decision is
+observable, never silent.
+
 Knobs: --microbatch (flush size = engine batch), --deadline-ms (max
 straggler queueing delay), --rate (offered Poisson load per model),
 --requests (stream length per model).  Reports per-model p50/p95/p99
@@ -69,6 +82,7 @@ import numpy as np
 
 from repro.artifact import find_artifacts, load_artifact, save_artifact
 from repro.core.cost_model import model_cost
+from repro.kernels.lut_gather import ops as lg_ops
 from repro.launch.batching import latency_percentiles_ms, replay_open_loop
 from repro.launch.registry import ModelRegistry
 from repro.launch.serve import build_lut_model, lut_accuracy, lut_dataset
@@ -99,7 +113,11 @@ def compile_or_load(art_dir: str, train_steps: int):
                   f"{(time.monotonic() - t0) * 1e3:.1f} ms (no training)")
         else:
             spec, tables, _ = build_lut_model(train_steps, **kw)
+            # persist the execution plan with the tables: later cold
+            # loads skip re-planning and the block_b sweep entirely
+            plan = lg_ops.plan_segments(tables, n_in0=spec.in_features)
             path = save_artifact(subdir, tables, name=mid, spec=spec,
+                                 plan=plan,
                                  provenance=dict(kw,
                                                  train_steps=train_steps))
             art = load_artifact(path, unpack_int4=False)
@@ -148,6 +166,8 @@ def main():
             reg.register(mid, arts[mid])
         print(f"registry serving {reg.model_ids()} "
               f"(shards={args.shards or 1})")
+        for mid in served_ids:
+            print(f"  {mid}: {reg.get(mid).plan.describe()}")
 
         handles = {mid: [] for mid in served_ids}
         t0 = time.monotonic()

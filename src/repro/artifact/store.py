@@ -114,6 +114,16 @@ class Artifact:
                 kw[k] = tuple(kw[k])
         return ModelSpec(**kw)
 
+    @property
+    def execution_plan(self) -> Optional[Dict[str, Any]]:
+        """The persisted segment plan (``SegmentPlan.summary()`` dict),
+        when the writer recorded one.  ``make_network_fn`` adopts it on
+        load, skipping both re-planning and the ``tune_block_b`` sweep
+        — the plan ships ``block_b_tuned`` per segment.  It lives
+        OUTSIDE the hashed ``content`` block, so the artifact id of a
+        network is identical with or without a plan."""
+        return self.manifest.get("execution_plan")
+
 
 # int4 nibble pack/unpack and the code-width metadata that decides
 # eligibility are shared with the kernel side: core/lut_synth owns them
@@ -145,13 +155,17 @@ def _infer_n_in(tables: List[LayerTables]) -> int:
 def save_artifact(out_dir: str, tables: List[LayerTables], *,
                   name: str = "lut", spec: Optional[ModelSpec] = None,
                   provenance: Optional[Dict[str, Any]] = None,
-                  int4: bool = True) -> str:
+                  int4: bool = True, plan: Any = None) -> str:
     """Serialise a synthesised network under ``out_dir``; returns the
     artifact directory (``<out_dir>/<name>-<hash12>``).  ``spec`` adds
     the training ModelSpec + a core/cost_model summary to the manifest;
     ``provenance`` is free-form (train steps, dataset, seed, ...).
     ``int4=False`` forces raw byte slabs everywhere (pure zero-copy
-    loads, ~2x bigger tables on disk)."""
+    loads, ~2x bigger tables on disk).  ``plan`` persists a segment
+    execution plan (an ``ops.SegmentPlan`` or its ``summary()`` dict)
+    in the manifest — outside the hashed content, so the same tables
+    hash to the same artifact id with or without one — letting cold
+    loads skip re-planning and the ``tune_block_b`` sweep."""
     layers_meta: List[Dict[str, Any]] = []
     slabs_meta: List[Dict[str, Any]] = []
     payloads: List[np.ndarray] = []
@@ -251,6 +265,10 @@ def save_artifact(out_dir: str, tables: List[LayerTables], *,
                            created_unix=round(time.time(), 3)),
         "notes": {"int4": INT4_NOTE} if any_int4 else {},
     }
+    if plan is not None:
+        manifest["execution_plan"] = (plan.summary()
+                                      if hasattr(plan, "summary")
+                                      else dict(plan))
     manifest.update(content)
 
     final = os.path.join(out_dir, f"{name}-{artifact_id[:12]}")

@@ -89,6 +89,32 @@ of tile i+1 before waiting on tile i, and an out-slot is reclaimed only
 after tile i-2's store has landed, so the HBM transfers of neighbouring
 tiles overlap the current tile's compute instead of serialising on one
 buffer pair.
+
+Segmented execution
+-------------------
+
+A network whose slabs exceed the fused VMEM budget no longer falls off
+a cliff onto the per-layer path.  ``ops.plan_segments`` partitions the
+layer list into the FEWEST contiguous segments whose
+``ops.fused_vmem_bytes`` each fit the budget (cost-model tiebreak:
+among minimum-count partitions, cut where the layer is narrowest,
+because the cut layer's code vector is the only data that crosses HBM
+between segments — ``2 * B * width * 4`` bytes per cut per forward
+pass, one store + one load).  ``ops.lut_network_segmented`` then runs
+the plan as a CHAIN of these fused kernels: within a segment the
+inter-layer codes never leave the VMEM scratch; between segments the
+code tensor is an ordinary HBM array, which is exactly the layout the
+double-buffered mode above stages — so multi-segment plans default to
+``pipeline=True`` per segment and each segment's tile DMAs overlap its
+compute while its slabs stay resident.  One segment IS the classic
+fully fused path (bit-identical, same artifact id semantics); the
+per-layer engine survives only as the last resort when a single layer
+alone cannot fit.  The planner also tries int4 nibble-packing (see
+*Slab packing*) and adopts it when the halved residency reduces the
+segment count.  Plans serialise into the artifact manifest
+(``SegmentPlan.summary()``) together with the per-segment tuned
+``block_b``, so a cold-loaded model skips both re-planning and the
+``tune_block_b`` sweep.
 """
 from __future__ import annotations
 

@@ -54,6 +54,9 @@ class ModelEntry:
     serve_fn: Callable
     batcher: MicroBatcher
     warm_s: float
+    # the engine's SegmentPlan (fused / segmented / per-layer) — what
+    # make_network_fn chose, or adopted from the artifact manifest
+    plan: Optional[Any] = None
 
     @property
     def version_tag(self) -> str:
@@ -109,26 +112,28 @@ class ModelRegistry:
 
     # -- assembly -----------------------------------------------------
     def _resolve(self, source) -> tuple:
-        """source -> (tables, n_features, artifact_id)."""
+        """source -> (tables, n_features, artifact_id, plan)."""
         if isinstance(source, str):
             from repro.artifact import load_artifact
             # packed load: int4 slabs feed the fused kernel directly,
             # halving per-model table residency across the fleet
             source = load_artifact(source, unpack_int4=False)
         if hasattr(source, "tables"):            # a loaded Artifact
-            return source.tables, source.n_in, source.artifact_id
+            return (source.tables, source.n_in, source.artifact_id,
+                    getattr(source, "execution_plan", None))
         from repro.artifact.store import _infer_n_in
         tables = list(source)
-        return tables, _infer_n_in(tables), None
+        return tables, _infer_n_in(tables), None, None
 
     def _build_entry(self, model_id: str, source,
                      version: int) -> ModelEntry:
         from repro.kernels.lut_gather import ops as lg_ops
 
-        tables, n_feat, artifact_id = self._resolve(source)
+        tables, n_feat, artifact_id, plan = self._resolve(source)
         serve_fn = lg_ops.make_network_fn(
             tables, block_b=self.microbatch, n_in0=n_feat,
-            mesh=self.mesh, force_interpret=self.force_interpret)
+            mesh=self.mesh, force_interpret=self.force_interpret,
+            plan=plan)
         t0 = time.monotonic()
         jax.block_until_ready(
             serve_fn(jnp.zeros((self.microbatch, n_feat), jnp.int32)))
@@ -145,7 +150,8 @@ class ModelRegistry:
         entry = ModelEntry(model_id=model_id, version=version,
                            tables=tables, n_features=n_feat,
                            artifact_id=artifact_id, serve_fn=serve_fn,
-                           batcher=batcher, warm_s=warm_s)
+                           batcher=batcher, warm_s=warm_s,
+                           plan=getattr(serve_fn, "execution_plan", None))
         batcher.tag = entry.version_tag
         return entry
 
@@ -306,6 +312,10 @@ class ModelRegistry:
                 "flushes": len(e.batcher.flushes),
                 "served": sum(f.fill for f in e.batcher.flushes),
                 "warm_s": round(e.warm_s, 4),
+                "exec_mode": (e.plan.mode if e.plan is not None
+                              else None),
+                "exec_segments": (e.plan.n_segments
+                                  if e.plan is not None else None),
             } for mid, e in entries.items()
         }
 

@@ -116,10 +116,16 @@ def load_or_build_lut_model(train_steps: int = 150,
     spec, tables, data = build_lut_model(train_steps, seed=seed)
     if save and artifact_dir:
         from repro.artifact import save_artifact
+        from repro.kernels.lut_gather import ops as lg_ops
+        # ship the execution plan with the model: cold loads adopt it
+        # and skip both re-planning and the tune_block_b sweep (the
+        # plan lives outside the hashed content — same artifact id)
+        plan = lg_ops.plan_segments(tables, n_in0=spec.in_features)
         path = save_artifact(
             artifact_dir, tables, name=spec.name.replace(" ", ""),
-            spec=spec, provenance={"train_steps": train_steps,
-                                   "seed": seed, "dataset": "jsc"})
+            spec=spec, plan=plan,
+            provenance={"train_steps": train_steps,
+                        "seed": seed, "dataset": "jsc"})
         print(f"saved artifact {path}")
         return spec, tables, data, "trained+saved"
     return spec, tables, data, "trained"
@@ -393,8 +399,12 @@ def serve_lut(args) -> None:
     spec, source, data, origin = load_or_build_lut_model(
         args.lut_train_steps, artifact_dir=args.artifact_dir,
         save=args.save_artifact)
-    serve_fn = lg_ops.make_network_fn(source, fused=True,
-                                      block_b=args.microbatch, mesh=mesh)
+    # plan-driven engine choice: fused when the slabs fit VMEM, a chain
+    # of fused segments when they do not (a persisted plan in an
+    # artifact manifest is adopted as-is, skipping re-plan + tune)
+    serve_fn = lg_ops.make_network_fn(source, block_b=args.microbatch,
+                                      mesh=mesh)
+    print(f"  {serve_fn.execution_plan.describe()}")
     drive_lut_serving(
         serve_fn, spec, data, requests=args.requests,
         microbatch=args.microbatch, deadline_ms=args.deadline_ms,

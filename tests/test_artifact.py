@@ -149,6 +149,85 @@ def test_make_network_fn_accepts_artifact(art_root):
     assert np.array_equal(np.asarray(fn(codes)), _oracle(tables, codes))
 
 
+def _forced_plan(tables, spec, block_b=64):
+    """A multi-segment plan for the module fixture net: budget shrunk
+    to max(single-layer need, full/3) so the planner must cut."""
+    widths = [t.conn.shape[0] for t in tables]
+    need = max(lg_ops.fused_vmem_bytes(
+        tables[i:i + 1], block_b,
+        spec.in_features if i == 0 else widths[i - 1])
+        for i in range(len(tables)))
+    full = lg_ops.fused_vmem_bytes(tables, block_b, spec.in_features)
+    budget = max(need, full // 3 + 1)
+    return lg_ops.plan_segments(tables, block_b=block_b,
+                                n_in0=spec.in_features, budget=budget,
+                                prefer_int4=False), budget
+
+
+def test_execution_plan_roundtrip_and_skips_tune(tmp_path, monkeypatch):
+    """The plan-persistence contract: save -> load round-trips the
+    partition plan (with per-segment block_b_tuned) verbatim, a
+    plan-carrying artifact skips the tune_block_b sweep on load even
+    under block_b="auto", planned-vs-replanned execution is bit-exact,
+    and the plan does NOT perturb the content-addressed artifact id."""
+    spec, tables = _tables(True)
+    plan, budget = _forced_plan(tables, spec)
+    assert plan.mode == "segmented" and plan.n_segments >= 2, plan
+    p_plan = save_artifact(str(tmp_path / "with-plan"), tables,
+                           name="art-t", spec=spec, plan=plan)
+    p_bare = save_artifact(str(tmp_path / "no-plan"), tables,
+                           name="art-t", spec=spec)
+    # identical artifact id with or without a plan: the plan lives
+    # outside the hashed content block
+    assert os.path.basename(p_plan) == os.path.basename(p_bare)
+    art = load_artifact(p_plan)
+    assert art.execution_plan == plan.summary()
+    assert lg_ops.SegmentPlan.from_summary(art.execution_plan) == plan
+    assert load_artifact(p_bare).execution_plan is None
+
+    probes = []
+    monkeypatch.setattr(
+        lg_ops, "tune_block_b",
+        lambda *a, **k: probes.append(1) or (64, {64: 1.0}))
+    fn = lg_ops.make_network_fn(art, block_b="auto")
+    assert probes == [], "persisted plan must skip the block_b sweep"
+    assert fn.execution_plan == plan
+
+    codes = _codes(spec, 61)
+    want = _oracle(tables, codes)
+    replanned = lg_ops.make_network_fn(tables, block_b=64,
+                                       n_in0=spec.in_features,
+                                       budget=budget)
+    assert np.array_equal(np.asarray(fn(codes)), want)
+    assert np.array_equal(np.asarray(replanned(codes)), want)
+
+
+def test_registry_serves_plan_carrying_artifact(tmp_path):
+    """A segmented plan rides the artifact into the serving registry
+    unchanged: the entry adopts it (observable in stats) and serves
+    bit-exactly."""
+    from repro.launch.registry import ModelRegistry
+
+    spec, tables = _tables(True)
+    plan, _ = _forced_plan(tables, spec)
+    path = save_artifact(str(tmp_path / "seg"), tables, name="art-t",
+                         spec=spec, plan=plan)
+    codes = _codes(spec, 40)
+    want = _oracle(tables, codes)
+    with ModelRegistry(microbatch=64, deadline_s=5e-3) as reg:
+        reg.register("seg", path)
+        entry = reg.get("seg")
+        assert entry.plan.mode == "segmented"
+        assert entry.plan.n_segments == plan.n_segments
+        st = reg.stats()["seg"]
+        assert st["exec_mode"] == "segmented"
+        assert st["exec_segments"] == plan.n_segments
+        rows = np.asarray(codes)
+        handles = [reg.submit("seg", r) for r in rows]
+        got = np.stack([h.result(timeout=10.0) for h in handles])
+    assert np.array_equal(got, want)
+
+
 # ---------------------------------------------------------------------------
 # format properties
 # ---------------------------------------------------------------------------

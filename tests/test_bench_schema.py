@@ -25,6 +25,7 @@ TOP_KEYS = {
     "serving": dict,
     "artifact": dict,          # compile-once / hot-swap ledger (v3)
     "fleet": dict,             # multi-replica serving ledger (v5)
+    "segmented": dict,         # over-budget segmented execution (v6)
 }
 
 CONFIG_NUMERIC = [
@@ -64,6 +65,13 @@ ARTIFACT_NUMERIC = [
     "cold_load_packed_ms", "table_bytes_loaded_packed",
 ]
 
+SEGMENTED_NUMERIC = [
+    "batch", "fan_in", "segments",
+    "hbm_bytes_per_pass", "vmem_bytes_fused_uint8", "budget_bytes",
+    "over_budget_ratio", "segmented_ms", "per_layer_ms",
+    "samples_per_sec_segmented", "speedup_segmented_vs_per_layer",
+]
+
 FLEET_NUMERIC = [
     "microbatch", "deadline_ms", "requests",
     "throughput_req_s_r1", "throughput_req_s_r2", "throughput_req_s_r4",
@@ -86,7 +94,7 @@ def test_top_level_schema(payload):
         assert key in payload, f"missing top-level key {key!r}"
         assert isinstance(payload[key], typ), (key, type(payload[key]))
     assert payload["bench"] == "lut_infer"
-    assert payload["schema_version"] >= 5
+    assert payload["schema_version"] >= 6
     assert len(payload["configs"]) >= 1
 
 
@@ -143,6 +151,41 @@ def test_artifact_entry_schema(payload):
     assert art["swap_dropped"] == 0
     assert art["swap_failed"] == 0
     assert art["speedup_cold_load_vs_build"] >= 10
+
+
+def test_segmented_entry_schema(payload):
+    seg = payload["segmented"]
+    for key in SEGMENTED_NUMERIC:
+        assert key in seg, f"segmented: missing {key!r}"
+        assert isinstance(seg[key], numbers.Real) and \
+            not isinstance(seg[key], bool), key
+    assert isinstance(seg["pack_int4"], bool)
+    assert isinstance(seg["pipeline"], bool)
+    for key in ("widths", "segment_bounds", "block_b", "cut_widths",
+                "hbm_bytes_per_cut", "vmem_bytes_per_segment"):
+        assert isinstance(seg[key], list) and seg[key], key
+
+
+def test_segmented_contracts(payload):
+    """Hardware-independent contracts of the over-budget regime: the
+    config really is over budget, the planner really segmented it, no
+    segment claims more VMEM than the budget, the cut accounting
+    matches ``2 * B * width * 4``, and segmented execution beats the
+    per-layer fallback by the tracked > 1.5x margin (the reason the
+    planner exists)."""
+    seg = payload["segmented"]
+    assert seg["mode"] == "segmented"
+    assert seg["over_budget_ratio"] > 1
+    assert seg["vmem_bytes_fused_uint8"] > seg["budget_bytes"]
+    assert seg["segments"] >= 2
+    assert len(seg["segment_bounds"]) == seg["segments"]
+    assert len(seg["cut_widths"]) == seg["segments"] - 1
+    for v in seg["vmem_bytes_per_segment"]:
+        assert v <= seg["budget_bytes"]
+    for w, hbm in zip(seg["cut_widths"], seg["hbm_bytes_per_cut"]):
+        assert hbm == 2 * 4 * seg["batch"] * w
+    assert seg["hbm_bytes_per_pass"] == sum(seg["hbm_bytes_per_cut"])
+    assert seg["speedup_segmented_vs_per_layer"] > 1.5
 
 
 def test_fleet_entry_schema(payload):

@@ -1,11 +1,13 @@
 """Cross-engine conformance: ONE differential oracle for every LUT
 inference engine.
 
-Six execution paths now exist for a synthesised LUT network — per-layer
-Pallas (packed uint8 / legacy int32 / int4 nibble-packed), fused
-single-kernel (same three layouts, grid-mode or double-buffered
-pipeline), shard_map data-parallel over {1, 2, 4} devices, and the
-artifact round-trip (save -> content-addressed load, unpacked or
+Seven execution paths now exist for a synthesised LUT network —
+per-layer Pallas (packed uint8 / legacy int32 / int4 nibble-packed),
+fused single-kernel (same three layouts, grid-mode or double-buffered
+pipeline), SEGMENTED (a cost-model plan chaining 2+ fused kernels with
+inter-segment codes staged through HBM — forced here by shrinking the
+planner's budget), shard_map data-parallel over {1, 2, 4} devices, and
+the artifact round-trip (save -> content-addressed load, unpacked or
 packed).  Every one of them is a pure execution-layout change, so they
 must agree BIT-EXACTLY with the jnp reference chain
 (kernels/lut_gather/ref.py) on the legacy int32 tables.
@@ -24,7 +26,11 @@ Also here: the ``fused_vmem_bytes`` accounting property — the analytic
 fusion-eligibility estimate is pinned against the ACTUAL flattened
 slab + scratch allocation (``ops.fused_vmem_actual``) for packed and
 unpacked layouts, pipelined and grid tiles, so the estimator cannot
-silently drift from what the kernel binds.
+silently drift from what the kernel binds — and its segmented
+extension: every segment ``plan_segments`` emits must pass the
+estimator it was planned under (estimate == actual == the plan's
+recorded ledger, all within budget), and per-layer mode may only be
+chosen when some single layer genuinely cannot fit.
 """
 import functools
 import shutil
@@ -69,6 +75,20 @@ def _codes(spec, B, seed=9):
         2 ** spec.layer_specs()[0].in_quant.bits).astype(jnp.int32)
 
 
+def _forced_seg_plan(tables, block_b, n_in):
+    """Plan with the budget shrunk until the planner has to cut —
+    ``max(single-layer need, full/3)`` forces 2+ segments on any
+    multi-layer net while staying feasible (every singleton fits)."""
+    widths = [t.conn.shape[0] for t in tables]
+    need = max(lg_ops.fused_vmem_bytes(
+        tables[i:i + 1], block_b, n_in if i == 0 else widths[i - 1])
+        for i in range(len(tables)))
+    full = lg_ops.fused_vmem_bytes(tables, block_b, n_in)
+    return lg_ops.plan_segments(tables, block_b=block_b, n_in0=n_in,
+                                budget=max(need, full // 3 + 1),
+                                prefer_int4=False)
+
+
 def _assert_conformant(kw: dict, B: int, block_b: int,
                        ndevs=(), artifact: bool = False):
     """Run the full engine matrix for one network draw and assert every
@@ -93,6 +113,16 @@ def _assert_conformant(kw: dict, B: int, block_b: int,
         "fused-int4-pipelined": lambda: lg_ops.lut_network_fused(
             int4, codes, block_b=block_b, pipeline=True),
     }
+    # segmented engine: budget shrunk until the planner must cut (a
+    # single-layer draw legitimately plans to 1 segment == fused)
+    seg_plans = {"uint8": _forced_seg_plan(packed, block_b,
+                                           spec.in_features),
+                 "int4": _forced_seg_plan(int4, block_b,
+                                          spec.in_features)}
+    runs["segmented-uint8"] = functools.partial(
+        lg_ops.lut_network_segmented, packed, codes, seg_plans["uint8"])
+    runs["segmented-int4"] = functools.partial(
+        lg_ops.lut_network_segmented, int4, codes, seg_plans["int4"])
     for nd in ndevs:
         if jax.device_count() < nd:
             continue
@@ -102,6 +132,9 @@ def _assert_conformant(kw: dict, B: int, block_b: int,
         runs[f"sharded-{nd}d-int4"] = functools.partial(
             lg_ops.lut_network_fused_sharded, int4, codes,
             serving_mesh(nd), block_b)
+        runs[f"sharded-{nd}d-segmented"] = functools.partial(
+            lg_ops.lut_network_fused_sharded, packed, codes,
+            serving_mesh(nd), plan=seg_plans["uint8"])
 
     tmp = tempfile.mkdtemp(prefix="lut-conf-") if artifact else None
     try:
@@ -356,6 +389,118 @@ def test_save_artifact_int4_false_expands_packed_tables(tmp_path):
     assert np.array_equal(
         np.asarray(lg_ops.lut_network_fused(art.tables, codes)),
         _oracle(packed, codes))
+
+
+def test_segmented_forced_multi_segment_conformance():
+    """The tentpole contract: a net whose slabs exceed the (shrunken)
+    budget executes as 2-4 fused segments, bit-exact against the jnp
+    oracle AND the per-layer path, across uint8/int4 slabs and sharded
+    {1, 2, 4} devices."""
+    kw = dict(in_features=16, widths=(40, 32, 24, 16, 5), bits=2,
+              fan_in=3, degree=1, adder_width=2)
+    spec, packed, legacy = _build(tuple(sorted(kw.items())))
+    int4 = LS.pack_tables_int4(packed)
+    codes = _codes(spec, 101)
+    want = _oracle(legacy, codes)
+    assert np.array_equal(
+        np.asarray(lg_ops.lut_network(packed, codes)), want)
+    for nm, tbls in (("uint8", packed), ("int4", int4)):
+        plan = _forced_seg_plan(tbls, 64, spec.in_features)
+        assert plan.mode == "segmented", (nm, plan)
+        assert 2 <= plan.n_segments <= 4, (nm, plan)
+        got = np.asarray(lg_ops.lut_network_segmented(
+            tbls, codes, plan=plan))
+        assert np.array_equal(got, want), nm
+        for nd in (1, 2, 4):
+            if jax.device_count() < nd:
+                continue
+            out = np.asarray(lg_ops.lut_network_fused_sharded(
+                tbls, codes, serving_mesh(nd), plan=plan))
+            assert np.array_equal(out, want), (nm, nd)
+
+
+def test_segmented_one_segment_is_exact_fused_path():
+    """Degradation contract: a net that fits the budget plans to
+    exactly ONE segment, and executing that plan is bit-identical to
+    the classic fully fused call."""
+    kw = dict(in_features=16, widths=(24, 12, 5), bits=2, fan_in=3,
+              degree=1, adder_width=2)
+    spec, packed, _ = _build(tuple(sorted(kw.items())))
+    plan = lg_ops.plan_segments(packed, block_b=64,
+                                n_in0=spec.in_features)
+    assert plan.mode == "fused" and plan.n_segments == 1, plan
+    codes = _codes(spec, 77)
+    assert np.array_equal(
+        np.asarray(lg_ops.lut_network_segmented(packed, codes, plan=plan)),
+        np.asarray(lg_ops.lut_network_fused(packed, codes, block_b=64)))
+
+
+def _plan_property(tables, n_in, block_b, budget):
+    """The plan_segments safety property: every emitted segment passes
+    the estimator it was planned under (estimate == independent actual
+    == the plan's recorded ledger, all <= budget), the bounds partition
+    the layer list, and per-layer mode is only ever chosen when some
+    single layer genuinely cannot fit."""
+    plan = lg_ops.plan_segments(tables, block_b=block_b, n_in0=n_in,
+                                budget=budget, prefer_int4=False)
+    widths = [t.conn.shape[0] for t in tables]
+    if plan.mode == "per_layer":
+        needs = [lg_ops.fused_vmem_bytes(
+            tables[i:i + 1], block_b, n_in if i == 0 else widths[i - 1])
+            for i in range(len(tables))]
+        assert max(needs) > budget, (needs, budget)
+        return plan
+    assert plan.bounds[0][0] == 0 and plan.bounds[-1][1] == len(tables)
+    for (a, b), (c, d) in zip(plan.bounds, plan.bounds[1:]):
+        assert b == c and a < b
+    assert plan.bounds[-1][0] < plan.bounds[-1][1]
+    for (s, e), bb, v in zip(plan.bounds, plan.block_b, plan.vmem_bytes):
+        seg_in = n_in if s == 0 else widths[s - 1]
+        est = lg_ops.fused_vmem_bytes(tables[s:e], bb, seg_in,
+                                      plan.pipeline)
+        act = lg_ops.fused_vmem_actual(tables[s:e], bb, seg_in,
+                                       plan.pipeline)
+        assert est == act == v, (s, e, est, act, v)
+        assert v <= budget, (s, e, v, budget)
+    assert plan.cut_widths == tuple(
+        widths[e - 1] for _, e in plan.bounds[:-1])
+    return plan
+
+
+def test_plan_segments_property_seeded():
+    """Seeded stand-in for the hypothesis property fuzz (always runs):
+    random nets x budget ladders through ``_plan_property``, plus the
+    degradation endpoints (full budget -> exactly 1 fused segment)."""
+    rng = np.random.default_rng(3)
+    for _ in range(5):
+        kw, _, block_b = _random_draw(rng)
+        spec, packed, _ = _build(tuple(sorted(kw.items())))
+        for tbls in (packed, LS.pack_tables_int4(packed)):
+            full = lg_ops.fused_vmem_bytes(tbls, block_b,
+                                           spec.in_features)
+            for budget in (full, full // 2, full // 4, 1):
+                _plan_property(tbls, spec.in_features, block_b,
+                               max(budget, 1))
+        plan = lg_ops.plan_segments(packed, block_b=block_b,
+                                    n_in0=spec.in_features,
+                                    budget=lg_ops.fused_vmem_bytes(
+                                        packed, block_b,
+                                        spec.in_features))
+        assert plan.mode == "fused" and plan.n_segments == 1
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=12, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow,
+                                     HealthCheck.data_too_large])
+    @given(_net_draws(), st.integers(1, 9))
+    def test_plan_segments_property_fuzz(draw, denom):
+        kw, _, block_b = draw
+        spec, packed, _ = _build(tuple(sorted(kw.items())))
+        full = lg_ops.fused_vmem_bytes(packed, block_b,
+                                       spec.in_features)
+        _plan_property(packed, spec.in_features, block_b,
+                       max(1, full // denom))
 
 
 def test_tune_block_b_returns_valid_candidate():
