@@ -583,6 +583,81 @@ def _bench_fleet(fast: bool):
     return out
 
 
+def _bench_connectivity(fast: bool) -> dict:
+    """Connectivity-search ledger (schema v7): Alg.-2 population search
+    wall-clock at {1, 2, 4} virtual devices (the seed axis shards over
+    ``serving_mesh`` — virtual host devices share the same cores, so
+    the series tracks SHARDING overhead on this box, not parallel
+    speedup), the sharded-run bit-identity contract, and the
+    headline searched-vs-random retrain accuracy delta per config."""
+    from repro.configs import paper_models as PM
+    from repro.data.loader import batch_iterator, train_test_split
+    from repro.data.synthetic import make_dataset
+
+    n_steps = 60 if fast else 150
+    n_seeds = 4
+    retrain_steps = 60 if fast else 150
+    retrain_seeds = (10, 11) if fast else (10, 11, 12)
+    data = train_test_split(make_dataset("jsc", n_samples=3000, seed=0))
+    specs = [("tiny-jsc-f2", PM.tiny("jsc", degree=1, fan_in=2))]
+    if not fast:
+        specs.append(("jsc-m-lite-f4", PM.jsc_m_lite(degree=1)))
+
+    def retrain(spec, conn, seed):
+        init_state, step = LD.make_train_step(spec, lr=5e-3)
+        state = init_state(jax.random.key(seed))
+        if conn is not None:
+            state["model"]["conn"] = conn
+        jstep = jax.jit(step)
+        it = batch_iterator(data["train"], 256, seed=seed)
+        for _ in range(retrain_steps):
+            state, _ = jstep(state, next(it))
+        ev = jax.jit(LD.make_eval_step(spec))
+        acc, _ = ev(state["model"], data["test"])
+        return float(acc)
+
+    devices_series = [1, 2, 4]
+    out = {"n_steps": n_steps, "n_seeds": n_seeds,
+           "retrain_steps": retrain_steps,
+           "retrain_seeds": len(retrain_seeds),
+           "devices_series": devices_series, "configs": []}
+    for name, spec in specs:
+        entry = {"name": name, "fan_in": int(spec.fan_in)}
+        by_dev = {}
+        for nd in devices_series:
+            mesh = serving_mesh(nd) if nd > 1 else None
+            it = batch_iterator(data["train"], 256, seed=3)
+            t0 = time.perf_counter()
+            masks, scores, _, _ = LD.search_connectivity_population(
+                jax.random.key(3), spec, it, n_steps=n_steps,
+                n_seeds=n_seeds, mesh=mesh, phase_frac=0.6, eps2=2e-3)
+            jax.block_until_ready(scores)
+            entry[f"search_wall_s_{nd}d"] = round(
+                time.perf_counter() - t0, 3)
+            by_dev[nd] = (masks, scores)
+        for nd in (2, 4):
+            entry[f"speedup_{nd}d_vs_1d"] = round(
+                entry["search_wall_s_1d"] / entry[f"search_wall_s_{nd}d"],
+                3)
+        m1, s1 = by_dev[1]
+        entry["bit_identical_sharded"] = all(
+            all(bool(jnp.array_equal(a, b))
+                for a, b in zip(m1, by_dev[nd][0]))
+            and bool(jnp.array_equal(s1, by_dev[nd][1]))
+            for nd in (2, 4))
+        best_masks, best = LD.select_best_masks(m1, s1)
+        entry["selected_seed"] = best
+        conn = LD.masks_to_conn(best_masks, spec)
+        rand = [retrain(spec, None, s) for s in retrain_seeds]
+        opt = [retrain(spec, conn, s) for s in retrain_seeds]
+        entry["acc_random_mean"] = round(float(np.mean(rand)), 4)
+        entry["acc_searched_mean"] = round(float(np.mean(opt)), 4)
+        entry["acc_delta_searched_vs_random"] = round(
+            float(np.mean(opt) - np.mean(rand)), 4)
+        out["configs"].append(entry)
+    return out
+
+
 def run(fast: bool = False, write_json: bool = False):
     batch = 1024 if fast else 4096
     iters = 3 if fast else 7
@@ -591,6 +666,7 @@ def run(fast: bool = False, write_json: bool = False):
     serving = _bench_serving(fast)
     artifact = _bench_artifact(fast)
     fleet = _bench_fleet(fast)
+    connectivity = _bench_connectivity(fast)
 
     cols = ["config", "B", "seed(i32)ms", "per-layer(u8)ms",
             "fused(u8)ms", "fused(i4)ms", "pipelined-ms",
@@ -652,10 +728,19 @@ def run(fast: bool = False, write_json: bool = False):
           fleet["swap_commit_window_ms"], fleet["swap_blackout_max_us"],
           fleet["swap_dropped"], fleet["crash_dropped"],
           fleet["crash_retried"]]])
+    print_table(
+        "connectivity search: population sharding + searched-vs-random",
+        ["config", "fan_in", "1d-s", "2d-s", "4d-s", "bit-ident",
+         "acc-rand", "acc-searched", "delta"],
+        [[c["name"], c["fan_in"], c["search_wall_s_1d"],
+          c["search_wall_s_2d"], c["search_wall_s_4d"],
+          c["bit_identical_sharded"], c["acc_random_mean"],
+          c["acc_searched_mean"], c["acc_delta_searched_vs_random"]]
+         for c in connectivity["configs"]])
 
     payload = {
         "bench": "lut_infer",
-        "schema_version": 6,
+        "schema_version": 7,
         "backend": jax.default_backend(),
         "interpret": jax.default_backend() != "tpu",
         "fast": fast,
@@ -664,6 +749,7 @@ def run(fast: bool = False, write_json: bool = False):
         "serving": serving,
         "artifact": artifact,
         "fleet": fleet,
+        "connectivity": connectivity,
     }
     if write_json:
         JSON_PATH.write_text(json.dumps(payload, indent=2) + "\n")

@@ -124,6 +124,16 @@ class Artifact:
         network is identical with or without a plan."""
         return self.manifest.get("execution_plan")
 
+    @property
+    def search(self) -> Optional[Dict[str, Any]]:
+        """Connectivity-search provenance
+        (``core.lutdnn.search_provenance`` dict: algorithm, schedule
+        knobs, seeds, per-layer fan-in ledger), when the writer
+        recorded one.  Like ``execution_plan`` it lives OUTSIDE the
+        hashed ``content`` block — the same tables hash to the same
+        artifact id whether or not the search recipe ships along."""
+        return self.manifest.get("search")
+
 
 # int4 nibble pack/unpack and the code-width metadata that decides
 # eligibility are shared with the kernel side: core/lut_synth owns them
@@ -155,7 +165,8 @@ def _infer_n_in(tables: List[LayerTables]) -> int:
 def save_artifact(out_dir: str, tables: List[LayerTables], *,
                   name: str = "lut", spec: Optional[ModelSpec] = None,
                   provenance: Optional[Dict[str, Any]] = None,
-                  int4: bool = True, plan: Any = None) -> str:
+                  int4: bool = True, plan: Any = None,
+                  search: Optional[Dict[str, Any]] = None) -> str:
     """Serialise a synthesised network under ``out_dir``; returns the
     artifact directory (``<out_dir>/<name>-<hash12>``).  ``spec`` adds
     the training ModelSpec + a core/cost_model summary to the manifest;
@@ -165,7 +176,10 @@ def save_artifact(out_dir: str, tables: List[LayerTables], *,
     execution plan (an ``ops.SegmentPlan`` or its ``summary()`` dict)
     in the manifest — outside the hashed content, so the same tables
     hash to the same artifact id with or without one — letting cold
-    loads skip re-planning and the ``tune_block_b`` sweep."""
+    loads skip re-planning and the ``tune_block_b`` sweep.  ``search``
+    persists connectivity-search provenance the same way (a
+    ``core.lutdnn.search_provenance`` dict: algorithm, schedule knobs,
+    seeds, fan-in ledger), also outside the hashed content."""
     layers_meta: List[Dict[str, Any]] = []
     slabs_meta: List[Dict[str, Any]] = []
     payloads: List[np.ndarray] = []
@@ -269,6 +283,8 @@ def save_artifact(out_dir: str, tables: List[LayerTables], *,
         manifest["execution_plan"] = (plan.summary()
                                       if hasattr(plan, "summary")
                                       else dict(plan))
+    if search is not None:
+        manifest["search"] = dict(search)
     manifest.update(content)
 
     final = os.path.join(out_dir, f"{name}-{artifact_id[:12]}")

@@ -143,14 +143,46 @@ def init_search_model(key: jax.Array, spec: ModelSpec,
     ]
 
 
+def _standardize(z: jnp.ndarray) -> jnp.ndarray:
+    """Inline per-neuron batch standardisation (BN without running
+    stats) — keeps pre-activations on the quantizer's grid range."""
+    mean = jnp.mean(z, axis=tuple(range(z.ndim - 1)), keepdims=True)
+    var = jnp.var(z, axis=tuple(range(z.ndim - 1)), keepdims=True)
+    return (z - mean) * jax.lax.rsqrt(var + 1e-5)
+
+
 def search_forward(tlayers: Sequence[masking.ThetaLayer],
-                   x: jnp.ndarray) -> jnp.ndarray:
-    h = x
+                   x: jnp.ndarray, spec: Optional[ModelSpec] = None
+                   ) -> jnp.ndarray:
+    """Forward through the theta/sign MLP.
+
+    With ``spec`` the proxy mirrors the downstream QAT model's
+    information bottlenecks: input fake-quantized onto the SAME grid,
+    batch-standardised pre-activations (the BN stand-in), and
+    (e.g. 2-bit) STE activation quantization between layers.  Searching
+    on a raw float relu MLP instead ranks connections by a float
+    informativeness that need not survive quantization — measured on
+    tiny-jsc at fan_in=2, float-searched masks retrained consistently
+    BELOW random masks: the float proxy concentrates on few strong
+    inputs (reuse 9/coverage 0.44) while at 4-level activations
+    per-neuron information is tiny and input diversity is everything.
+    Without ``spec`` the legacy float forward is used."""
     n = len(tlayers)
+    if spec is None:
+        h = x
+        for i, tl in enumerate(tlayers):
+            h = h @ tl.effective_weight() + tl.bias
+            if i < n - 1:
+                h = jax.nn.relu(h)
+        return h
+    lspecs = spec.layer_specs()
+    h = lspecs[0].in_quant.quantize(x)
     for i, tl in enumerate(tlayers):
-        h = h @ tl.effective_weight() + tl.bias
+        z = _standardize(h @ tl.effective_weight()) + tl.bias
         if i < n - 1:
-            h = jax.nn.relu(h)
+            h = lspecs[i].out_quant.quantize(jax.nn.relu(z))
+        else:
+            h = z
     return h
 
 
@@ -178,9 +210,32 @@ def make_search_step(spec: ModelSpec, cfgs: Sequence[SparsityConfig],
     prune/truncate steps depend on — measured consequence: post-
     truncation accuracy collapses (0.21 vs 0.85+ with SGD) and the
     learned mask stops localizing (EXPERIMENTS.md section 1, Fig. 8).
+
+    Gradient-scored regrowth: the loss is differentiated against a
+    zero "probe" added to each effective weight, whose gradient is the
+    DENSE dL/dW (the indicator-gated theta gradient is zero exactly on
+    the inactive connections regrowth must rank) — one extra cotangent
+    per layer, no second forward pass.
+
+    Two optimizer/controller interactions are pinned here because each
+    silently corrupts the theta ranking the controller depends on:
+
+    * signs are FROZEN (Alg. 1).  effective_weight is differentiable
+      w.r.t. ``sign``, so a naive whole-pytree SGD step trains the
+      signs into arbitrary real values — the weight magnitude then
+      splits between theta and sign and theta stops being the
+      importance signal.  Sign gradients are zeroed before the update.
+    * momentum is CLEARED on connections the controller deactivated.
+      A pruned theta sits at 0 with a stale momentum buffer; the next
+      SGD step adds ``-lr * mu`` to it, which can silently reactivate
+      the connection outside the controller, bypassing scored
+      regrowth and inflating the active count.
     """
-    from repro.optim.adamw import sgd
+    from repro.optim.adamw import OptState, sgd
     opt_init, opt_update = sgd(lr, momentum=0.9)
+    lspecs = spec.layer_specs()
+    want_grad = (mode == "sparselut"
+                 and any(c.grow_mode == "grad" for c in cfgs))
 
     def init_state(key):
         k_m, k_c = jax.random.split(key)
@@ -192,18 +247,38 @@ def make_search_step(spec: ModelSpec, cfgs: Sequence[SparsityConfig],
     def step(state, batch):
         x, y = batch["x"], batch["y"]
 
-        def loss_fn(tlayers):
-            logits = search_forward(tlayers, x)
-            return cross_entropy(logits, y), accuracy(logits, y)
+        def loss_fn(tlayers, probes):
+            # quantized proxy matching search_forward(spec=...): the
+            # search trains under the SAME information bottlenecks the
+            # downstream QAT model has (see search_forward docstring)
+            h = lspecs[0].in_quant.quantize(x)
+            n = len(tlayers)
+            for i, (tl, p) in enumerate(zip(tlayers, probes)):
+                z = _standardize(h @ (tl.effective_weight() + p)) + tl.bias
+                if i < n - 1:
+                    h = lspecs[i].out_quant.quantize(jax.nn.relu(z))
+                else:
+                    h = z
+            return cross_entropy(h, y), accuracy(h, y)
 
-        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-            state["tlayers"])
+        probes = [jnp.zeros_like(tl.theta) for tl in state["tlayers"]]
+        argnums = (0, 1) if want_grad else 0
+        (loss, acc), grads = jax.value_and_grad(
+            loss_fn, argnums=argnums, has_aux=True)(
+            state["tlayers"], probes)
+        if want_grad:
+            grads, dense_grads = grads
+        else:
+            dense_grads = None
+        grads = [masking.ThetaLayer(theta=g.theta,
+                                    sign=jnp.zeros_like(g.sign),
+                                    bias=g.bias) for g in grads]
         updates, new_opt = opt_update(grads, state["opt"], state["tlayers"])
         tlayers = apply_updates(state["tlayers"], updates)
         key, sub = jax.random.split(state["key"])
         if mode == "sparselut":
             tlayers = sparse_train.sparse_control_tree(
-                tlayers, sub, state["step"], cfgs, lr)
+                tlayers, sub, state["step"], cfgs, lr, grads=dense_grads)
         else:
             keys = jax.random.split(sub, len(tlayers))
             tlayers = [
@@ -212,6 +287,13 @@ def make_search_step(spec: ModelSpec, cfgs: Sequence[SparsityConfig],
                     sign=t.sign, bias=t.bias)
                 for t, k, c in zip(tlayers, keys, cfgs)
             ]
+        new_opt = OptState(
+            step=new_opt.step,
+            mu=[masking.ThetaLayer(
+                theta=jnp.where(tl.theta > 0, m.theta, 0.0),
+                sign=m.sign, bias=m.bias)
+                for tl, m in zip(tlayers, new_opt.mu)],
+            nu=None)
         new_state = {"tlayers": tlayers, "opt": new_opt, "key": key,
                      "step": state["step"] + 1}
         return new_state, {"loss": loss, "acc": acc}
@@ -228,23 +310,151 @@ def masks_to_conn(masks: Sequence[jnp.ndarray], spec: ModelSpec) -> list:
     return conn
 
 
+def history_cadence(n_steps: int) -> int:
+    """Integer recording cadence for search histories: ~10 snapshots,
+    never 0, never a float (``n_steps / 10`` under true division made
+    the old ``i % cadence`` a float modulo — a rounding hazard and a
+    schema surprise for consumers expecting ~10 entries)."""
+    return max(n_steps // 10, 1)
+
+
 def search_connectivity(key: jax.Array, spec: ModelSpec, batches,
                         n_steps: int, phase_frac: float = 0.8,
                         lr: float = 0.15, mode: str = "sparselut",
                         **sparse_kw):
-    """End-to-end step-1 of the toolflow: returns (masks, history)."""
+    """End-to-end step-1 of the toolflow: returns (masks, history,
+    state).  History entries are recorded on the integer
+    ``history_cadence`` and ALWAYS include the final step (the metrics
+    the extracted mask actually corresponds to)."""
     cfgs = search_sparsity_configs(
         spec, phase_boundary=int(n_steps * phase_frac), **sparse_kw)
     init_state, step = make_search_step(spec, cfgs, lr, mode=mode)
     state = init_state(key)
     jstep = jax.jit(step)
     hist = []
+    cadence = history_cadence(n_steps)
     for i in range(n_steps):
         state, metrics = jstep(state, next(batches))
-        if i % max(n_steps // 10, 1) == 0:
-            hist.append({k: float(v) for k, v in metrics.items()})
+        if i % cadence == 0 or i == n_steps - 1:
+            hist.append(dict({k: float(v) for k, v in metrics.items()},
+                             step=i))
     masks = sparse_train.extract_masks(state["tlayers"], cfgs)
     return masks, hist, state
+
+
+def search_provenance(spec: ModelSpec, cfgs: Sequence[SparsityConfig],
+                      state: dict, *, n_steps: int, lr: float,
+                      mode: str = "sparselut", seeds=None,
+                      history=None) -> dict:
+    """Manifest-ready provenance of a connectivity search — the
+    schedule knobs, the seeds, and the per-layer fan-in ledger the
+    search converged on — for ``artifact.save_artifact(search=...)``:
+    a searched-connectivity network ships to the fleet carrying the
+    exact recipe that produced its mask, with zero serving changes."""
+    c0 = cfgs[0]
+    out = {
+        "algorithm": "sparselut-alg2" if mode == "sparselut" else "deepr",
+        "n_steps": int(n_steps),
+        "lr": float(lr),
+        "schedule": {
+            "phase_boundary": int(c0.phase_boundary),
+            "ramp_power": float(c0.ramp_power),
+            "cooldown_frac": float(c0.cooldown_frac),
+            "eps1": float(c0.eps1),
+            "eps2": float(c0.eps2),
+            "noise_std": float(c0.noise_std),
+            "l1": float(c0.l1),
+            "grow_mode": str(c0.grow_mode),
+        },
+        "fan_in_ledger": sparse_train.fan_in_ledger(state["tlayers"], cfgs),
+    }
+    if seeds is not None:
+        out["seeds"] = [int(s) for s in (
+            seeds if hasattr(seeds, "__iter__") else [seeds])]
+    if history:
+        out["final_metrics"] = {k: v for k, v in history[-1].items()}
+    return out
+
+
+def search_connectivity_population(key: jax.Array, spec: ModelSpec,
+                                   batches, n_steps: int, n_seeds: int,
+                                   mesh=None, phase_frac: float = 0.8,
+                                   lr: float = 0.15,
+                                   mode: str = "sparselut",
+                                   eval_batch=None, **sparse_kw):
+    """Multi-seed Alg.-2 search in ONE vmapped program, optionally
+    sharded over ``mesh``'s data axis (``sharding.serving_mesh``).
+
+    The seed axis is embarrassingly parallel — members never exchange
+    data — so sharding it over devices is a pure wall-clock win and the
+    sharded run is BIT-IDENTICAL to the single-device run (pinned by
+    tests/test_system.py).  Every member sees the same batch stream
+    (the population-training convention); per-seed variation comes from
+    the init/controller keys.
+
+    Returns ``(masks, scores, hist, states)``:
+      * ``masks``  — per-layer arrays of shape (n_seeds, n_in, n_out);
+      * ``scores`` — per-seed selection score (accuracy of the
+        HARD-MASKED search network on ``eval_batch``, falling back to
+        the last training batch) — rank seeds by what the extracted
+        mask can actually do, not by the pre-truncation loss;
+      * ``hist``   — population mean/min/max metrics on the integer
+        ``history_cadence`` (final step always included);
+      * ``states`` — the stacked end-of-search states.
+    """
+    cfgs = search_sparsity_configs(
+        spec, phase_boundary=int(n_steps * phase_frac), **sparse_kw)
+    init_state, step = make_search_step(spec, cfgs, lr, mode=mode)
+
+    states = jax.vmap(init_state)(jax.random.split(key, n_seeds))
+    if mesh is not None:
+        from repro.parallel import sharding as SH
+        shardings = SH.make_shardings(
+            states, mesh, SH.lutdnn_population_rules(mesh))
+        states = jax.device_put(states, shardings)
+    pop_step = jax.jit(jax.vmap(step, in_axes=(0, None)))
+
+    hist = []
+    cadence = history_cadence(n_steps)
+    last_batch = None
+    for i in range(n_steps):
+        last_batch = next(batches)
+        states, metrics = pop_step(states, last_batch)
+        if i % cadence == 0 or i == n_steps - 1:
+            entry = {"step": i}
+            for k, v in metrics.items():
+                entry[f"{k}_mean"] = float(jnp.mean(v))
+                entry[f"{k}_min"] = float(jnp.min(v))
+                entry[f"{k}_max"] = float(jnp.max(v))
+            hist.append(entry)
+
+    def member_masks(tlayers):
+        return sparse_train.extract_masks(tlayers, cfgs)
+
+    masks = jax.vmap(member_masks)(states["tlayers"])
+
+    def member_score(tlayers, masks_m, batch):
+        # accuracy of the truncated (mask-applied) search network: the
+        # quantity the extracted mask is selected to maximise
+        masked = [
+            masking.ThetaLayer(theta=tl.theta * m, sign=tl.sign,
+                               bias=tl.bias)
+            for tl, m in zip(tlayers, masks_m)
+        ]
+        logits = search_forward(masked, batch["x"], spec)
+        return accuracy(logits, batch["y"])
+
+    score_batch = eval_batch if eval_batch is not None else last_batch
+    scores = jax.jit(jax.vmap(member_score, in_axes=(0, 0, None)))(
+        states["tlayers"], masks, score_batch)
+    return masks, scores, hist, states
+
+
+def select_best_masks(masks, scores) -> list:
+    """Pick the best population member: per-layer masks of the seed
+    with the highest selection score (ties -> lowest seed index)."""
+    best = int(jnp.argmax(jnp.asarray(scores)))
+    return [m[best] for m in masks], best
 
 
 # --------------------------------------------------------------------------

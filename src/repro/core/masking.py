@@ -98,10 +98,9 @@ def mask_to_indices(mask: jnp.ndarray, fan_in: int) -> jnp.ndarray:
     Used by the gather-based training layers and the LUT synthesiser.
     """
     n_in, n_out = mask.shape
-    # top-fan_in by mask value, tie-broken by input index for determinism
-    tie = -jnp.arange(n_in, dtype=jnp.float32)[:, None] / (2.0 * n_in)
-    score = mask + tie
-    order = jnp.argsort(-score, axis=0)  # (n_in, n_out)
+    # top-fan_in by mask value; the stable sort breaks ties toward the
+    # lower input index deterministically on every backend
+    order = jnp.argsort(-mask, axis=0, stable=True)  # (n_in, n_out)
     idx = order[:fan_in, :].T  # (n_out, fan_in)
     # replace indices that point at inactive rows with the first (active) one
     picked_active = jnp.take_along_axis(mask.T, idx, axis=1) > 0
@@ -112,10 +111,15 @@ def mask_to_indices(mask: jnp.ndarray, fan_in: int) -> jnp.ndarray:
 def final_mask(theta: jnp.ndarray, target_fan_in: int) -> jnp.ndarray:
     """Alg. 2 line 21 with a hard guarantee: the returned feature mask M
     has EXACTLY min(F_o, n_in) actives per output neuron — the top-F_o
-    thetas (ties broken deterministically)."""
+    thetas, ties broken toward the LOWER input index.
+
+    The tie-break is rank-space (stable argsort), not value-space: the
+    previous ``theta + tie * 1e-9`` additive nudge underflows in
+    float32 against O(1) thetas (1.0 + 5e-10 == 1.0), which made the
+    selection among equal thetas depend on the backend's sort order —
+    pinned deterministic by tests/test_masking.py."""
     n_in, _ = theta.shape
     f = min(target_fan_in, n_in)
-    tie = -jnp.arange(n_in, dtype=jnp.float32)[:, None] / (2.0 * n_in)
-    order = jnp.argsort(-(theta + tie * 1e-9), axis=0)
+    order = jnp.argsort(-theta, axis=0, stable=True)
     ranks = jnp.argsort(order, axis=0)
     return (ranks < f).astype(jnp.float32)

@@ -8,19 +8,72 @@ connections); this module applies, per training step:
   * L1 shrinkage (eta * alpha) and random-walk noise (eta * v,
     v ~ N(0, G^2)) to active connections                 [Alg. 2 line 6]
   * implicit deactivation of sign-flipped thetas          [line 7]
-  * regrowth of |R| random inactive connections at eps1   [lines 9-11]
-  * progressive phase (t < T): -eps2 penalty on the |R|
-    lowest-ranked active connections                      [lines 13-16]
-  * fine-tuning phase (t >= T): hard deactivation of the
-    |R| lowest-ranked active connections                  [lines 17-20]
+  * regrowth back to the target fan-in, scored by the dense
+    gradient signal (or theta recency) where Alg. 2 leaves
+    the choice free, random otherwise                    [lines 9-11]
+  * progressive phase (t < T): -eps2 penalty on the active
+    connections in excess of the FINAL target            [lines 13-16]
+  * a RAMPED hard fan-in schedule f(t): the per-step target decays
+    from dense (n_in) to F_o along a cubic ramp that lands at F_o a
+    ``cooldown_frac`` fraction of the progressive phase BEFORE the
+    phase boundary, and every control step hard-truncates to f(t) —
+    so the fine-tune boundary (t >= T, lines 17-20) is a no-op
+    instead of a cliff, and the per-layer fan-in target is honored
+    exactly from the end of the ramp onward, not just at extraction.
 
 Everything is argsort-based per output-neuron column, so a whole layer
 is one fused XLA program; no Python loops over connections.
+
+Schedule knobs and the fan_in=2 anomaly post-mortem
+---------------------------------------------------
+The original implementation applied the -eps2 penalty to every active
+connection above the final target throughout the progressive phase and
+deferred ALL hard pruning to the phase boundary T.  Measured on
+tiny-jsc at fan_in=2 (the pinned ``test_connectivity_search_fan_in2_
+anomaly``): eps2-scale pressure (~2e-3/step) is negligible against the
+O(1) thetas SGD maintains, so mean fan-in sat at ~12-25 (target 2!)
+for the whole progressive phase and the boundary step truncated
+11.75 -> 2.00 connections per neuron IN ONE STEP — search accuracy
+cratered 0.86 -> 0.18 at t = T and never recovered.  That one-step
+magnitude cut is maximally greedy exactly where the paper's non-greedy
+claim matters most, and it HURT: searched masks retrained to ~0.46 vs
+~0.55 for random masks.  The ramped schedule removes the cliff: each
+step sheds only the few connections the ramp retires, the survivors
+keep training at every intermediate fan-in, and pruned connections can
+return through scored regrowth while the ramp is still above F_o.
+
+Knobs (``SparsityConfig``):
+
+  * ``phase_boundary`` (T) — end of the progressive phase; together
+    with ``search_connectivity``'s ``phase_frac`` it fixes T =
+    n_steps * phase_frac.
+  * ``ramp_power`` — exponent of the decay ``f(t) = F_o +
+    (n_in - F_o) * (1 - t/ramp_end)^ramp_power``; 3.0 (default) is the
+    cubic sparsification schedule (fast early shedding while fan-in is
+    cheap, gentle near F_o where each connection matters), 1.0 is
+    linear.
+  * ``cooldown_frac`` — fraction of the progressive phase held AT F_o
+    before the boundary (``ramp_end = T * (1 - cooldown_frac)``); the
+    network fine-tunes at its final fan-in while regrowth/sign-flip
+    turnover can still swap individual connections.
+  * ``eps2`` — the progressive-phase soft penalty on the bottom-ranked
+    excess actives (unchanged from the paper); with the ramp it acts as
+    advance pressure that lets weak connections die and be replaced
+    BEFORE the schedule retires their slot.
+  * ``grow_mode`` — how regrown connections are scored: ``"grad"``
+    (default) ranks inactive connections by the dense-gradient
+    magnitude ``|dL/dW|`` (RigL-style), and the regrown connection's
+    sign is RE-INITIALIZED to ``-sign(dL/dW)`` (the direction the loss
+    wants — see ``sparse_control_layer``), so a connection is never
+    stuck with an unlucky init-time sign draw; falls back to
+    ``"theta"`` (least-negative theta: the most recently / most
+    narrowly deactivated) when no gradient is supplied, and
+    ``"random"`` recovers the uniform choice.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +83,8 @@ from repro.core.masking import ThetaLayer, final_mask
 
 @dataclasses.dataclass(frozen=True)
 class SparsityConfig:
-    """Hyper-parameters of Alg. 2 (paper Section IV-C defaults)."""
+    """Hyper-parameters of Alg. 2 (paper Section IV-C defaults) plus
+    the non-greedy ramp schedule (see module docstring)."""
 
     target_fan_in: int          # F_o
     phase_boundary: int         # T, in steps; t < T => progressive phase
@@ -38,6 +92,27 @@ class SparsityConfig:
     eps2: float = 5e-5          # progressive-phase penalty
     noise_std: float = 1e-5     # G, random-walk scale
     l1: float = 1e-5            # alpha, shrinkage
+    ramp_power: float = 3.0     # f(t) decay exponent (1.0 = linear)
+    cooldown_frac: float = 0.25  # tail of the progressive phase at F_o
+    grow_mode: str = "grad"     # "grad" | "theta" | "random"
+    swap_frac: float = 0.3      # initial swap-turnover fraction of f(t)
+    swap_every: int = 5         # swap cadence (regrowth grace period)
+
+
+def scheduled_target(cfg: SparsityConfig, step: jnp.ndarray,
+                     n_in: int) -> jnp.ndarray:
+    """The ramped per-step fan-in target f(t): int32 scalar, safe for a
+    traced ``step``.
+
+    Decays from n_in (dense) to min(F_o, n_in) with exponent
+    ``ramp_power``, reaching the final target at ``ramp_end =
+    phase_boundary * (1 - cooldown_frac)`` and holding it thereafter
+    (cooldown + fine-tune phase)."""
+    f_final = min(cfg.target_fan_in, n_in)
+    ramp_end = max(cfg.phase_boundary * (1.0 - cfg.cooldown_frac), 1.0)
+    p = jnp.clip(jnp.asarray(step, jnp.float32) / ramp_end, 0.0, 1.0)
+    f = f_final + (n_in - f_final) * (1.0 - p) ** cfg.ramp_power
+    return jnp.maximum(jnp.floor(f), f_final).astype(jnp.int32)
 
 
 def _ranks_desc(score: jnp.ndarray) -> jnp.ndarray:
@@ -46,15 +121,63 @@ def _ranks_desc(score: jnp.ndarray) -> jnp.ndarray:
     return jnp.argsort(order, axis=0)
 
 
+def _grow_score(theta: jnp.ndarray, active: jnp.ndarray, key: jax.Array,
+                cfg: SparsityConfig, grad: Optional[jnp.ndarray],
+                sign: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Regrowth preference over INACTIVE connections (higher = regrown
+    first).  Alg. 2 lines 9-11 leave the choice of which inactive
+    connections to revive open; scoring beats uniform-random because a
+    revived connection only helps if gradient pressure can grow it
+    before the next cull."""
+    u = jax.random.uniform(key, theta.shape)
+    mode = cfg.grow_mode
+    if mode == "grad" and (grad is None or sign is None):
+        mode = "theta"                      # documented fallback chain
+    if mode == "grad":
+        # |dL/dW|: a revived connection is useful wherever the dense
+        # loss gradient is large — its sign is re-initialised to
+        # -sign(grad) at regrowth (see sparse_control_layer), so the
+        # magnitude alone ranks usefulness.  u * 1e-20 only splits
+        # exact-zero-gradient ties.
+        score = jnp.abs(grad) + u * 1e-20
+    elif mode == "theta":
+        # least-negative theta = most recently / most narrowly
+        # deactivated; u * 1e-6 splits the hard-pruned exact-0 ties.
+        score = theta + u * 1e-6
+    elif mode == "random":
+        score = u
+    else:
+        raise ValueError(f"unknown grow_mode {cfg.grow_mode!r}")
+    return jnp.where(active, -jnp.inf, score)
+
+
 def sparse_control(theta: jnp.ndarray, key: jax.Array, step: jnp.ndarray,
-                   cfg: SparsityConfig, lr: float) -> jnp.ndarray:
+                   cfg: SparsityConfig, lr: float,
+                   grad: Optional[jnp.ndarray] = None,
+                   sign: Optional[jnp.ndarray] = None,
+                   return_regrown: bool = False):
     """One Alg.-2 control step on a (n_in, n_out) theta matrix.
 
-    ``step`` may be a traced scalar so the two phases live in one jitted
-    program (jnp.where, not Python if).
+    ``step`` may be a traced scalar so all phases live in one jitted
+    program (jnp.where, not Python if).  ``grad`` (the DENSE loss
+    gradient dL/dW, not the indicator-gated theta gradient) and
+    ``sign`` enable gradient-scored regrowth; omitted, regrowth falls
+    back to theta-recency scoring (see ``SparsityConfig.grow_mode``).
+
+    Post-step invariants (pinned by tests/test_sparse_train.py):
+      * fan-in never exceeds the scheduled target f(step);
+      * fan-in == min(F_o, n_in) exactly once the ramp has landed
+        (step >= phase_boundary * (1 - cooldown_frac)), regrowth
+        included;
+      * regrown connections never exceed the available inactive slots.
     """
     n_in, n_out = theta.shape
     k_noise, k_grow = jax.random.split(key)
+    f_final = min(cfg.target_fan_in, n_in)
+    f_sched = scheduled_target(cfg, step, n_in)             # scalar
+    step = jnp.asarray(step)
+    progressive = step < cfg.phase_boundary
+    n_pre = jnp.sum(theta > 0, axis=0)                      # (n_out,)
 
     # --- line 6 (regularizer + random walk) on active connections ------
     active = theta > 0
@@ -63,29 +186,63 @@ def sparse_control(theta: jnp.ndarray, key: jax.Array, step: jnp.ndarray,
 
     # line 7: theta < 0 is now implicitly non-active
     active = theta > 0
-    n_active = jnp.sum(active, axis=0)                     # (n_out,)
-    target = jnp.minimum(cfg.target_fan_in, n_in)
-    r = n_active - target                                   # R per neuron
+    n_active = jnp.sum(active, axis=0)
 
-    # --- lines 9-11: regrow |R| random inactive connections ------------
-    grow_needed = jnp.maximum(-r, 0)                        # (n_out,)
-    grow_score = jnp.where(active, -jnp.inf,
-                           jax.random.uniform(k_grow, theta.shape))
-    grow_rank = _ranks_desc(grow_score)
-    grow_sel = (grow_rank < grow_needed[None, :]) & (~active)
-    theta = jnp.where(grow_sel, cfg.eps1, theta)
+    # --- ramped hard schedule (lines 17-20 generalised): truncate to
+    # f(t) every step — a few connections per step while the ramp
+    # decays, exact F_o from ramp_end onward, no boundary cliff --------
+    prune_rank = _ranks_desc(jnp.where(active, -theta, -jnp.inf))
+    excess_hard = jnp.maximum(n_active - f_sched, 0)
+    hard_sel = (prune_rank < excess_hard[None, :]) & active
+    theta = jnp.where(hard_sel, 0.0, theta)
+    active = active & ~hard_sel
+    n_active = jnp.minimum(n_active, f_sched)
 
-    # --- lines 13-20: shed |R| excess active connections ----------------
-    excess = jnp.maximum(r, 0)
+    # --- ramped swap turnover (the non-greedy exploration): on every
+    # ``swap_every``-th progressive step, sign-flip the weakest
+    # rho(t)-fraction of the CURRENT budget and let scored regrowth
+    # replace them; rho anneals to zero at ramp_end (the cooldown), so
+    # turnover is high while fan-in is cheap and the landed network
+    # fine-tunes undisturbed.  Without this, the ramp's survivors are
+    # the largest trained thetas — gradients essentially never
+    # sign-flip them, exploration stops the moment the ramp lands, and
+    # pruning damage is frozen in (the measured fan_in=2 failure).
+    # The cadence is the regrowth grace period: a fresh eps1 regrow
+    # gets ``swap_every`` SGD steps to grow before it faces the next
+    # theta-ranked cull (regrow-at-eps1 under every-step rank pruning
+    # is a no-op — fresh connections always rank last).
+    ramp_end = max(cfg.phase_boundary * (1.0 - cfg.cooldown_frac), 1.0)
+    rho = cfg.swap_frac * jnp.maximum(
+        0.0, 1.0 - jnp.asarray(step, jnp.float32) / ramp_end)
+    k_swap = jnp.floor(rho * f_sched).astype(jnp.int32)     # scalar
+    swap_now = progressive & (step % max(cfg.swap_every, 1) == 0)
+    prune_rank = _ranks_desc(jnp.where(active, -theta, -jnp.inf))
+    swap_sel = (prune_rank < k_swap) & active & swap_now
+    theta = jnp.where(swap_sel, 0.0, theta)
+    active = active & ~swap_sel
+    n_active = n_active - jnp.sum(swap_sel, axis=0)
+
+    # --- lines 13-16: soft -eps2 pressure toward the FINAL target ------
     # ascending theta among actives: rank 0 = smallest active theta
     prune_rank = _ranks_desc(jnp.where(active, -theta, -jnp.inf))
-    prune_sel = (prune_rank < excess[None, :]) & active
-    progressive = step < cfg.phase_boundary
-    theta = jnp.where(
-        prune_sel,
-        jnp.where(progressive, theta - cfg.eps2, 0.0),
-        theta,
-    )
+    excess_soft = jnp.maximum(n_active - f_final, 0)
+    soft_sel = (prune_rank < excess_soft[None, :]) & active & progressive
+    theta = jnp.where(soft_sel, theta - cfg.eps2, theta)
+    active = theta > 0
+    n_active = jnp.sum(active, axis=0)
+
+    # --- lines 9-11 generalised: scored regrowth back to the budget ----
+    # Target: the scheduled budget for slots lost this step (deaths,
+    # swaps), never densifying a sparser-than-schedule layer (n_pre
+    # clip), never below the final target.
+    grow_target = jnp.clip(n_pre, f_final, f_sched)
+    grow_needed = jnp.maximum(grow_target - n_active, 0)    # (n_out,)
+    grow_rank = _ranks_desc(
+        _grow_score(theta, active, k_grow, cfg, grad, sign))
+    grow_sel = (grow_rank < grow_needed[None, :]) & (~active)
+    theta = jnp.where(grow_sel, cfg.eps1, theta)
+    if return_regrown:
+        return theta, grow_sel
     return theta
 
 
@@ -97,8 +254,8 @@ def deepr_control(theta: jnp.ndarray, key: jax.Array,
     Differences from SparseLUT's Alg. 2: connections die ONLY by sign
     flip (theta <= 0 after the gradient step); each step regrows exactly
     enough random connections to restore the target fan-in — the
-    drop/regrow counts always match (greedy, no progressive phase).
-    """
+    drop/regrow counts always match (greedy, no progressive phase, no
+    ramp)."""
     n_in, n_out = theta.shape
     k_noise, k_grow = jax.random.split(key)
     active = theta > 0
@@ -115,21 +272,35 @@ def deepr_control(theta: jnp.ndarray, key: jax.Array,
 
 
 def sparse_control_layer(layer: ThetaLayer, key: jax.Array, step: jnp.ndarray,
-                         cfg: SparsityConfig, lr: float) -> ThetaLayer:
-    return ThetaLayer(
-        theta=sparse_control(layer.theta, key, step, cfg, lr),
-        sign=layer.sign,
-        bias=layer.bias,
-    )
+                         cfg: SparsityConfig, lr: float,
+                         grad: Optional[jnp.ndarray] = None) -> ThetaLayer:
+    theta, regrown = sparse_control(layer.theta, key, step, cfg, lr,
+                                    grad=grad, sign=layer.sign,
+                                    return_regrown=True)
+    sign = layer.sign
+    if grad is not None:
+        # Sign re-initialisation at regrowth: a revived connection gets
+        # the sign that immediately DECREASES the loss (-sign(dL/dW)) —
+        # the frozen ±1 form of Alg. 1 is preserved between regrow
+        # events, but a neuron is no longer stuck with an unlucky sign
+        # draw on its few surviving low-fan-in connections (measured:
+        # without this, the fan_in=2 search net plateaus far below what
+        # the same mask retrains to).  grad == 0 keeps the old sign.
+        sign = jnp.where(regrown & (grad != 0),
+                         -jnp.sign(grad).astype(sign.dtype), sign)
+    return ThetaLayer(theta=theta, sign=sign, bias=layer.bias)
 
 
 def sparse_control_tree(layers: Sequence[ThetaLayer], key: jax.Array,
                         step: jnp.ndarray, cfgs: Sequence[SparsityConfig],
-                        lr: float) -> list:
+                        lr: float,
+                        grads: Optional[Sequence[jnp.ndarray]] = None
+                        ) -> list:
     keys = jax.random.split(key, len(layers))
+    grads = [None] * len(layers) if grads is None else list(grads)
     return [
-        sparse_control_layer(l, k, step, c, lr)
-        for l, k, c in zip(layers, keys, cfgs)
+        sparse_control_layer(l, k, step, c, lr, grad=g)
+        for l, k, c, g in zip(layers, keys, cfgs, grads)
     ]
 
 
@@ -138,6 +309,24 @@ def extract_masks(layers: Sequence[ThetaLayer],
     """Alg. 2 line 21 — final feature masks M, hard-truncated to exactly
     F_o actives per neuron (ranked by theta)."""
     return [final_mask(l.theta, c.target_fan_in) for l, c in zip(layers, cfgs)]
+
+
+def fan_in_ledger(layers: Sequence[ThetaLayer],
+                  cfgs: Sequence[SparsityConfig]) -> list:
+    """Per-layer fan-in accounting for search provenance: the target
+    and the min/mean/max ACTIVE counts the search converged on.  Ships
+    with the artifact manifest (``save_artifact(search=...)``) so the
+    fleet can audit the connectivity a model was trained under."""
+    out = []
+    for l, c in zip(layers, cfgs):
+        fan = l.fan_in()
+        out.append({
+            "target_fan_in": int(min(c.target_fan_in, l.theta.shape[0])),
+            "fan_in_min": int(jnp.min(fan)),
+            "fan_in_max": int(jnp.max(fan)),
+            "fan_in_mean": round(float(jnp.mean(fan)), 3),
+        })
+    return out
 
 
 def fan_in_violation(layers: Sequence[ThetaLayer],

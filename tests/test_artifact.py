@@ -285,6 +285,41 @@ def test_manifest_carries_cost_model_and_provenance(tmp_path):
     assert man["n_in"] == spec.in_features
 
 
+def test_manifest_carries_search_provenance(tmp_path):
+    """A searched-connectivity artifact ships its recipe: the
+    ``search=`` dict (``lutdnn.search_provenance``) lands in the
+    manifest and on ``Artifact.search`` — OUTSIDE the hashed content,
+    so the same tables hash to the same artifact id with or without
+    it (mirroring the ``plan=`` execution-plan precedent)."""
+    spec, tables = _tables(True)
+    cfgs = LD.search_sparsity_configs(spec, phase_boundary=3)
+    init_state, _ = LD.make_search_step(spec, cfgs, lr=0.15)
+    state = init_state(jax.random.key(0))
+    prov = LD.search_provenance(spec, cfgs, state, n_steps=5, lr=0.15,
+                                seeds=[3])
+    p = save_artifact(str(tmp_path / "s"), tables, spec=spec, search=prov)
+    art = load_artifact(p)
+    assert art.search["algorithm"] == "sparselut-alg2"
+    assert art.search["n_steps"] == 5
+    assert art.search["seeds"] == [3]
+    assert art.search["schedule"]["ramp_power"] == cfgs[0].ramp_power
+    ledger = art.search["fan_in_ledger"]
+    assert len(ledger) == len(spec.widths)
+    for entry, ls in zip(ledger, spec.layer_specs()):
+        assert isinstance(entry["target_fan_in"], int)
+        assert entry["target_fan_in"] <= ls.total_fan_in
+        assert entry["fan_in_min"] <= entry["fan_in_mean"] <= \
+            entry["fan_in_max"]
+    # survives the JSON round-trip on disk, not just in memory
+    man = json.loads(open(os.path.join(p, A.MANIFEST)).read())
+    assert man["search"] == art.search
+    # outside the hashed content: identical id without it, and absent
+    # search reads back as None
+    p2 = save_artifact(str(tmp_path / "ns"), tables, spec=spec)
+    assert load_artifact(p2).artifact_id == art.artifact_id
+    assert load_artifact(p2).search is None
+
+
 def test_find_artifacts_newest_first(tmp_path):
     spec, tables = _tables(True)
     _, tables2 = _tables(False)

@@ -26,6 +26,7 @@ TOP_KEYS = {
     "artifact": dict,          # compile-once / hot-swap ledger (v3)
     "fleet": dict,             # multi-replica serving ledger (v5)
     "segmented": dict,         # over-budget segmented execution (v6)
+    "connectivity": dict,      # population connectivity search (v7)
 }
 
 CONFIG_NUMERIC = [
@@ -72,6 +73,17 @@ SEGMENTED_NUMERIC = [
     "samples_per_sec_segmented", "speedup_segmented_vs_per_layer",
 ]
 
+CONNECTIVITY_NUMERIC = [
+    "n_steps", "n_seeds", "retrain_steps", "retrain_seeds",
+]
+
+CONNECTIVITY_CONFIG_NUMERIC = [
+    "fan_in", "search_wall_s_1d", "search_wall_s_2d", "search_wall_s_4d",
+    "speedup_2d_vs_1d", "speedup_4d_vs_1d", "selected_seed",
+    "acc_random_mean", "acc_searched_mean",
+    "acc_delta_searched_vs_random",
+]
+
 FLEET_NUMERIC = [
     "microbatch", "deadline_ms", "requests",
     "throughput_req_s_r1", "throughput_req_s_r2", "throughput_req_s_r4",
@@ -94,7 +106,7 @@ def test_top_level_schema(payload):
         assert key in payload, f"missing top-level key {key!r}"
         assert isinstance(payload[key], typ), (key, type(payload[key]))
     assert payload["bench"] == "lut_infer"
-    assert payload["schema_version"] >= 6
+    assert payload["schema_version"] >= 7
     assert len(payload["configs"]) >= 1
 
 
@@ -186,6 +198,35 @@ def test_segmented_contracts(payload):
         assert hbm == 2 * 4 * seg["batch"] * w
     assert seg["hbm_bytes_per_pass"] == sum(seg["hbm_bytes_per_cut"])
     assert seg["speedup_segmented_vs_per_layer"] > 1.5
+
+
+def test_connectivity_entry_schema(payload):
+    conn = payload["connectivity"]
+    for key in CONNECTIVITY_NUMERIC:
+        assert key in conn, f"connectivity: missing {key!r}"
+        assert isinstance(conn[key], numbers.Real) and \
+            not isinstance(conn[key], bool), key
+    assert conn["devices_series"] == [1, 2, 4]
+    assert isinstance(conn["configs"], list) and conn["configs"]
+    for cfg in conn["configs"]:
+        assert isinstance(cfg["name"], str)
+        for key in CONNECTIVITY_CONFIG_NUMERIC:
+            assert key in cfg, f"connectivity {cfg['name']}: missing {key!r}"
+            assert isinstance(cfg[key], numbers.Real) and \
+                not isinstance(cfg[key], bool), (cfg["name"], key)
+
+
+def test_connectivity_contracts(payload):
+    """Hardware-independent contracts of the population search: the
+    sharded run is BIT-IDENTICAL to the single-device run (the whole
+    point of sharding an embarrassingly-parallel seed axis), and the
+    selected searched mask retrains no worse than random connectivity
+    (the paper's Table VII claim, with the test-suite tolerance)."""
+    conn = payload["connectivity"]
+    for cfg in conn["configs"]:
+        assert isinstance(cfg["bit_identical_sharded"], bool)
+        assert cfg["bit_identical_sharded"], cfg["name"]
+        assert cfg["acc_delta_searched_vs_random"] >= -0.01, cfg["name"]
 
 
 def test_fleet_entry_schema(payload):

@@ -24,11 +24,17 @@ from repro.core import lutdnn as LD
 from repro.data.loader import batch_iterator, train_test_split
 from repro.data.synthetic import make_dataset
 from repro.kernels.lut_gather import ops as lg_ops
+from repro.parallel import sharding as SH
 
 
 @pytest.fixture(scope="module")
 def jsc():
     return train_test_split(make_dataset("jsc", n_samples=3000, seed=0))
+
+
+@pytest.fixture(scope="module")
+def mnist():
+    return train_test_split(make_dataset("mnist", n_samples=3000, seed=0))
 
 
 def _train(spec, data, steps=150, seed=0, conn=None, lr=5e-3):
@@ -69,8 +75,17 @@ def test_full_toolflow_search_train_synthesise_serve(jsc):
     out_codes = lg_ops.lut_network(tables, codes)
     lut_pred = np.asarray(jnp.argmax(LS.OUTPUT_QUANT.from_code(out_codes), -1))
     logits, _ = LD.forward(model, spec, jnp.asarray(x), train=False)
-    qat_pred = np.asarray(jnp.argmax(logits, -1))
-    assert (lut_pred == qat_pred).mean() > 0.99
+    qat_np = np.asarray(logits)
+    qat_pred = qat_np.argmax(-1)
+    # deployment contract: any disagreement must be a sub-step tie —
+    # the QAT logit at the LUT's pick within one 16-bit OUTPUT_QUANT
+    # grid step of the QAT max (two logits that close quantize to the
+    # SAME code, so the LUT path cannot order them)
+    agree = lut_pred == qat_pred
+    tie = qat_np[np.arange(len(qat_np)), lut_pred] >= \
+        qat_np.max(-1) - (LS.OUTPUT_QUANT.step + 1e-6)
+    assert (agree | tie).all()
+    assert agree.mean() > 0.95
 
 
 @pytest.mark.slow
@@ -79,8 +94,8 @@ def test_paper_claim_optimized_connectivity_beats_random(jsc):
 
     QAT retraining at this scale has high seed variance (single runs
     span ~0.34-0.57), so BOTH arms are averaged over the same retrain
-    seeds; fan_in=3 matches the other tiny-config tests (at fan_in=2
-    the reduced-scale search is not reliably better than random).
+    seeds; fan_in=3 matches the other tiny-config tests (the harder
+    fan_in=2 configuration has its own claim test below).
     """
     spec = PM.tiny("jsc", degree=1, fan_in=3)
     seeds = (10, 11, 12)
@@ -98,18 +113,18 @@ def test_paper_claim_optimized_connectivity_beats_random(jsc):
 
 
 @pytest.mark.slow
-@pytest.mark.xfail(
-    strict=True,
-    reason="ROADMAP anomaly under investigation: at fan_in=2 the "
-           "reduced-scale connectivity search HURTS retraining "
-           "(searched mask ~0.46 vs ~0.55 random on tiny-jsc; at "
-           "fan_in=3 the paper's claim holds).  strict=True pins the "
-           "anomaly: a fix makes this XPASS and fails the suite, "
-           "surfacing the ROADMAP item for re-triage.")
 def test_connectivity_search_fan_in2_anomaly(jsc):
-    """Characterization of the fan_in=2 connectivity-search anomaly —
-    the same protocol as the fan_in=3 claim test above (seed-averaged
-    arms, identical search budget), only the fan-in differs."""
+    """The (former) fan_in=2 anomaly, now a positive claim test — the
+    same protocol as the fan_in=3 claim test above (seed-averaged
+    retrain arms, identical search budget), only the fan-in differs.
+
+    This was a strict-xfail characterization test while the ROADMAP
+    anomaly was open: the greedy phase-boundary truncation plus a
+    float-relu search proxy made fan_in=2 searched masks retrain WORSE
+    than random (~0.46 vs ~0.55 on tiny-jsc).  The non-greedy ramped
+    schedule with scored regrowth and the quantization-matched search
+    proxy flipped it (searched ~0.65 on the same protocol — see the
+    sparse_train / search_forward module docs for the post-mortem)."""
     spec = PM.tiny("jsc", degree=1, fan_in=2)
     seeds = (10, 11, 12)
 
@@ -121,6 +136,90 @@ def test_connectivity_search_fan_in2_anomaly(jsc):
     conn = LD.masks_to_conn(masks, spec)
     opt_accs = [_train(spec, jsc, conn=conn, seed=s)[0] for s in seeds]
 
+    assert np.mean(opt_accs) >= np.mean(rand_accs) - 0.01
+
+
+def test_population_search_sharded_bit_identical(jsc):
+    """Fast lane: the population search's seed axis is embarrassingly
+    parallel, so sharding it over ``serving_mesh(2)`` must be
+    BIT-IDENTICAL to the single-device run — masks AND selection
+    scores.  Also pins the history contract: integer cadence entries
+    plus the final step, population-aggregated."""
+    spec = PM.tiny("jsc", degree=1, fan_in=2)
+    kw = dict(n_steps=24, n_seeds=4, phase_frac=0.6, eps2=2e-3)
+
+    it = batch_iterator(jsc["train"], 128, seed=5)
+    masks_s, scores_s, hist, _ = LD.search_connectivity_population(
+        jax.random.key(5), spec, it, mesh=SH.serving_mesh(2), **kw)
+    it = batch_iterator(jsc["train"], 128, seed=5)
+    masks_1, scores_1, _, _ = LD.search_connectivity_population(
+        jax.random.key(5), spec, it, mesh=None, **kw)
+
+    for a, b in zip(masks_s, masks_1):
+        assert a.shape[0] == 4                      # (n_seeds, n_in, n_out)
+        assert jnp.array_equal(a, b)
+    assert jnp.array_equal(scores_s, scores_1)
+
+    # extracted masks honor fan-in exactly; best-of-population selects
+    # the argmax score (ties -> lowest seed)
+    for m, ls in zip(masks_s, spec.layer_specs()):
+        assert (np.asarray(m.sum(1)) == ls.total_fan_in).all()
+    best_masks, best = LD.select_best_masks(masks_s, scores_s)
+    assert best == int(jnp.argmax(scores_s))
+    assert all(jnp.array_equal(bm, m[best])
+               for bm, m in zip(best_masks, masks_s))
+
+    # history: recorded on the integer cadence + final step
+    cad = LD.history_cadence(kw["n_steps"])
+    steps = [h["step"] for h in hist]
+    assert steps[-1] == kw["n_steps"] - 1
+    assert all(s % cad == 0 for s in steps[:-1])
+
+
+@pytest.mark.slow
+def test_paper_scale_jsc_searched_beats_random_sharded(jsc):
+    """Paper-scale JSC-M-lite (64-32-5, A=2, F=4): the full pipeline —
+    sharded population search, best-of-population selection, QAT
+    retrain — beats seed-averaged random connectivity, and the sharded
+    evaluation is bit-identical to single-device."""
+    spec = PM.jsc_m_lite(degree=1)
+    kw = dict(n_steps=200, n_seeds=4, phase_frac=0.6, eps2=2e-3)
+
+    it = batch_iterator(jsc["train"], 256, seed=3)
+    masks_s, scores_s, _, _ = LD.search_connectivity_population(
+        jax.random.key(3), spec, it, mesh=SH.serving_mesh(2), **kw)
+    it = batch_iterator(jsc["train"], 256, seed=3)
+    masks_1, scores_1, _, _ = LD.search_connectivity_population(
+        jax.random.key(3), spec, it, mesh=None, **kw)
+    assert all(jnp.array_equal(a, b) for a, b in zip(masks_s, masks_1))
+    assert jnp.array_equal(scores_s, scores_1)
+
+    best_masks, _ = LD.select_best_masks(masks_s, scores_s)
+    conn = LD.masks_to_conn(best_masks, spec)
+    seeds = (10, 11, 12)
+    rand_accs = [_train(spec, jsc, seed=s)[0] for s in seeds]
+    opt_accs = [_train(spec, jsc, conn=conn, seed=s)[0] for s in seeds]
+    assert np.mean(opt_accs) >= np.mean(rand_accs) - 0.01
+
+
+@pytest.mark.slow
+def test_paper_scale_mnist_searched_beats_random(mnist):
+    """Paper-scale HDR/MNIST (784 -> 256-100-100-100-100-10, F=6,
+    2-bit): sharded population search + best-of-population selection
+    beats seed-averaged random connectivity.  Bit-identity of the
+    sharded path is pinned by the fast test and the JSC slow test
+    above; re-running this search single-device would double a
+    multi-minute test for no new signal."""
+    spec = PM.hdr(degree=1)
+    it = batch_iterator(mnist["train"], 256, seed=3)
+    masks, scores, _, _ = LD.search_connectivity_population(
+        jax.random.key(3), spec, it, n_steps=100, n_seeds=4,
+        mesh=SH.serving_mesh(2), phase_frac=0.6, eps2=2e-3)
+    best_masks, _ = LD.select_best_masks(masks, scores)
+    conn = LD.masks_to_conn(best_masks, spec)
+    seeds = (10, 11)
+    rand_accs = [_train(spec, mnist, seed=s)[0] for s in seeds]
+    opt_accs = [_train(spec, mnist, conn=conn, seed=s)[0] for s in seeds]
     assert np.mean(opt_accs) >= np.mean(rand_accs) - 0.01
 
 
