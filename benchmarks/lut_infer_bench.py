@@ -41,6 +41,15 @@ drills contractually complete with zero dropped requests
 (tests/test_bench_schema.py pins this, tests/test_fleet.py pins the
 mechanism);
 
+plus a ``scheduler`` section (schema v8): the SLO-tiered scoreboard
+scheduler (launch/scheduler.py) under a mixed interactive/batch
+Poisson stream at 2x one replica's calibrated steal-inclusive
+capacity, through tier-aware fleets of {1, 2, 4} replicas — per-tier
+p50/p99, interactive deadline attainment, typed-shed rate, work-steal
+counters, and the zero-silent-drop contract (every non-served request
+is a typed ``DeadlineUnmeetable``; tests/test_bench_schema.py pins it
+at every replica count);
+
 plus a ``segmented`` section (schema v6): the over-budget regime — a
 deeper/wider net whose table slabs want ~3x the fused VMEM budget, so
 ``ops.plan_segments`` cuts it into the fewest fused segments that fit
@@ -363,7 +372,10 @@ def _bench_serving(fast: bool):
                       n_features=16) as mb:
         handles = replay_open_loop(mb, rows, rate, seed=0)
 
-    p50, p95, p99 = latency_percentiles_ms(handles)
+    # failed handles carry time-to-fault, not service latency — keep
+    # them out of the tail the dashboard tracks (explicit here because
+    # this number is the one cross-PR latency series)
+    p50, p95, p99 = latency_percentiles_ms(handles, include_failed=False)
     kernel_ms = [f.kernel_s * 1e3 for f in mb.flushes]
     straggler_ms = [f.waited_s * 1e3 for f in mb.flushes]
     # SLO: a request waits at most the flush deadline plus (worst case)
@@ -583,6 +595,146 @@ def _bench_fleet(fast: bool):
     return out
 
 
+def _bench_scheduler(fast: bool):
+    """SLO-tiered scoreboard scheduler ledger (schema v8): a mixed
+    interactive/batch Poisson stream at 2x one replica's CALIBRATED
+    steal-inclusive capacity, through tier-aware fleets of {1, 2, 4}
+    replicas — per-tier p50/p99, interactive deadline attainment,
+    typed-shed rate, and the work-steal counters (each replica also
+    registers an idle sibling model, so a hot backlog exercises the
+    StealGroup).  The intended shape of the series: r1 sheds (typed,
+    never silent) while keeping admitted-attainment high, r2/r4 absorb
+    the same stream without shedding.
+
+    The replicas are threads on one CPU, so the replica series tracks
+    tier-routing + admission overhead under overload, not parallel
+    speedup.  The hardware-independent contracts pinned by
+    tests/test_bench_schema.py: zero silent drops at every replica
+    count (every non-served request is a typed ``DeadlineUnmeetable``)
+    and attainment/shed-rate staying inside [0, 1]."""
+    from repro.artifact import save_artifact
+    from repro.launch.fleet import LutFleet
+    from repro.launch.scheduler import (BATCH, interactive_tier,
+                                        replay_tiered_open_loop,
+                                        tier_report)
+    from repro.launch.serve import build_lut_model
+
+    # microbatch 4 x 4 ms floor puts the single-engine sustainable rate
+    # (~1k req/s) far below what the open-loop submitter can offer on
+    # this box (~4k req/s submit-bound through the fleet), so the
+    # overload the section is ABOUT is genuinely reachable
+    microbatch = 4
+    deadline_s = 2e-3
+    engine_floor_s = 4e-3
+    requests = 512 if fast else 2048
+    train_steps = 40 if fast else 150
+
+    spec, tables_hot, _ = build_lut_model(train_steps, seed=0)
+    _, tables_idle, _ = build_lut_model(train_steps, seed=1)
+    tmp = tempfile.mkdtemp(prefix="lut-bench-sched-")
+    p_hot = save_artifact(tmp, tables_hot, name="sched-hot", spec=spec)
+    p_idle = save_artifact(tmp, tables_idle, name="sched-idle", spec=spec)
+    rows = np.asarray(jax.random.randint(
+        jax.random.key(9), (requests, spec.in_features), 0, 4), np.int32)
+    warm_rows = rows[:2 * microbatch]
+
+    def throttle(fleet):
+        # pace every engine to a fixed per-flush floor.  Interpret-mode
+        # kernels are GIL-bound Python: unpaced, the engines starve the
+        # open-loop submitter thread and the calibrated "overload"
+        # silently evaporates (zero sheds, nothing measured).  The
+        # sleep floor releases the GIL, so the driver can actually
+        # offer 1.5x sustainable and replicas genuinely serve flushes
+        # (and stolen flushes) in parallel.
+        for r in fleet.replicas:
+            for mid in ("m", "m-idle"):
+                b = r.registry.get(mid).batcher
+
+                def paced(x, _inner=b.serve_fn):
+                    t0 = time.monotonic()
+                    out = _inner(x)
+                    dt = engine_floor_s - (time.monotonic() - t0)
+                    if dt > 0:
+                        time.sleep(dt)
+                    return out
+
+                b.serve_fn = paced
+
+    def build_fleet(n):
+        fleet = LutFleet(n, microbatch, deadline_s,
+                         slo_tiers=[interactive_tier(0.05), BATCH],
+                         work_stealing=True)
+        fleet.distribute_artifact(p_hot, "m")
+        fleet.distribute_artifact(p_idle, "m-idle")  # the steal victim's
+        # sibling: its batcher idles, so it can execute stolen flushes
+        throttle(fleet)
+        return fleet
+
+    # calibrate the sustainable rate (microbatch / per-flush service)
+    # on a 1-replica fleet, off the record
+    with build_fleet(1) as fleet:
+        for h in [fleet.submit("m", r, tier=BATCH) for r in warm_rows]:
+            h.result(timeout=60.0)
+        cap = fleet._replica("r0").registry.capacity("m")
+    kernel_est_ms = cap["kernel_est_s"] * 1e3
+    sustainable = cap["sustainable_req_s"]
+    # overload is defined against the hot model's STEAL-INCLUSIVE
+    # capacity on one replica (its own engine + the idle sibling it can
+    # steal into = 2x the single-engine sustainable rate): at r1 even
+    # stealing cannot absorb 2x, so admission must shed; added replicas
+    # then absorb the same stream without sheds
+    overload = 2.0
+    rate = overload * 2 * sustainable
+    it = interactive_tier(max(0.03, 8 * cap["kernel_est_s"]))
+    pattern = [it, it, it, BATCH]        # 75% deadline-class
+
+    out = {
+        "microbatch": microbatch,
+        "requests": requests,
+        "replica_counts": [1, 2, 4],
+        "kernel_est_ms": round(kernel_est_ms, 3),
+        "sustainable_req_s": round(sustainable),
+        "offered_req_s": round(rate),
+        "overload_factor": overload,
+        "interactive_frac": 0.75,
+        "interactive_deadline_ms": round(it.deadline_s * 1e3, 3),
+    }
+    for n in (1, 2, 4):
+        with build_fleet(n) as fleet:
+            warm = [fleet.submit("m", r, tier=BATCH) for r in warm_rows]
+            for h in warm:
+                h.result(timeout=60.0)
+            replay = replay_tiered_open_loop(
+                fleet.client("m"), rows, rate=rate, tiers=pattern,
+                seed=3, timeout_s=120.0)
+            steals = sum(r.registry.steal_group.steals
+                         for r in fleet.replicas)
+            stolen = sum(r.registry.steal_group.stolen_requests
+                         for r in fleet.replicas)
+        rep = tier_report(replay)
+        inter, batch = rep["interactive"], rep["batch"]
+        served = sum(1 for h in replay.handles if h is not None)
+        out[f"interactive_p50_ms_r{n}"] = round(inter["p50_ms"], 3)
+        out[f"interactive_p99_ms_r{n}"] = round(inter["p99_ms"], 3)
+        out[f"interactive_attainment_r{n}"] = round(
+            inter["attainment"], 4)
+        out[f"interactive_shed_rate_r{n}"] = round(
+            inter["shed_rate"], 4)
+        out[f"batch_p50_ms_r{n}"] = round(batch["p50_ms"], 3)
+        out[f"batch_p99_ms_r{n}"] = round(batch["p99_ms"], 3)
+        out[f"batch_throughput_req_s_r{n}"] = round(
+            batch["throughput_req_s"])
+        out[f"sheds_typed_r{n}"] = int(replay.sheds)
+        out[f"silent_drops_r{n}"] = int(
+            len(rows) - served - replay.sheds)
+        out[f"hung_handles_r{n}"] = int(sum(
+            1 for h in replay.handles if h is not None and not h.done))
+        out[f"steals_r{n}"] = int(steals)
+        out[f"stolen_requests_r{n}"] = int(stolen)
+    shutil.rmtree(tmp, ignore_errors=True)
+    return out
+
+
 def _bench_connectivity(fast: bool) -> dict:
     """Connectivity-search ledger (schema v7): Alg.-2 population search
     wall-clock at {1, 2, 4} virtual devices (the seed axis shards over
@@ -666,6 +818,7 @@ def run(fast: bool = False, write_json: bool = False):
     serving = _bench_serving(fast)
     artifact = _bench_artifact(fast)
     fleet = _bench_fleet(fast)
+    scheduler = _bench_scheduler(fast)
     connectivity = _bench_connectivity(fast)
 
     cols = ["config", "B", "seed(i32)ms", "per-layer(u8)ms",
@@ -729,6 +882,17 @@ def run(fast: bool = False, write_json: bool = False):
           fleet["swap_dropped"], fleet["crash_dropped"],
           fleet["crash_retried"]]])
     print_table(
+        "SLO scheduler: 2-tier Poisson @ 2x r1 capacity, {1,2,4} replicas",
+        ["replicas", "int-p50-ms", "int-p99-ms", "attainment",
+         "shed-rate", "batch-req/s", "steals", "silent-drops"],
+        [[n, scheduler[f"interactive_p50_ms_r{n}"],
+          scheduler[f"interactive_p99_ms_r{n}"],
+          scheduler[f"interactive_attainment_r{n}"],
+          scheduler[f"interactive_shed_rate_r{n}"],
+          scheduler[f"batch_throughput_req_s_r{n}"],
+          scheduler[f"steals_r{n}"], scheduler[f"silent_drops_r{n}"]]
+         for n in (1, 2, 4)])
+    print_table(
         "connectivity search: population sharding + searched-vs-random",
         ["config", "fan_in", "1d-s", "2d-s", "4d-s", "bit-ident",
          "acc-rand", "acc-searched", "delta"],
@@ -740,7 +904,7 @@ def run(fast: bool = False, write_json: bool = False):
 
     payload = {
         "bench": "lut_infer",
-        "schema_version": 7,
+        "schema_version": 8,
         "backend": jax.default_backend(),
         "interpret": jax.default_backend() != "tpu",
         "fast": fast,
@@ -749,6 +913,7 @@ def run(fast: bool = False, write_json: bool = False):
         "serving": serving,
         "artifact": artifact,
         "fleet": fleet,
+        "scheduler": scheduler,
         "connectivity": connectivity,
     }
     if write_json:

@@ -66,6 +66,27 @@ adopt it without re-planning or re-tuning, and the registry reports it
 per model (``stats()["<id>"]["exec_mode"]``) — the fusion decision is
 observable, never silent.
 
+Two-tier SLO serving (launch/scheduler.py): under overload the plain
+stack degrades everyone uniformly — the scoreboard scheduler instead
+splits traffic into an **interactive** tier (hard per-request deadline)
+and a **batch** tier (best-effort).  Each model's batcher fills from a
+scoreboard (a pending-matrix slot array, not a FIFO): deadline-class
+requests issue earliest-deadline-first, batch requests backfill the
+remaining slots.  A deadline-class request whose queue-depth x
+kernel-time estimate provably misses its deadline is SHED at submit
+with the typed ``DeadlineUnmeetable`` (never a silent drop), and an
+idle model's batcher steals flushes from a backlogged sibling in the
+same registry.  Drive the mixed Poisson stream at 1.5x the sustainable
+rate and the interactive tier keeps >= 95% deadline attainment while
+batch traffic absorbs the overload:
+
+    PYTHONPATH=src python -m repro.launch.serve --lut --slo-tiers \
+        --interactive-deadline-ms 25 --interactive-frac 0.5 \
+        --requests 4096 --rate 30000
+    # same stream, tier-aware fleet routing across 4 replicas:
+    PYTHONPATH=src python -m repro.launch.serve --lut --slo-tiers \
+        --replicas 4 --requests 4096 --rate 30000
+
 Knobs: --microbatch (flush size = engine batch), --deadline-ms (max
 straggler queueing delay), --rate (offered Poisson load per model),
 --requests (stream length per model).  Reports per-model p50/p95/p99

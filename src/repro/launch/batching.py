@@ -27,7 +27,7 @@ import dataclasses
 import queue
 import threading
 import time
-from typing import Callable, List, Optional, Sequence
+from typing import Any, Callable, List, Optional, Sequence
 
 import numpy as np
 
@@ -53,6 +53,8 @@ class RequestHandle:
     tag: Optional[str] = None           # serving engine's version tag
     flush_key: Optional[tuple] = None   # (batcher id, flush seq)
     on_done: Optional[Callable] = None  # called with the handle, once
+    tier: Optional[Any] = None          # scheduler.SLOTier, if tiered
+    deadline_at: Optional[float] = None  # monotonic hard deadline
     _out: Optional[np.ndarray] = None   # (n_out,) engine output row
     _exc: Optional[BaseException] = None
     _event: threading.Event = dataclasses.field(
@@ -88,9 +90,10 @@ class FlushRecord:
 
     fill: int           # real requests in the microbatch (<= capacity)
     waited_s: float     # oldest request's queueing delay at flush time
-    kernel_s: float     # engine wall time for the batch
-    cause: str          # "full" | "deadline" | "stop"
+    kernel_s: float     # engine wall time (time-to-fault when failed)
+    cause: str          # "full" | "deadline" | "stop" | "steal"
     tag: Optional[str] = None   # batcher's version tag at flush time
+    failed: bool = False        # engine raised: the flush served nothing
 
     @property
     def deadline_hit(self) -> bool:
@@ -112,12 +115,22 @@ class MicroBatcher:
 
     serve_fn: ``(microbatch, n_features) np/int32 -> (microbatch, n_out)``
     array-convertible; called on the batcher thread only, so a jitted
-    (optionally shard_map'ed) engine fn needs no extra locking.
+    (optionally shard_map'ed) engine fn needs no extra locking.  (With
+    a steal group a SIBLING batcher's thread may also call it, into a
+    private buffer — jitted fns are safe to call concurrently.)
+
+    ``scheduler`` (a ``scheduler.ScoreboardScheduler``) switches the
+    fill from FIFO to scoreboard issue order (earliest-deadline-first
+    with best-effort backfill) and gates every submit through its
+    admission control; ``steal_group`` lets this batcher execute a
+    backlogged sibling's flushes while its own scoreboard is empty.
     """
 
     def __init__(self, serve_fn: Callable, microbatch: int,
                  deadline_s: float, n_features: int,
-                 dtype=np.int32, tag: Optional[str] = None):
+                 dtype=np.int32, tag: Optional[str] = None,
+                 scheduler=None, steal_group=None,
+                 steal_poll_s: float = 2e-3):
         if microbatch < 1:
             raise ValueError("microbatch must be >= 1")
         self.serve_fn = serve_fn
@@ -128,6 +141,10 @@ class MicroBatcher:
         # response always says WHICH engine version produced it
         self.tag = tag
         self._flush_seq = 0
+        self._inflight = 0       # flushes currently executing
+        # a stealing sibling flushes concurrently with this thread, so
+        # the flush-key counter needs its own (tiny) lock
+        self._seq_lock = threading.Lock()
         self._buf = np.zeros((microbatch, n_features), dtype)
         self._q: "queue.Queue" = queue.Queue()
         self._thread = threading.Thread(target=self._loop, daemon=True)
@@ -139,6 +156,16 @@ class MicroBatcher:
         # never slip into the queue after the drain and silently hang
         self._submit_lock = threading.Lock()
         self.flushes: List[FlushRecord] = []
+        self.scheduler = scheduler
+        self.steal_group = steal_group
+        self._steal_poll_s = float(steal_poll_s)
+        # scheduled mode bypasses the queue: submits land straight in
+        # the scoreboard and wake the batcher through this condition
+        self._cond = threading.Condition()
+        if scheduler is not None:
+            scheduler.bind(self)
+        if steal_group is not None:
+            steal_group.register(self)
 
     # -- lifecycle ---------------------------------------------------
     def start(self) -> "MicroBatcher":
@@ -152,8 +179,12 @@ class MicroBatcher:
         left unset."""
         with self._submit_lock:
             self._stopping = True
+        with self._cond:
+            self._cond.notify_all()
         self._q.put(_STOP)
         self._thread.join()
+        if self.steal_group is not None:
+            self.steal_group.unregister(self)
         leftovers: List[RequestHandle] = []
         while True:
             try:
@@ -162,6 +193,14 @@ class MicroBatcher:
                 break
             if item is not _STOP:
                 leftovers.append(item)
+        # scheduled mode: the scoreboard is the queue — drain any
+        # remainder the loop's final issue raced past
+        if self.scheduler is not None:
+            while True:
+                chunk = self.scheduler.scoreboard.issue(self.microbatch)
+                if not chunk:
+                    break
+                leftovers.extend(chunk)
         while leftovers:
             chunk = leftovers[:self.microbatch]
             leftovers = leftovers[self.microbatch:]
@@ -174,14 +213,31 @@ class MicroBatcher:
         self.stop()
 
     # -- producer side -----------------------------------------------
-    def submit(self, x, on_done: Optional[Callable] = None) -> RequestHandle:
-        h = RequestHandle(x=np.asarray(x), t_submit=time.monotonic(),
-                          on_done=on_done)
+    def submit(self, x, on_done: Optional[Callable] = None,
+               tier=None) -> RequestHandle:
+        """``tier`` (a ``scheduler.SLOTier``) stamps the request with
+        its SLO class; in scheduled mode a deadline-class request is
+        admission-checked here and may be shed with the typed
+        ``DeadlineUnmeetable`` before it ever enters the scoreboard."""
+        now = time.monotonic()
+        deadline_at = (now + tier.deadline_s
+                       if tier is not None and tier.deadline_s is not None
+                       else None)
+        h = RequestHandle(x=np.asarray(x), t_submit=now,
+                          on_done=on_done, tier=tier,
+                          deadline_at=deadline_at)
         with self._submit_lock:
             if self._stopping:
                 raise BatcherStopped("batcher is stopping — request "
                                      "rejected, resubmit elsewhere")
-            self._q.put(h)
+            if self.scheduler is not None:
+                self.scheduler.admit_or_raise(h, now)
+                self.scheduler.scoreboard.insert(h)
+            else:
+                self._q.put(h)
+        if self.scheduler is not None:
+            with self._cond:
+                self._cond.notify()
         return h
 
     # -- batcher thread ----------------------------------------------
@@ -217,6 +273,43 @@ class MicroBatcher:
             cause = "full"
         return pending, cause
 
+    def _collect_scheduled(self):
+        """Scoreboard-mode collect: wait for pending work (stealing a
+        backlogged sibling's flushes while idle), then fill until the
+        board holds a full batch or the OLDEST pending request's flush
+        deadline expires, then issue in priority order."""
+        sb = self.scheduler.scoreboard
+        # phase 1: wait for work; an idle scoreboard is the license to
+        # steal (the poll doubles as the steal cadence)
+        while not self._stopping and sb.depth() == 0:
+            if (self.steal_group is not None
+                    and self.steal_group.steal_into(self)):
+                continue
+            with self._cond:
+                if sb.depth() == 0 and not self._stopping:
+                    self._cond.wait(timeout=self._steal_poll_s)
+        # phase 2: fill until full or the oldest pending deadline
+        cause = "deadline"
+        while True:
+            depth = sb.depth()
+            if depth >= self.microbatch:
+                cause = "full"
+                break
+            if self._stopping:
+                cause = "stop"
+                break
+            if depth == 0:       # a sibling stole everything we had
+                return [], cause
+            oldest = sb.oldest_t_submit()
+            if oldest is None:
+                return [], cause
+            timeout = oldest + self.deadline_s - time.monotonic()
+            if timeout <= 0:
+                break
+            with self._cond:
+                self._cond.wait(timeout=timeout)
+        return sb.issue(self.microbatch), cause
+
     def _complete(self, h: RequestHandle) -> None:
         h._event.set()
         if h.on_done is not None:
@@ -226,10 +319,30 @@ class MicroBatcher:
                 pass           # bookkeeping must never kill the batcher
 
     def _flush(self, pending: Sequence[RequestHandle],
-               cause: str) -> None:
+               cause: str, buf: Optional[np.ndarray] = None) -> None:
+        """Serve one microbatch.  ``buf`` defaults to the batcher's own
+        buffer; a stealing sibling passes a private one so both threads
+        can flush concurrently."""
         n = len(pending)
-        self._flush_seq += 1
-        fkey = (id(self), self._flush_seq)
+        t_enter = time.monotonic()
+        with self._seq_lock:
+            self._flush_seq += 1
+            fkey = (id(self), self._flush_seq)
+            self._inflight += 1
+        try:
+            ok = self._flush_inner(pending, cause, buf, n, fkey)
+        finally:
+            with self._seq_lock:
+                self._inflight -= 1
+        if ok and self.scheduler is not None:
+            # whole-flush service interval (fill + engine + completion)
+            # feeds the admission estimator — the kernel time alone
+            # under-counts by the per-flush overhead
+            self.scheduler.note_service(time.monotonic() - t_enter)
+
+    def _flush_inner(self, pending, cause, buf, n, fkey) -> bool:
+        if buf is None:
+            buf = self._buf
         t0 = time.monotonic()
         waited = t0 - pending[0].t_submit
         try:
@@ -237,19 +350,26 @@ class MicroBatcher:
             # width/dtype) must fail its batch like an engine error,
             # not kill the batcher thread and hang everything behind it
             for i, h in enumerate(pending):
-                self._buf[i] = h.x
-            self._buf[n:] = self._buf[0]      # pad: fixed shape, no retrace
-            out = np.asarray(self.serve_fn(self._buf))
+                buf[i] = h.x
+            buf[n:] = buf[0]          # pad: fixed shape, no retrace
+            out = np.asarray(self.serve_fn(buf))
         except BaseException as e:
             # the engine failed: fail THIS batch's handles (result()
-            # re-raises) and keep the batcher alive for later batches
+            # re-raises) and keep the batcher alive for later batches.
+            # The flush still gets a (failed) record — dropping it
+            # would hide exactly the flushes tail-latency attribution
+            # cares about most, and kernel_s records time-to-fault.
+            t_fail = time.monotonic()
+            self.flushes.append(FlushRecord(
+                fill=n, waited_s=waited, kernel_s=t_fail - t0,
+                cause=cause, tag=self.tag, failed=True))
             for h in pending:
                 h._exc = e
                 h.tag = self.tag
                 h.flush_key = fkey
                 h.t_done = time.monotonic()
                 self._complete(h)
-            return
+            return False
         t1 = time.monotonic()
         self.flushes.append(FlushRecord(
             fill=n, waited_s=waited, kernel_s=t1 - t0, cause=cause,
@@ -260,13 +380,20 @@ class MicroBatcher:
             h.flush_key = fkey
             h.t_done = t1
             self._complete(h)
+        return True
+
+    def _pending_empty(self) -> bool:
+        return (self.scheduler.scoreboard.depth() == 0
+                if self.scheduler is not None else self._q.empty())
 
     def _loop(self) -> None:
         while True:
-            pending, cause = self._collect()
+            pending, cause = (self._collect_scheduled()
+                              if self.scheduler is not None
+                              else self._collect())
             if pending:
                 self._flush(pending, cause)
-            if self._stopping and self._q.empty():
+            if self._stopping and self._pending_empty():
                 return
 
 
@@ -301,6 +428,17 @@ def replay_open_loop(batcher: MicroBatcher, rows: np.ndarray,
 
 
 def latency_percentiles_ms(handles: Sequence[RequestHandle],
-                           qs=(50, 95, 99)) -> List[float]:
-    lats = np.asarray([h.latency_s for h in handles]) * 1e3
+                           qs=(50, 95, 99),
+                           include_failed: bool = False) -> List[float]:
+    """Latency percentiles over SERVED requests.  Failed handles are
+    excluded by default: a crashed batch completes at fault time, which
+    would silently IMPROVE the reported tail under fault injection.
+    ``include_failed=True`` restores the raw population (the soak
+    harness uses it to bound time-to-failure).  Returns NaNs when the
+    selected population is empty."""
+    picked = [h for h in handles
+              if include_failed or not h.failed]
+    if not picked:
+        return [float("nan")] * len(qs)
+    lats = np.asarray([h.latency_s for h in picked]) * 1e3
     return [float(v) for v in np.percentile(lats, qs)]

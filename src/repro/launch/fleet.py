@@ -59,6 +59,7 @@ from repro.artifact import (ArtifactError, copy_artifact, load_artifact,
 from repro.artifact.store import SLAB_FILE
 from repro.launch.registry import (ModelEntry, ModelRegistry, SwapReport,
                                    UnknownModelError)
+from repro.launch.scheduler import DeadlineUnmeetable, SLOTier
 
 
 class FleetError(RuntimeError):
@@ -137,6 +138,10 @@ class FleetSwapReport:
     blackout_s: Dict[str, float]
     drained_requests: Dict[str, int]
     prepare_s: float
+    # replicas whose commit failed mid-cutover (e.g. a kill racing the
+    # commit loop): replica id -> error.  The survivors still cut; the
+    # caller sees exactly which hosts did not.
+    not_cut: Dict[str, str] = dataclasses.field(default_factory=dict)
 
     @property
     def max_blackout_s(self) -> float:
@@ -158,10 +163,12 @@ class FleetHandle:
     the engine that actually served the final attempt; ``flush_key``
     identifies the exact (replica, microbatch) it rode in."""
 
-    def __init__(self, fleet: "LutFleet", model_id: str, x):
+    def __init__(self, fleet: "LutFleet", model_id: str, x,
+                 tier: Optional[SLOTier] = None):
         self._fleet = fleet
         self.model_id = model_id
         self.x = np.asarray(x)
+        self.tier = tier
         self.t_submit = time.monotonic()
         self.replica_ids: List[str] = []   # dispatch history, last = current
         self.retries = 0                   # re-dispatches after a failure
@@ -229,10 +236,14 @@ class LutFleet:
                  deadline_s: float = 2e-3, *, mesh=None,
                  force_interpret: Optional[bool] = None,
                  store_root: Optional[str] = None,
-                 max_fetch_retries: int = 2):
+                 max_fetch_retries: int = 2,
+                 slo_tiers: Optional[List[SLOTier]] = None,
+                 work_stealing: bool = False):
         if n_replicas < 1:
             raise ValueError("a fleet needs at least one replica")
         self.max_fetch_retries = max_fetch_retries
+        self.slo_tiers = list(slo_tiers) if slo_tiers else None
+        self.sheds = 0               # requests shed before dispatch
         self._lock = threading.Lock()
         self._own_store = store_root is None
         self.store_root = store_root or tempfile.mkdtemp(prefix="lut-fleet-")
@@ -245,7 +256,8 @@ class LutFleet:
                 microbatch, deadline_s, mesh=mesh,
                 force_interpret=force_interpret,
                 engine_hook=lambda mid, batch, rid=rid:
-                    self._engine_gate(rid))
+                    self._engine_gate(rid),
+                slo_tiers=slo_tiers, work_stealing=work_stealing)
             self.replicas.append(Replica(replica_id=rid, registry=reg,
                                          store_dir=store))
 
@@ -440,15 +452,35 @@ class LutFleet:
         blackout: Dict[str, float] = {}
         drained: Dict[str, int] = {}
         t0 = time.monotonic()
+        not_cut: Dict[str, str] = {}
         for rid, (r, entry) in sorted(prepared.entries.items()):
             if not r.healthy:
                 # the host died between prepare and commit: its engine
                 # stands down, the survivors still cut over
                 r.registry.abandon(entry)
+                not_cut[rid] = "replica unhealthy at commit"
                 continue
             with self._lock:
                 old_tags[rid] = r.admitted.get(prepared.model_id, "")
-            rep: SwapReport = r.registry.commit(prepared.model_id, entry)
+            try:
+                rep: SwapReport = r.registry.commit(prepared.model_id,
+                                                    entry)
+            # broad on purpose: a kill can race the healthy check above
+            # (registry closed -> UnknownModelError, a KeyError) and
+            # the exception must not escape mid-loop — that would leave
+            # the fleet half-old/half-new with no report and the
+            # remaining prepared entries never abandoned.  The failed
+            # replica is recorded as not-cut; the survivors still cut.
+            except Exception as e:
+                old_tags.pop(rid, None)
+                not_cut[rid] = str(e)
+                try:
+                    # commit's own failure paths stop the entry batcher
+                    # already; abandon is idempotent and covers the rest
+                    r.registry.abandon(entry)
+                except Exception:
+                    pass
+                continue
             with self._lock:
                 r.admitted[prepared.model_id] = entry.version_tag
             blackout[rid] = rep.blackout_s
@@ -458,20 +490,29 @@ class LutFleet:
             model_id=prepared.model_id, old_tags=old_tags,
             new_tag=prepared.new_tag, commit_window_s=window,
             blackout_s=blackout, drained_requests=drained,
-            prepare_s=prepared.prepare_s)
+            prepare_s=prepared.prepare_s, not_cut=not_cut)
 
     def swap_fleet(self, model_id: str, source: str) -> FleetSwapReport:
         """prepare + commit in one call (the CLI demo entry)."""
         return self.commit_swap(self.prepare_swap(model_id, source))
 
     # -- request path -------------------------------------------------
-    def _pick(self, model_id: str, exclude=()) -> Optional[Replica]:
+    def _pick(self, model_id: str, exclude=(),
+              tier: Optional[SLOTier] = None) -> Optional[Replica]:
         with self._lock:
             cands = [r for r in self.replicas
                      if r.healthy and model_id in r.admitted
                      and r.replica_id not in exclude]
             if not cands:
                 return None
+            if tier is not None and tier.has_deadline:
+                # deadline-class requests rank by ESTIMATED DELAY (live
+                # queue depth x kernel estimate) first — outstanding
+                # count alone can't see a deep scoreboard behind a
+                # small in-flight window
+                return min(cands, key=lambda r: (
+                    r.registry.estimate_delay_s(model_id) or 0.0,
+                    r.outstanding, r.replica_id))
             return min(cands, key=lambda r: (r.outstanding, r.replica_id))
 
     def _dispatch(self, h: FleetHandle) -> None:
@@ -482,17 +523,25 @@ class LutFleet:
         t0 = time.perf_counter()
         tried = set(h.replica_ids)
         attempts = 0
+        shed: Optional[DeadlineUnmeetable] = None
         while True:
-            r = self._pick(h.model_id, exclude=tried)
+            r = self._pick(h.model_id, exclude=tried, tier=h.tier)
             if r is None:
                 # every untried replica is out — fall back to ANY
                 # healthy one (a transient engine fault is retryable on
                 # the same host) before giving up
                 tried = set()
-                r = self._pick(h.model_id)
+                r = self._pick(h.model_id, tier=h.tier)
             attempts += 1
             if r is None or attempts > 2 * len(self.replicas):
                 h.route_s += time.perf_counter() - t0
+                if shed is not None:
+                    # every candidate's admission control proved the
+                    # deadline unmeetable — surface the TYPED shed, not
+                    # a routing failure
+                    with self._lock:
+                        self.sheds += 1
+                    raise shed
                 raise NoHealthyReplica(
                     f"no healthy replica can serve {h.model_id!r} "
                     f"(request re-dispatched {h.retries} times)")
@@ -505,11 +554,20 @@ class LutFleet:
             with self._lock:
                 r.outstanding += 1
             try:
-                inner = r.registry.submit(h.model_id, h.x, on_done=done_cb)
+                inner = r.registry.submit(h.model_id, h.x,
+                                          on_done=done_cb, tier=h.tier)
             except UnknownModelError:
                 # raced a kill/unregister: un-count, exclude, move on
                 with self._lock:
                     r.outstanding -= 1
+                tried.add(r.replica_id)
+                continue
+            except DeadlineUnmeetable as e:
+                # this replica shed the request — try the others, raise
+                # the shed only when every candidate refuses
+                with self._lock:
+                    r.outstanding -= 1
+                shed = e
                 tried.add(r.replica_id)
                 continue
             h._inner = inner
@@ -517,12 +575,41 @@ class LutFleet:
             h.route_s += time.perf_counter() - t0
             return
 
-    def submit(self, model_id: str, x) -> FleetHandle:
+    def _shed_check(self, model_id: str, tier: Optional[SLOTier]) -> None:
+        """Pre-dispatch admission: when even the BEST candidate
+        replica's delay estimate provably misses the tier deadline,
+        shed here — a rejection costs a few dict lookups, never a queue
+        traversal or a dispatch attempt."""
+        if tier is None or not tier.has_deadline:
+            return
+        with self._lock:
+            cands = [r for r in self.replicas
+                     if r.healthy and model_id in r.admitted]
+        ests = [r.registry.estimate_delay_s(model_id) for r in cands]
+        known = [e for e in ests if e is not None]
+        # no history yet (or no candidates — dispatch will raise the
+        # routing error, not a shed): always admit
+        if not cands or len(known) < len(ests) or not known:
+            return
+        best = min(known)
+        if best > tier.deadline_s:
+            with self._lock:
+                self.sheds += 1
+            raise DeadlineUnmeetable(
+                f"deadline {tier.deadline_s * 1e3:.2f} ms but the best "
+                f"replica's estimated service is {best * 1e3:.2f} ms — "
+                f"request shed before dispatch")
+
+    def submit(self, model_id: str, x,
+               tier: Optional[SLOTier] = None) -> FleetHandle:
         """Route one request to the least-loaded healthy replica that
         has admitted ``model_id``.  The returned handle re-dispatches
         itself on replica failure — ``result()`` returns the one true
-        response or raises ``NoHealthyReplica``."""
-        h = FleetHandle(self, model_id, x)
+        response or raises ``NoHealthyReplica``.  A deadline-class
+        ``tier`` request that provably cannot meet its deadline is
+        shed with the typed ``DeadlineUnmeetable`` before dispatch."""
+        self._shed_check(model_id, tier)
+        h = FleetHandle(self, model_id, x, tier=tier)
         self._dispatch(h)
         return h
 
@@ -562,8 +649,8 @@ class FleetClient:
     fleet: LutFleet
     model_id: str
 
-    def submit(self, x) -> FleetHandle:
-        return self.fleet.submit(self.model_id, x)
+    def submit(self, x, tier: Optional[SLOTier] = None) -> FleetHandle:
+        return self.fleet.submit(self.model_id, x, tier=tier)
 
 
 def _flip_one_bit(path: str) -> None:

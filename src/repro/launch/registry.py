@@ -40,6 +40,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.launch.batching import BatcherStopped, MicroBatcher, RequestHandle
+from repro.launch.scheduler import (ScoreboardScheduler, SLOTier,
+                                    StealGroup)
 
 
 @dataclasses.dataclass
@@ -95,11 +97,21 @@ class ModelRegistry:
 
     def __init__(self, microbatch: int = 256, deadline_s: float = 2e-3,
                  *, mesh=None, force_interpret: Optional[bool] = None,
-                 engine_hook: Optional[Callable] = None):
+                 engine_hook: Optional[Callable] = None,
+                 slo_tiers: Optional[List[SLOTier]] = None,
+                 work_stealing: bool = False):
         self.microbatch = microbatch
         self.deadline_s = deadline_s
         self.mesh = mesh
         self.force_interpret = force_interpret
+        # SLO-tiered scheduling: when tiers are declared (or stealing
+        # is on) every model's batcher gets a ScoreboardScheduler —
+        # priority issue order + admission control — and, with
+        # work_stealing, all batchers join one StealGroup so a hot
+        # model borrows flush capacity from an idle sibling
+        self.slo_tiers = list(slo_tiers) if slo_tiers else None
+        self.work_stealing = work_stealing
+        self.steal_group = StealGroup() if work_stealing else None
         # fault-injection surface: called as engine_hook(model_id,
         # batch) on the batcher thread BEFORE every engine dispatch; an
         # exception it raises fails that batch exactly like an engine
@@ -145,8 +157,12 @@ class ModelRegistry:
             return np.asarray(jax.block_until_ready(
                 serve_fn(jnp.asarray(batch_np))))
 
+        scheduler = (ScoreboardScheduler()
+                     if (self.slo_tiers is not None or self.work_stealing)
+                     else None)
         batcher = MicroBatcher(engine, self.microbatch, self.deadline_s,
-                               n_features=n_feat).start()
+                               n_features=n_feat, scheduler=scheduler,
+                               steal_group=self.steal_group).start()
         entry = ModelEntry(model_id=model_id, version=version,
                            tables=tables, n_features=n_feat,
                            artifact_id=artifact_id, serve_fn=serve_fn,
@@ -266,12 +282,16 @@ class ModelRegistry:
 
     # -- request path -------------------------------------------------
     def submit(self, model_id: str, x,
-               on_done: Optional[Callable] = None) -> RequestHandle:
+               on_done: Optional[Callable] = None,
+               tier: Optional[SLOTier] = None) -> RequestHandle:
         """Route one request.  A concurrent hot-swap can stop the entry
         we picked between lookup and enqueue; the typed rejection is
         absorbed by re-looking-up the (new) entry — bounded, since each
         retry observes a strictly newer version.  ``on_done`` rides the
-        handle (see MicroBatcher.submit)."""
+        handle (see MicroBatcher.submit).  ``tier`` stamps the SLO
+        class; a deadline-class request the scheduler can prove unmeet-
+        able is shed with ``DeadlineUnmeetable`` (which propagates —
+        admission rejection is an answer, not a routing failure)."""
         while True:
             with self._lock:
                 entry = self._models.get(model_id)
@@ -280,7 +300,7 @@ class ModelRegistry:
                 raise UnknownModelError(
                     f"no model {model_id!r} registered (have: {known})")
             try:
-                return entry.batcher.submit(x, on_done=on_done)
+                return entry.batcher.submit(x, on_done=on_done, tier=tier)
             except BatcherStopped:
                 continue
 
@@ -301,23 +321,68 @@ class ModelRegistry:
                 raise UnknownModelError(model_id)
             return self._models[model_id]
 
+    def capacity(self, model_id: str) -> Dict[str, Any]:
+        """Live capacity accounting for one model: current queue depth,
+        the kernel-time estimate from flush history, the delay a new
+        request would see, and the sustainable request rate — what the
+        fleet router and admission control consult.  Estimates are None
+        until the model's first flush lands."""
+        entry = self.get(model_id)
+        sched = entry.batcher.scheduler
+        if sched is None:
+            return {"queue_depth": entry.batcher._q.qsize(),
+                    "kernel_est_s": None, "est_delay_s": None,
+                    "sustainable_req_s": None, "sheds": 0}
+        kest = sched.kernel_estimate_s()
+        return {
+            "queue_depth": sched.scoreboard.depth(),
+            "kernel_est_s": kest,
+            "est_delay_s": sched.estimate_delay_s(),
+            "sustainable_req_s": (entry.batcher.microbatch / kest
+                                  if kest else None),
+            "sheds": sched.sheds,
+        }
+
+    def estimate_delay_s(self, model_id: str,
+                         deadline_at: Optional[float] = None
+                         ) -> Optional[float]:
+        """Estimated service delay for a new request on ``model_id``
+        (None when unscheduled or before any flush history exists) —
+        the fleet's pre-dispatch shed check and tier-aware routing key
+        on this."""
+        try:
+            entry = self.get(model_id)
+        except UnknownModelError:
+            return None
+        sched = entry.batcher.scheduler
+        return (None if sched is None
+                else sched.estimate_delay_s(deadline_at))
+
     def stats(self) -> Dict[str, Dict[str, Any]]:
         with self._lock:
             entries = dict(self._models)
-        return {
-            mid: {
+        out = {}
+        for mid, e in entries.items():
+            sched = e.batcher.scheduler
+            out[mid] = {
                 "version": e.version,
                 "artifact_id": e.artifact_id,
                 "n_features": e.n_features,
                 "flushes": len(e.batcher.flushes),
-                "served": sum(f.fill for f in e.batcher.flushes),
+                "served": sum(f.fill for f in e.batcher.flushes
+                              if not f.failed),
+                "failed_flushes": sum(1 for f in e.batcher.flushes
+                                      if f.failed),
                 "warm_s": round(e.warm_s, 4),
                 "exec_mode": (e.plan.mode if e.plan is not None
                               else None),
                 "exec_segments": (e.plan.n_segments
                                   if e.plan is not None else None),
-            } for mid, e in entries.items()
-        }
+                "sheds": 0 if sched is None else sched.sheds,
+            }
+            if self.steal_group is not None:
+                out[mid]["steals"] = self.steal_group.steals
+        return out
 
 
 @dataclasses.dataclass
@@ -325,5 +390,6 @@ class RegistryClient:
     registry: ModelRegistry
     model_id: str
 
-    def submit(self, x, on_done=None) -> RequestHandle:
-        return self.registry.submit(self.model_id, x, on_done=on_done)
+    def submit(self, x, on_done=None, tier=None) -> RequestHandle:
+        return self.registry.submit(self.model_id, x, on_done=on_done,
+                                    tier=tier)

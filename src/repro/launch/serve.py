@@ -381,11 +381,81 @@ def run_fleet_swap_demo(args, mesh) -> None:
           f"accuracy (mixed stream) {acc:.4f}")
 
 
+def run_slo_serving(args, mesh) -> None:
+    """Two-tier SLO serving: a mixed interactive/batch Poisson stream
+    through the scoreboard scheduler (launch/scheduler.py) — EDF issue
+    order with batch backfill, admission control shedding provably-late
+    interactive requests with the typed DeadlineUnmeetable, and
+    work-stealing across sibling batchers.  One host by default;
+    ``--replicas N`` runs the same stream through a tiered fleet."""
+    from repro.launch.fleet import LutFleet
+    from repro.launch.registry import ModelRegistry
+    from repro.launch.scheduler import (BATCH, interactive_tier,
+                                        replay_tiered_open_loop,
+                                        tier_report)
+
+    spec, source, data, origin = load_or_build_lut_model(
+        args.lut_train_steps, artifact_dir=args.artifact_dir,
+        save=args.save_artifact)
+    fq = spec.layer_specs()[0].in_quant
+    rng = np.random.default_rng(0)
+    idx = rng.integers(0, data["test"]["x"].shape[0], args.requests)
+    codes = np.asarray(fq.to_code(fq.clip(
+        jnp.asarray(np.asarray(data["test"]["x"])[idx]))))
+
+    it = interactive_tier(args.interactive_deadline_ms / 1e3)
+    tiers = [it, BATCH]
+    # Bresenham interleave: ~interactive_frac of the stream is
+    # deadline-class, evenly mixed with best-effort traffic
+    k = max(0, min(10, round(args.interactive_frac * 10)))
+    pattern = [it if (i * k) // 10 != ((i + 1) * k) // 10 else BATCH
+               for i in range(10)]
+    if not any(t is it for t in pattern):
+        pattern = [BATCH]
+
+    if args.replicas:
+        path = _fleet_artifact_path(args, spec, source, origin)
+        with LutFleet(args.replicas, args.microbatch,
+                      args.deadline_ms / 1e3, mesh=mesh,
+                      slo_tiers=tiers, work_stealing=True) as fleet:
+            fleet.distribute_artifact(path, "m")
+            replay = replay_tiered_open_loop(
+                fleet.client("m"), codes, args.rate, pattern)
+        where = f"fleet x{args.replicas}"
+    else:
+        with ModelRegistry(args.microbatch, args.deadline_ms / 1e3,
+                           mesh=mesh, slo_tiers=tiers,
+                           work_stealing=True) as reg:
+            reg.register("m", source)
+            replay = replay_tiered_open_loop(
+                reg.client("m"), codes, args.rate, pattern)
+        where = "1 host"
+
+    report = tier_report(replay)
+    print(f"lut-serve[slo-tiers, {where}, {origin}] "
+          f"microbatch={args.microbatch} flush-deadline="
+          f"{args.deadline_ms}ms rate={args.rate:,.0f}/s "
+          f"interactive-slo={args.interactive_deadline_ms}ms:")
+    for name, ent in sorted(report.items()):
+        line = (f"  {name:<12} offered {ent['offered']:>6} shed "
+                f"{ent['shed']:>5} ({ent['shed_rate'] * 100:.1f}%) "
+                f"p50 {ent['p50_ms']:.2f} ms p99 {ent['p99_ms']:.2f} ms "
+                f"{ent['throughput_req_s']:,.0f} req/s")
+        if "attainment" in ent:
+            line += f" attainment {ent['attainment'] * 100:.1f}%"
+        print(line)
+    hung = sum(1 for h in replay.handles if h is not None and not h.done)
+    print(f"  sheds all typed, silent drops 0, hung handles {hung}")
+
+
 def serve_lut(args) -> None:
     from repro.kernels.lut_gather import ops as lg_ops
     from repro.parallel.sharding import serving_mesh
 
     mesh = serving_mesh(args.shards) if args.shards else None
+    if args.slo_tiers:
+        run_slo_serving(args, mesh)
+        return
     if args.fleet_swap_demo:
         run_fleet_swap_demo(args, mesh)
         return
@@ -436,6 +506,16 @@ def main() -> None:
     ap.add_argument("--fleet-swap-demo", action="store_true",
                     help="fleet demo: two-phase coordinated hot-swap "
                          "across all replicas under live load")
+    ap.add_argument("--slo-tiers", action="store_true",
+                    help="two-tier SLO serving through the scoreboard "
+                         "scheduler: interactive (hard deadline, EDF, "
+                         "admission-controlled) + batch (best-effort "
+                         "backfill), with work-stealing")
+    ap.add_argument("--interactive-deadline-ms", type=float, default=25.0,
+                    help="hard per-request SLO for the interactive tier")
+    ap.add_argument("--interactive-frac", type=float, default=0.5,
+                    help="fraction of the stream submitted as "
+                         "interactive-tier requests")
     ap.add_argument("--microbatch", type=int, default=256)
     ap.add_argument("--deadline-ms", type=float, default=2.0)
     ap.add_argument("--shards", type=int, default=0,

@@ -27,6 +27,7 @@ TOP_KEYS = {
     "fleet": dict,             # multi-replica serving ledger (v5)
     "segmented": dict,         # over-budget segmented execution (v6)
     "connectivity": dict,      # population connectivity search (v7)
+    "scheduler": dict,         # SLO-tiered scoreboard scheduler (v8)
 }
 
 CONFIG_NUMERIC = [
@@ -84,6 +85,20 @@ CONNECTIVITY_CONFIG_NUMERIC = [
     "acc_delta_searched_vs_random",
 ]
 
+SCHEDULER_NUMERIC = [
+    "microbatch", "requests", "kernel_est_ms", "sustainable_req_s",
+    "offered_req_s", "overload_factor", "interactive_frac",
+    "interactive_deadline_ms",
+] + [
+    f"{key}_r{n}"
+    for n in (1, 2, 4)
+    for key in ("interactive_p50_ms", "interactive_p99_ms",
+                "interactive_attainment", "interactive_shed_rate",
+                "batch_p50_ms", "batch_p99_ms", "batch_throughput_req_s",
+                "sheds_typed", "silent_drops", "hung_handles",
+                "steals", "stolen_requests")
+]
+
 FLEET_NUMERIC = [
     "microbatch", "deadline_ms", "requests",
     "throughput_req_s_r1", "throughput_req_s_r2", "throughput_req_s_r4",
@@ -106,7 +121,7 @@ def test_top_level_schema(payload):
         assert key in payload, f"missing top-level key {key!r}"
         assert isinstance(payload[key], typ), (key, type(payload[key]))
     assert payload["bench"] == "lut_infer"
-    assert payload["schema_version"] >= 7
+    assert payload["schema_version"] >= 8
     assert len(payload["configs"]) >= 1
 
 
@@ -227,6 +242,40 @@ def test_connectivity_contracts(payload):
         assert isinstance(cfg["bit_identical_sharded"], bool)
         assert cfg["bit_identical_sharded"], cfg["name"]
         assert cfg["acc_delta_searched_vs_random"] >= -0.01, cfg["name"]
+
+
+def test_scheduler_entry_schema(payload):
+    sched = payload["scheduler"]
+    for key in SCHEDULER_NUMERIC:
+        assert key in sched, f"scheduler: missing {key!r}"
+        assert isinstance(sched[key], numbers.Real) and \
+            not isinstance(sched[key], bool), key
+    assert sched["replica_counts"] == [1, 2, 4]
+
+
+def test_scheduler_contracts(payload):
+    """Hardware-independent contracts of the SLO scheduler drill: at
+    EVERY replica count, zero silent drops and zero hung handles (a
+    request either completes or got the typed ``DeadlineUnmeetable``),
+    attainment and shed rate stay inside [0, 1], and percentiles are
+    ordered.  The overload run (r1, offered > steal-inclusive
+    capacity) actually exercised admission (typed sheds > 0) and
+    work-stealing (steals > 0) — the two mechanisms the section
+    ledgers."""
+    sched = payload["scheduler"]
+    for n in (1, 2, 4):
+        assert sched[f"silent_drops_r{n}"] == 0, n
+        assert sched[f"hung_handles_r{n}"] == 0, n
+        assert 0.0 <= sched[f"interactive_attainment_r{n}"] <= 1.0, n
+        assert 0.0 <= sched[f"interactive_shed_rate_r{n}"] <= 1.0, n
+        assert (sched[f"interactive_p50_ms_r{n}"]
+                <= sched[f"interactive_p99_ms_r{n}"]), n
+        assert (sched[f"batch_p50_ms_r{n}"]
+                <= sched[f"batch_p99_ms_r{n}"]), n
+        assert sched[f"stolen_requests_r{n}"] >= sched[f"steals_r{n}"], n
+    assert sched["offered_req_s"] > sched["sustainable_req_s"]
+    assert sched["sheds_typed_r1"] > 0
+    assert sched["steals_r1"] > 0
 
 
 def test_fleet_entry_schema(payload):

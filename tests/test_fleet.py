@@ -46,6 +46,8 @@ from repro.kernels.lut_gather import ops as lg_ops
 from repro.launch.batching import replay_open_loop
 from repro.launch.fleet import (FleetSwapError, LutFleet, NoHealthyReplica,
                                 ReplicaCrashed)
+from repro.launch.scheduler import (BATCH, DeadlineUnmeetable,
+                                    interactive_tier)
 
 GOLDEN_DIR = pathlib.Path(__file__).resolve().parent / "golden"
 
@@ -336,10 +338,88 @@ def test_commit_skips_replica_killed_after_prepare(artifacts):
         fleet.kill_replica("r1")
         rep = fleet.commit_swap(prepared)
         assert list(rep.blackout_s) == ["r0"]
+        assert rep.not_cut == {"r1": "replica unhealthy at commit"}
         assert fleet.admitted_tags("m") == {"r0": rep.new_tag}
         handles = [fleet.submit("m", r) for r in rows]
         for i, h in enumerate(handles):
             assert np.array_equal(h.result(timeout=30.0), want[i])
+
+
+def test_commit_absorbs_replica_killed_mid_commit(artifacts):
+    """The narrower race: a replica passes the ``healthy`` check but
+    its registry dies before ``registry.commit`` runs (a kill landing
+    INSIDE the commit loop).  The commit exception must not escape
+    mid-loop — that would leave the fleet half-old/half-new with no
+    report and the remaining prepared entries never abandoned.  The
+    racing replica is recorded in ``not_cut``, the survivors cut over
+    and serve.  (Closing the registry while ``healthy`` stays True IS
+    the racing state: the health check passes, the commit fails.)"""
+    rows = _rows(24, seed=29)
+    want = _want(1, rows)
+    with LutFleet(3, microbatch=8, deadline_s=0.003) as fleet:
+        fleet.distribute_artifact(artifacts[0], "m")
+        prepared = fleet.prepare_swap("m", artifacts[1])
+        fleet._replica("r1").registry.close()
+        assert fleet._replica("r1").healthy          # the race, exactly
+        rep = fleet.commit_swap(prepared)            # must NOT raise
+        assert set(rep.not_cut) == {"r1"}
+        assert "r1" not in rep.old_tags
+        assert sorted(rep.blackout_s) == ["r0", "r2"]
+        assert sorted(rep.drained_requests) == ["r0", "r2"]
+        # survivors serve the new version; submits racing onto the dead
+        # registry re-route (UnknownModelError absorption in _dispatch)
+        handles = [fleet.submit("m", r) for r in rows]
+        for i, h in enumerate(handles):
+            assert np.array_equal(h.result(timeout=30.0), want[i])
+            assert h.version_tag == rep.new_tag
+            assert h.replica_id in ("r0", "r2")
+
+
+# ---------------------------------------------------------------------------
+# SLO tiers through the fleet (launch/scheduler.py wiring)
+# ---------------------------------------------------------------------------
+
+def test_fleet_tier_routing_bit_exact(artifacts):
+    """A tiered fleet serves mixed interactive/batch traffic bit-exact
+    vs the single-host oracle — tier-aware routing changes placement,
+    never numerics — and generous deadlines shed nothing."""
+    rows = _rows(48, seed=31)
+    want = _want(0, rows)
+    tiers = [interactive_tier(60.0), BATCH]
+    with LutFleet(2, microbatch=8, deadline_s=0.003,
+                  slo_tiers=tiers, work_stealing=True) as fleet:
+        fleet.distribute_artifact(artifacts[0], "m")
+        handles = [fleet.submit("m", r, tier=tiers[i % 2])
+                   for i, r in enumerate(rows)]
+        for i, h in enumerate(handles):
+            assert np.array_equal(h.result(timeout=30.0), want[i]), i
+        assert fleet.sheds == 0
+        st = fleet.stats()
+        assert sum(v["served"] for v in st.values()) == len(rows)
+
+
+def test_fleet_sheds_provably_late_request_typed(artifacts):
+    """Once every replica has flush history, a deadline-class request
+    whose deadline is provably unmeetable on ALL of them is shed with
+    the typed DeadlineUnmeetable BEFORE dispatch (fleet.sheds counts
+    it) — while batch-tier traffic keeps flowing."""
+    rows = _rows(32, seed=37)
+    with LutFleet(2, microbatch=4, deadline_s=0.003,
+                  slo_tiers=[interactive_tier(60.0), BATCH]) as fleet:
+        fleet.distribute_artifact(artifacts[0], "m")
+        # warm BOTH replicas into kernel/service history
+        warm = [fleet.submit("m", r, tier=BATCH) for r in rows]
+        for h in warm:
+            h.result(timeout=30.0)
+        assert all(
+            r.registry.estimate_delay_s("m") is not None
+            for r in fleet.replicas)
+        with pytest.raises(DeadlineUnmeetable, match="shed"):
+            fleet.submit("m", rows[0], tier=interactive_tier(1e-9))
+        assert fleet.sheds == 1
+        ok = fleet.submit("m", rows[0], tier=BATCH)  # still serving
+        assert np.array_equal(ok.result(timeout=30.0),
+                              _want(0, rows[:1])[0])
 
 
 # ---------------------------------------------------------------------------

@@ -18,7 +18,14 @@ import numpy as np
 import pytest
 
 from repro.launch.batching import (BatcherStopped, MicroBatcher,
-                                   replay_open_loop)
+                                   latency_percentiles_ms, replay_open_loop)
+from repro.launch.scheduler import ScoreboardScheduler
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:              # container may not ship hypothesis
+    HAVE_HYPOTHESIS = False
 
 N_FEAT = 4
 
@@ -232,3 +239,186 @@ def test_replay_open_loop_serves_everything():
     for r, h in zip(rows, handles):
         assert np.array_equal(h.result(), _engine(r[None])[0])
     assert sum(f.fill for f in mb.flushes) == 40
+
+
+def test_failed_flush_still_records_telemetry():
+    """A failed flush appends a FlushRecord with failed=True, the
+    original cause, the real fill, and time-to-fault as kernel_s.
+    (Regression: _flush used to return early on engine failure WITHOUT
+    a record, so telemetry under-counted exactly the flushes that
+    tail-latency attribution cares about most.)"""
+    state = {"fail": True}
+
+    def flaky(batch):
+        if state["fail"]:
+            raise ValueError("boom")
+        return _engine(batch)
+
+    with MicroBatcher(flaky, microbatch=2, deadline_s=0.02,
+                      n_features=N_FEAT) as mb:
+        bad = [mb.submit(np.arange(N_FEAT)) for _ in range(2)]
+        for h in bad:
+            with pytest.raises(RuntimeError):
+                h.result(timeout=5.0)
+        state["fail"] = False
+        good = mb.submit(np.arange(N_FEAT))
+        good.result(timeout=5.0)
+    failed = [f for f in mb.flushes if f.failed]
+    assert len(failed) == 1
+    assert failed[0].fill == 2
+    assert failed[0].cause == "full"     # cause preserved, not rewritten
+    assert failed[0].kernel_s >= 0.0     # time-to-fault
+    ok = [f for f in mb.flushes if not f.failed]
+    assert ok and all(f.cause in ("full", "deadline", "stop") for f in ok)
+    # accounting: every submit shows up in exactly one record
+    assert sum(f.fill for f in mb.flushes) == 3
+
+
+def test_latency_percentiles_exclude_failed_by_default():
+    """Failed handles carry time-to-FAULT, not service latency — mixing
+    them into the percentiles corrupts the p99 the benchmarks report.
+    Default excludes them; include_failed=True opts back in; an
+    all-failed (or empty) population yields NaNs, not a crash."""
+    state = {"n": 0}
+
+    def every_other(batch):
+        state["n"] += 1
+        if state["n"] % 2 == 0:
+            time.sleep(0.05)             # slow FAILED flush
+            raise ValueError("boom")
+        return _engine(batch)
+
+    with MicroBatcher(every_other, microbatch=1, deadline_s=0.01,
+                      n_features=N_FEAT) as mb:
+        hs = []
+        for _ in range(6):
+            h = mb.submit(np.arange(N_FEAT))
+            try:
+                h.result(timeout=5.0)
+            except RuntimeError:
+                pass
+            hs.append(h)
+    ok_only = latency_percentiles_ms(hs)
+    with_failed = latency_percentiles_ms(hs, include_failed=True)
+    assert len(ok_only) == 3 and not any(np.isnan(ok_only))
+    # the slow failed flushes dominate the tail when opted back in
+    assert with_failed[-1] > ok_only[-1]
+    failed_only = [h for h in hs if h.failed]
+    assert failed_only
+    assert all(np.isnan(v) for v in latency_percentiles_ms(failed_only))
+    assert all(np.isnan(v) for v in latency_percentiles_ms([]))
+    assert not any(np.isnan(v) for v in latency_percentiles_ms(
+        failed_only, include_failed=True))
+
+
+@pytest.mark.parametrize("scheduled", [False, True],
+                         ids=["fifo", "scoreboard"])
+def test_stop_during_deadline_wait_returns_promptly(scheduled):
+    """stop() must interrupt a collect blocked in its DEADLINE WAIT —
+    a partial batch under a long deadline drains immediately instead
+    of holding the caller for the rest of the deadline."""
+    sched = ScoreboardScheduler() if scheduled else None
+    mb = MicroBatcher(_engine, microbatch=8, deadline_s=30.0,
+                      n_features=N_FEAT, scheduler=sched).start()
+    h = mb.submit(np.arange(N_FEAT))
+    time.sleep(0.05)                     # loop is now in the deadline wait
+    t0 = time.monotonic()
+    mb.stop()
+    assert time.monotonic() - t0 < 5.0   # not the 30 s deadline
+    assert np.array_equal(h.result(timeout=1.0),
+                          _engine(np.arange(N_FEAT)[None])[0])
+    assert [f.cause for f in mb.flushes] == ["stop"]
+
+
+@pytest.mark.parametrize("scheduled", [False, True],
+                         ids=["fifo", "scoreboard"])
+def test_submit_racing_stop_is_served_or_typed(scheduled):
+    """One submit racing one stop(), many timings: the submit either
+    raises the TYPED BatcherStopped or returns a handle that COMPLETES.
+    A handle whose event never fires is the forbidden third outcome."""
+    for trial in range(30):
+        sched = ScoreboardScheduler() if scheduled else None
+        mb = MicroBatcher(_engine, microbatch=4, deadline_s=0.001,
+                          n_features=N_FEAT, scheduler=sched).start()
+        barrier = threading.Barrier(2)
+        box = {}
+
+        def race_submit():
+            barrier.wait()
+            try:
+                box["h"] = mb.submit(np.arange(N_FEAT))
+            except BatcherStopped:
+                box["rejected"] = True
+
+        t = threading.Thread(target=race_submit)
+        t.start()
+        barrier.wait()
+        if trial % 3:
+            time.sleep(trial % 3 * 1e-4)
+        mb.stop()
+        t.join()
+        assert ("h" in box) != ("rejected" in box)
+        if "h" in box:
+            out = box["h"].result(timeout=5.0)   # TimeoutError = hang
+            assert np.array_equal(out, _engine(np.arange(N_FEAT)[None])[0])
+
+
+# --- property: no stop timing may strand a handle ------------------------
+
+def _no_stranded_handle_property(n_threads: int, n_each: int,
+                                 stop_delay_s: float, microbatch: int,
+                                 scheduled: bool) -> None:
+    """Invariant under ANY stop timing: every submit either raises the
+    typed BatcherStopped or yields a handle whose event fires."""
+    sched = ScoreboardScheduler() if scheduled else None
+    mb = MicroBatcher(_engine, microbatch=microbatch, deadline_s=0.001,
+                      n_features=N_FEAT, scheduler=sched).start()
+    served = []
+    go = threading.Event()
+
+    def hammer():
+        go.wait()
+        for i in range(n_each):
+            try:
+                served.append(mb.submit(np.full(N_FEAT, i, np.int32)))
+            except BatcherStopped:
+                pass
+
+    threads = [threading.Thread(target=hammer) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    go.set()
+    if stop_delay_s:
+        time.sleep(stop_delay_s)
+    mb.stop()
+    for t in threads:
+        t.join()
+    for h in served:
+        h.result(timeout=5.0)            # raises TimeoutError on a hang
+    assert all(h._event.is_set() for h in served)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None)
+    @given(n_threads=st.integers(1, 4), n_each=st.integers(1, 30),
+           stop_delay_ms=st.floats(0.0, 5.0),
+           microbatch=st.sampled_from([1, 3, 8]),
+           scheduled=st.booleans())
+    def test_no_stranded_handle_property(n_threads, n_each,
+                                         stop_delay_ms, microbatch,
+                                         scheduled):
+        _no_stranded_handle_property(n_threads, n_each,
+                                     stop_delay_ms / 1e3, microbatch,
+                                     scheduled)
+
+
+def test_no_stranded_handle_seeded():
+    """Seeded stand-in for the hypothesis property (always runs)."""
+    rng = np.random.default_rng(11)
+    for _ in range(10):
+        _no_stranded_handle_property(
+            n_threads=int(rng.integers(1, 5)),
+            n_each=int(rng.integers(1, 31)),
+            stop_delay_s=float(rng.uniform(0.0, 5e-3)),
+            microbatch=int(rng.choice([1, 3, 8])),
+            scheduled=bool(rng.integers(0, 2)))
