@@ -50,6 +50,15 @@ counters, and the zero-silent-drop contract (every non-served request
 is a typed ``DeadlineUnmeetable``; tests/test_bench_schema.py pins it
 at every replica count);
 
+plus an ``rpc_fleet`` section (schema v9): what the cross-process
+socket transport costs over threads-as-hosts — per-request wire
+overhead p50/p99 (closed-loop, microbatch 1, thread fleet vs a real
+worker process behind the length-prefixed RPC), streamed slab-transfer
+throughput with the worker's SHA-256 admission re-hash on the clock,
+and the heartbeat prober's detection latency for a SIGKILLed worker
+(contracts: zero drops, percentile ordering, real bytes moved, death
+detected);
+
 plus a ``segmented`` section (schema v6): the over-budget regime — a
 deeper/wider net whose table slabs want ~3x the fused VMEM budget, so
 ``ops.plan_segments`` cuts it into the fewest fused segments that fit
@@ -114,6 +123,7 @@ serving work) so cross-bench dashboards can read a uniform key.
 from __future__ import annotations
 
 import json
+import os
 import pathlib
 import shutil
 import tempfile
@@ -574,9 +584,22 @@ def _bench_fleet(fast: bool):
         sum(1 for h in handles if h.version_tag == rep.new_tag))
 
     # crash drill: host death with requests in flight — re-dispatch
-    # must leave nothing dropped or hung
+    # must leave nothing dropped or hung.  The engines get a per-flush
+    # sleep floor so the backlog cannot fully drain between the last
+    # submit and the kill (unpaced interpret-mode engines race the
+    # ~µs submit loop and the drill's "in flight" premise evaporates —
+    # the retried>0 contract in tests/test_bench_schema.py needs the
+    # victim to actually hold work when it dies)
     with LutFleet(3, microbatch, deadline_s=0.05) as fleet:
         fleet.distribute_artifact(p1, "m")
+        for r in fleet.replicas:
+            b = r.registry.get("m").batcher
+
+            def paced(x, _inner=b.serve_fn):
+                time.sleep(0.01)
+                return _inner(x)
+
+            b.serve_fn = paced
         handles = [fleet.submit("m", r) for r in rows]
         victim = max(fleet.stats().items(),
                      key=lambda kv: kv[1]["outstanding"])[0]
@@ -592,6 +615,123 @@ def _bench_fleet(fast: bool):
     out["crash_requests"] = len(handles)
     out["crash_dropped"] = int(len(handles) - done)
     out["crash_retried"] = int(sum(h.retries for h in handles))
+    return out
+
+
+def _bench_rpc_fleet(fast: bool):
+    """Cross-process RPC fleet ledger (schema v9): what the socket
+    transport costs over the in-process thread fleet.  Three series:
+
+    * wire overhead — closed-loop serial submits (microbatch 1, so
+      every request is its own flush) through a 1-replica THREAD fleet
+      and a 1-worker PROCESS fleet over the length-prefixed socket RPC;
+      ``wire_overhead_p50/p99_ms`` is the per-request latency delta
+      (serialize + frame + TCP loopback + worker-side dispatch, both
+      directions).  On a shared CPU the delta is noisy, so the pinned
+      contracts are percentile ordering and zero drops, not the
+      delta's sign.
+    * slab-transfer throughput — one streamed FETCH_BEGIN/CHUNK/END
+      artifact push into the worker's store, SHA-256 re-hashed by the
+      worker on receipt (the admission gate), timed end-to-end.
+    * death-detection latency — SIGKILL the worker process directly
+      (no cooperative close), then measure how long the fleet takes to
+      mark the replica down and bump the membership epoch.  The kernel
+      closes the dead process's sockets, so on one box conn-loss
+      usually fires before a heartbeat miss; the heartbeat prober is
+      the backstop for true silence (a partition leaves the socket
+      open), and ``heartbeat_interval_ms`` bounds that worst case.
+
+    Hardware-independent contracts (pinned by
+    tests/test_bench_schema.py): ``rpc_dropped == 0``, p50 <= p99 in
+    both latency series, the slab transfer moved real bytes, and the
+    silent death WAS detected."""
+    from repro.artifact import save_artifact
+    from repro.artifact.store import MANIFEST, SLAB_FILE
+    from repro.launch.fleet import LutFleet
+    from repro.launch.serve import build_lut_model
+
+    microbatch = 1             # every submit is its own flush: the
+    deadline_s = 2e-3          # closed loop times REQUESTS, not waits
+    requests = 96 if fast else 256
+    train_steps = 40 if fast else 150
+    heartbeat_s = 0.05
+
+    spec, tables, _ = build_lut_model(train_steps, seed=0)
+    tmp = tempfile.mkdtemp(prefix="lut-bench-rpc-")
+    p1 = save_artifact(tmp, tables, name="rpc-v1", spec=spec)
+    rows = np.asarray(jax.random.randint(
+        jax.random.key(11), (requests, spec.in_features), 0, 4), np.int32)
+
+    def closed_loop(fleet):
+        lat, dropped = [], 0
+        for r in rows[:8]:     # warm: JIT + first-flush costs off-path
+            fleet.submit("m", r).result(timeout=60.0)
+        for r in rows:
+            t0 = time.monotonic()
+            h = fleet.submit("m", r)
+            try:
+                h.result(timeout=60.0)
+                lat.append((time.monotonic() - t0) * 1e3)
+            except RuntimeError:
+                dropped += 1
+        return lat, dropped
+
+    with LutFleet(1, microbatch, deadline_s) as fleet:
+        fleet.distribute_artifact(p1, "m")
+        inproc_lat, inproc_drop = closed_loop(fleet)
+
+    out = {
+        "workers": 1,
+        "microbatch": microbatch,
+        "requests": requests,
+        "inproc_p50_ms": round(float(np.percentile(inproc_lat, 50)), 3),
+        "inproc_p99_ms": round(float(np.percentile(inproc_lat, 99)), 3),
+    }
+
+    with LutFleet(1, microbatch, deadline_s, transport="process",
+                  heartbeat_s=heartbeat_s,
+                  heartbeat_miss_limit=2) as fleet:
+        fleet.distribute_artifact(p1, "m")
+        rpc_lat, rpc_drop = closed_loop(fleet)
+
+        # slab-transfer throughput: stream the artifact again, timed in
+        # isolation (the worker pre-clears the destination, so a repeat
+        # fetch is a pure transfer + re-hash, no register/warm cost)
+        r = fleet._replica("r0")
+        slab_bytes = sum(os.path.getsize(os.path.join(p1, f))
+                         for f in (MANIFEST, SLAB_FILE))
+        t0 = time.monotonic()
+        r.registry.fetch(p1)
+        xfer_s = time.monotonic() - t0
+
+        # heartbeat detection: kill the worker process out from under
+        # the fleet and wait for the prober to notice
+        epoch0 = fleet.membership()["epoch"]
+        r.proc.kill()
+        t0 = time.monotonic()
+        detect_s = None
+        while time.monotonic() - t0 < 30.0:
+            if "r0" not in fleet.healthy_replicas():
+                detect_s = time.monotonic() - t0
+                break
+            time.sleep(0.005)
+        detected = (detect_s is not None
+                    and fleet.membership()["epoch"] > epoch0)
+    shutil.rmtree(tmp, ignore_errors=True)
+
+    out["rpc_p50_ms"] = round(float(np.percentile(rpc_lat, 50)), 3)
+    out["rpc_p99_ms"] = round(float(np.percentile(rpc_lat, 99)), 3)
+    out["wire_overhead_p50_ms"] = round(
+        out["rpc_p50_ms"] - out["inproc_p50_ms"], 3)
+    out["wire_overhead_p99_ms"] = round(
+        out["rpc_p99_ms"] - out["inproc_p99_ms"], 3)
+    out["rpc_dropped"] = int(inproc_drop + rpc_drop)
+    out["slab_bytes"] = int(slab_bytes)
+    out["slab_transfer_ms"] = round(xfer_s * 1e3, 2)
+    out["slab_transfer_mb_s"] = round(slab_bytes / xfer_s / 2**20, 2)
+    out["heartbeat_interval_ms"] = heartbeat_s * 1e3
+    out["heartbeat_detect_ms"] = (
+        round(detect_s * 1e3, 1) if detected else -1.0)
     return out
 
 
@@ -818,6 +958,7 @@ def run(fast: bool = False, write_json: bool = False):
     serving = _bench_serving(fast)
     artifact = _bench_artifact(fast)
     fleet = _bench_fleet(fast)
+    rpc_fleet = _bench_rpc_fleet(fast)
     scheduler = _bench_scheduler(fast)
     connectivity = _bench_connectivity(fast)
 
@@ -882,6 +1023,15 @@ def run(fast: bool = False, write_json: bool = False):
           fleet["swap_dropped"], fleet["crash_dropped"],
           fleet["crash_retried"]]])
     print_table(
+        "RPC fleet: socket transport vs in-process (1 worker)",
+        ["inproc-p50-ms", "rpc-p50-ms", "wire-p50-ms", "wire-p99-ms",
+         "slab-MB/s", "hb-detect-ms", "dropped"],
+        [[rpc_fleet["inproc_p50_ms"], rpc_fleet["rpc_p50_ms"],
+          rpc_fleet["wire_overhead_p50_ms"],
+          rpc_fleet["wire_overhead_p99_ms"],
+          rpc_fleet["slab_transfer_mb_s"],
+          rpc_fleet["heartbeat_detect_ms"], rpc_fleet["rpc_dropped"]]])
+    print_table(
         "SLO scheduler: 2-tier Poisson @ 2x r1 capacity, {1,2,4} replicas",
         ["replicas", "int-p50-ms", "int-p99-ms", "attainment",
          "shed-rate", "batch-req/s", "steals", "silent-drops"],
@@ -904,7 +1054,7 @@ def run(fast: bool = False, write_json: bool = False):
 
     payload = {
         "bench": "lut_infer",
-        "schema_version": 8,
+        "schema_version": 9,
         "backend": jax.default_backend(),
         "interpret": jax.default_backend() != "tpu",
         "fast": fast,
@@ -913,6 +1063,7 @@ def run(fast: bool = False, write_json: bool = False):
         "serving": serving,
         "artifact": artifact,
         "fleet": fleet,
+        "rpc_fleet": rpc_fleet,
         "scheduler": scheduler,
         "connectivity": connectivity,
     }

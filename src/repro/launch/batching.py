@@ -31,6 +31,8 @@ from typing import Any, Callable, List, Optional, Sequence
 
 import numpy as np
 
+from repro.launch.scheduler import DeadlineUnmeetable
+
 
 @dataclasses.dataclass
 class RequestHandle:
@@ -238,6 +240,11 @@ class MicroBatcher:
         if self.scheduler is not None:
             with self._cond:
                 self._cond.notify()
+            # the board just went steal-eligible: wake idle siblings
+            # NOW instead of leaving the overflow to their poll cadence
+            if (self.steal_group is not None
+                    and self.scheduler.scoreboard.depth() > self.microbatch):
+                self.steal_group.notify_work(self)
         return h
 
     # -- batcher thread ----------------------------------------------
@@ -303,7 +310,17 @@ class MicroBatcher:
             oldest = sb.oldest_t_submit()
             if oldest is None:
                 return [], cause
-            timeout = oldest + self.deadline_s - time.monotonic()
+            flush_at = oldest + self.deadline_s
+            # an admitted deadline-class request must not wait out the
+            # full batcher flush deadline: flush early enough that its
+            # HARD deadline_at is still met after one service interval
+            # (fill-normalized estimate of the flush we would issue)
+            edl = sb.earliest_deadline_at()
+            if edl is not None:
+                est = (self.scheduler.service_estimate_s(fill=depth)
+                       or self.scheduler.kernel_estimate_s() or 0.0)
+                flush_at = min(flush_at, edl - est)
+            timeout = flush_at - time.monotonic()
             if timeout <= 0:
                 break
             with self._cond:
@@ -337,8 +354,10 @@ class MicroBatcher:
         if ok and self.scheduler is not None:
             # whole-flush service interval (fill + engine + completion)
             # feeds the admission estimator — the kernel time alone
-            # under-counts by the per-flush overhead
-            self.scheduler.note_service(time.monotonic() - t_enter)
+            # under-counts by the per-flush overhead.  The FILL rides
+            # along so the estimator can normalize by batch size.
+            self.scheduler.note_service(time.monotonic() - t_enter,
+                                        fill=n)
 
     def _flush_inner(self, pending, cause, buf, n, fkey) -> bool:
         if buf is None:
@@ -397,34 +416,73 @@ class MicroBatcher:
                 return
 
 
-def replay_open_loop(batcher: MicroBatcher, rows: np.ndarray,
+class ReplayResult(List[Optional[RequestHandle]]):
+    """Handles from one open-loop replay — a ``list`` (backward
+    compatible with every pre-tier caller) with the replay's accounting
+    riding along.  Entry ``i`` is ``None`` exactly when request ``i``
+    was SHED by admission control with the typed ``DeadlineUnmeetable``
+    (possible only when ``tiers`` were supplied) — a shed is a typed
+    rejection, never a silent drop."""
+
+    def __init__(self, handles, tiers=None, sheds: int = 0,
+                 span_s: float = 0.0):
+        super().__init__(handles)
+        self.tiers = tiers          # per-request SLO tier (or None)
+        self.sheds = sheds          # typed admission rejections
+        self.span_s = span_s        # first submit -> last completion
+
+
+def replay_open_loop(batcher, rows: np.ndarray,
                      rate: float, seed: int = 0,
-                     timeout_s: float = 120.0) -> List[RequestHandle]:
+                     timeout_s: float = 120.0,
+                     tiers: Optional[Sequence] = None) -> ReplayResult:
     """Submit ``rows`` as a Poisson open-loop arrival process on the
     REAL clock (exponential inter-arrival gaps at ``rate`` req/s; gaps
     the OS cannot sleep are submitted immediately, i.e. the offered
     load saturates at the submitter's speed).  Blocks until every
-    request COMPLETES and returns the handles for latency analysis.
-    Engine failures do not raise here — they stay recorded on the
-    affected handles (``h.failed``) so callers can count them; only a
-    genuine hang (nothing completing within ``timeout_s``) raises.
+    ADMITTED request COMPLETES and returns the handles for latency
+    analysis.  Engine failures do not raise here — they stay recorded
+    on the affected handles (``h.failed``) so callers can count them;
+    only a genuine hang (nothing completing within ``timeout_s``)
+    raises.
+
+    ``tiers`` (a sequence of ``scheduler.SLOTier``) makes the stream
+    mixed-tier: request ``i`` carries ``tiers[i % len(tiers)]``, and a
+    deadline-class request the target sheds with the typed
+    ``DeadlineUnmeetable`` is absorbed into the accounting (``None``
+    handle + ``sheds``) instead of escaping mid-replay — this is the
+    ONE Poisson driver the plain, tiered, and fleet harnesses share.
+    ``batcher`` is anything with ``submit(x, tier=...)``: a
+    ``MicroBatcher``, a ``RegistryClient``, or a ``FleetClient``.
     """
     rng = np.random.default_rng(seed)
     gaps = rng.exponential(1.0 / rate, len(rows))
-    handles = []
-    t_next = time.monotonic()
-    for row, gap in zip(rows, gaps):
+    handles: List[Optional[RequestHandle]] = []
+    tier_of = []
+    sheds = 0
+    t0 = time.monotonic()
+    t_next = t0
+    for i, (row, gap) in enumerate(zip(rows, gaps)):
         t_next += gap
         dt = t_next - time.monotonic()
         if dt > 0:
             time.sleep(dt)
-        handles.append(batcher.submit(row))
+        tier = tiers[i % len(tiers)] if tiers else None
+        tier_of.append(tier)
+        try:
+            handles.append(batcher.submit(row, tier=tier))
+        except DeadlineUnmeetable:
+            handles.append(None)
+            sheds += 1
     for h in handles:
+        if h is None:
+            continue
         try:
             h.result(timeout=timeout_s)
         except RuntimeError:
             pass                 # failed batch: counted by the caller
-    return handles
+    return ReplayResult(handles, tiers=tier_of, sheds=sheds,
+                        span_s=time.monotonic() - t0)
 
 
 def latency_percentiles_ms(handles: Sequence[RequestHandle],

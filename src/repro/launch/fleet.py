@@ -37,10 +37,27 @@ Three fleet-level contracts, each pinned by tests/test_fleet.py:
   the MicroBatcher), so the harness can prove the cutover window never
   serves anything but old-or-new and no microbatch ever mixes versions.
 
-What is deliberately NOT here (recorded in ROADMAP.md): a real RPC
-transport (replicas share an address space; ``copy_artifact`` stands in
-for the wire) and cross-process replica discovery.  The routing,
-verification, and two-phase-commit logic is transport-agnostic.
+The fleet runs over TWO transports behind one router:
+
+* ``transport="thread"`` — replicas are in-process registries (the
+  original stand-in: ``copy_artifact`` plays the wire), still the
+  default for the pure scheduling/consistency harnesses.
+* ``transport="process"`` — replicas are REAL worker processes
+  (``launch/worker.py``) behind the length-prefixed socket RPC of
+  ``launch/transport.py``: submits, two-phase swaps, and artifact
+  distribution (streaming slab transfer, per-slab SHA-256 re-verified
+  on receipt) all cross a process boundary.  Membership is versioned
+  by a root-owned EPOCH counter (every join/leave/death bumps it) and
+  liveness comes from a heartbeat prober — not injected flags: a
+  worker that misses ``heartbeat_miss_limit`` consecutive pings is
+  declared dead, its in-flight requests fail over via their
+  ``FleetHandle``, and the router stops picking it.
+
+``_pick``/``_dispatch``/``prepare_swap``/``commit_swap`` are shared
+verbatim across both transports — a replica is a pure execution
+placement, so every contract above holds bit-for-bit over the wire
+(tests/test_process_fleet.py re-pins them through real SIGKILL,
+socket partition, and in-flight slab corruption).
 """
 from __future__ import annotations
 
@@ -60,6 +77,7 @@ from repro.artifact.store import SLAB_FILE
 from repro.launch.registry import (ModelEntry, ModelRegistry, SwapReport,
                                    UnknownModelError)
 from repro.launch.scheduler import DeadlineUnmeetable, SLOTier
+from repro.launch.worker import RemoteRegistry, spawn_worker
 
 
 class FleetError(RuntimeError):
@@ -98,6 +116,30 @@ class Replica:
     verify_failures: int = 0             # copies rejected at admission
     fetch_faults: int = 0                # injected corruptions pending
     admitted: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class ProcessReplica(Replica):
+    """A real worker process behind the socket transport.  ``registry``
+    is a ``worker.RemoteRegistry`` proxy duck-typing the in-process
+    surface, so every router code path is shared with ``Replica``."""
+
+    proc: Any = None                     # subprocess.Popen
+    port: int = 0
+    missed_beats: int = 0                # consecutive failed heartbeats
+
+
+@dataclasses.dataclass
+class _FetchAcct:
+    """Per-rollout fetch accounting.  ``Replica.fetches`` /
+    ``verify_failures`` are fleet-lifetime counters shared by every
+    concurrent rollout; a distribution report must count only ITS OWN
+    attempts, so ``_fetch_verified`` accumulates into one of these
+    under the router lock instead of callers diffing the shared
+    counters outside it."""
+
+    fetches: int = 0
+    verify_failures: int = 0
 
 
 @dataclasses.dataclass
@@ -238,33 +280,172 @@ class LutFleet:
                  store_root: Optional[str] = None,
                  max_fetch_retries: int = 2,
                  slo_tiers: Optional[List[SLOTier]] = None,
-                 work_stealing: bool = False):
+                 work_stealing: bool = False,
+                 transport: str = "thread",
+                 heartbeat_s: float = 0.25,
+                 heartbeat_miss_limit: int = 3):
         if n_replicas < 1:
             raise ValueError("a fleet needs at least one replica")
+        if transport not in ("thread", "process"):
+            raise ValueError(f"unknown transport {transport!r}")
+        if transport == "process" and mesh is not None:
+            raise ValueError("a device mesh cannot cross the process "
+                             "transport — workers own their devices")
+        self.transport = transport
         self.max_fetch_retries = max_fetch_retries
         self.slo_tiers = list(slo_tiers) if slo_tiers else None
         self.sheds = 0               # requests shed before dispatch
+        self.heartbeat_s = float(heartbeat_s)
+        self.heartbeat_miss_limit = int(heartbeat_miss_limit)
+        # membership: a root-owned epoch counter — every join, leave,
+        # and declared death bumps it (see transport.py "Epoch
+        # semantics"); the event log names each bump
+        self.epoch = 0
+        self.membership_events: List[Dict[str, Any]] = []
         self._lock = threading.Lock()
         self._own_store = store_root is None
         self.store_root = store_root or tempfile.mkdtemp(prefix="lut-fleet-")
         self.replicas: List[Replica] = []
-        for i in range(n_replicas):
+        self._hb_stop = threading.Event()
+        self._hb_thread: Optional[threading.Thread] = None
+        self._worker_config = {
+            "microbatch": microbatch, "deadline_s": deadline_s,
+            "force_interpret": force_interpret,
+            "work_stealing": work_stealing,
+            "slo_tiers": ([{"name": t.name, "deadline_s": t.deadline_s}
+                           for t in slo_tiers] if slo_tiers else None)}
+        if transport == "process":
+            self._spawn_workers(n_replicas)
+            self._hb_thread = threading.Thread(
+                target=self._heartbeat_loop, daemon=True,
+                name="fleet-heartbeat")
+            self._hb_thread.start()
+        else:
+            for i in range(n_replicas):
+                rid = f"r{i}"
+                store = os.path.join(self.store_root, rid)
+                os.makedirs(store, exist_ok=True)
+                reg = ModelRegistry(
+                    microbatch, deadline_s, mesh=mesh,
+                    force_interpret=force_interpret,
+                    engine_hook=lambda mid, batch, rid=rid:
+                        self._engine_gate(rid),
+                    slo_tiers=slo_tiers, work_stealing=work_stealing)
+                self.replicas.append(Replica(replica_id=rid, registry=reg,
+                                             store_dir=store))
+                self._bump_epoch("join", rid)
+
+    def _spawn_workers(self, n: int) -> None:
+        """Spawn + HELLO all workers in parallel (each spawn pays a
+        Python/JAX cold start; hosts would come up concurrently).  Any
+        failure tears down the ones that made it and raises."""
+        results: Dict[str, ProcessReplica] = {}
+        errors: Dict[str, str] = {}
+
+        def one(i: int) -> None:
             rid = f"r{i}"
             store = os.path.join(self.store_root, rid)
             os.makedirs(store, exist_ok=True)
-            reg = ModelRegistry(
-                microbatch, deadline_s, mesh=mesh,
-                force_interpret=force_interpret,
-                engine_hook=lambda mid, batch, rid=rid:
-                    self._engine_gate(rid),
-                slo_tiers=slo_tiers, work_stealing=work_stealing)
-            self.replicas.append(Replica(replica_id=rid, registry=reg,
-                                         store_dir=store))
+            try:
+                proc, port = spawn_worker(store)
+                reg = RemoteRegistry(
+                    proc, port,
+                    on_dead=lambda exc, rid=rid: self._conn_lost(rid))
+                reg.hello(dict(self._worker_config, epoch=i + 1))
+                results[rid] = ProcessReplica(
+                    replica_id=rid, registry=reg, store_dir=store,
+                    proc=proc, port=port)
+            except Exception as e:
+                errors[rid] = str(e)
+
+        threads = [threading.Thread(target=one, args=(i,))
+                   for i in range(n)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        if errors:
+            for r in results.values():
+                try:
+                    r.registry.close()
+                except Exception:
+                    pass
+            raise FleetError(f"worker spawn failed: {errors}")
+        for rid in sorted(results, key=lambda s: int(s[1:])):
+            self.replicas.append(results[rid])
+            self._bump_epoch("join", rid)
+
+    # -- membership ---------------------------------------------------
+    def _bump_epoch(self, event: str, replica_id: str) -> int:
+        with self._lock:
+            self.epoch += 1
+            self.membership_events.append(
+                {"epoch": self.epoch, "event": event,
+                 "replica_id": replica_id, "t": time.monotonic()})
+            return self.epoch
+
+    def membership(self) -> Dict[str, Any]:
+        """The current membership view: epoch, per-replica up/down, and
+        the full join/leave/death event log."""
+        with self._lock:
+            return {"epoch": self.epoch,
+                    "events": list(self.membership_events),
+                    "replicas": {r.replica_id:
+                                 ("up" if r.healthy else "down")
+                                 for r in self.replicas}}
+
+    def _conn_lost(self, replica_id: str) -> None:
+        """The replica's connection died (reader thread callback): mark
+        it down and bump the epoch.  In-flight handles were already
+        failed by the transport — their FleetHandles re-dispatch."""
+        try:
+            r = self._replica(replica_id)
+        except FleetError:
+            return
+        with self._lock:
+            if not r.healthy:
+                return
+            r.healthy = False
+        self._bump_epoch("conn-lost", replica_id)
+
+    def _heartbeat_loop(self) -> None:
+        """Liveness prober: PING every process replica each interval;
+        ``heartbeat_miss_limit`` consecutive misses declare it dead
+        (down + epoch bump — no injected flags).  Ping replies carry
+        per-model delay estimates, refreshing the router's cached
+        ``estimate_delay_s`` view as a side effect."""
+        while not self._hb_stop.wait(self.heartbeat_s):
+            for r in self.replicas:
+                if not isinstance(r, ProcessReplica):
+                    continue
+                with self._lock:
+                    if not r.healthy:
+                        continue
+                try:
+                    r.registry.ping(timeout=max(1.0, 4 * self.heartbeat_s))
+                except Exception:
+                    with self._lock:
+                        r.missed_beats += 1
+                        declared = (r.healthy and r.missed_beats
+                                    >= self.heartbeat_miss_limit)
+                        if declared:
+                            r.healthy = False
+                    if declared:
+                        self._bump_epoch("heartbeat-dead", r.replica_id)
+                else:
+                    with self._lock:
+                        r.missed_beats = 0
 
     # -- lifecycle ----------------------------------------------------
     def close(self) -> None:
+        self._hb_stop.set()
+        if self._hb_thread is not None:
+            self._hb_thread.join(timeout=10.0)
         for r in self.replicas:
-            r.registry.close()
+            try:
+                r.registry.close()
+            except Exception:
+                pass               # a dead worker's close is best-effort
         if self._own_store:
             shutil.rmtree(self.store_root, ignore_errors=True)
 
@@ -289,16 +470,45 @@ class LutFleet:
             raise ReplicaCrashed(replica_id)
 
     def kill_replica(self, replica_id: str) -> None:
-        """Simulated host death.  The replica leaves the routing set
-        immediately, every batch it still holds FAILS (no graceful
-        drain — the engine gate raises), and its registry is torn down.
-        Affected requests re-dispatch through their FleetHandle; the
-        fleet-level contract stays zero-dropped."""
+        """Host death.  Thread transport: simulated — the replica
+        leaves the routing set immediately, every batch it still holds
+        FAILS (no graceful drain — the engine gate raises), and its
+        registry is torn down.  Process transport: REAL — the worker is
+        SIGKILLed and its connection severed, so in-flight requests
+        fail exactly as a dead host's would.  Affected requests
+        re-dispatch through their FleetHandle; the fleet-level contract
+        stays zero-dropped."""
         r = self._replica(replica_id)
         with self._lock:
             r.healthy = False
             r.crashed = True
-        r.registry.close()
+        self._bump_epoch("killed", replica_id)
+        if isinstance(r, ProcessReplica):
+            try:
+                r.proc.kill()                  # SIGKILL: no cleanup runs
+            except OSError:
+                pass
+            # sever our side too: TCP may not surface the peer death
+            # promptly, and in-flight handles must fail NOW to re-route
+            r.registry._client.close()
+            try:
+                r.proc.wait(timeout=10.0)
+            except Exception:
+                pass
+        else:
+            r.registry.close()
+
+    def partition_replica(self, replica_id: str) -> None:
+        """Fault injection (process transport): sever the root<->worker
+        socket WITHOUT touching the worker — a network partition, not a
+        host death.  The transport fails in-flight handles (they
+        re-dispatch) and the connection-loss callback marks the replica
+        down with an epoch bump."""
+        r = self._replica(replica_id)
+        if not isinstance(r, ProcessReplica):
+            raise FleetError(
+                "partition_replica needs the process transport")
+        r.registry.partition()
 
     def inject_fetch_corruption(self, replica_id: str, n: int = 1) -> None:
         """The next ``n`` artifact fetches landing on this replica get
@@ -308,18 +518,35 @@ class LutFleet:
             self._replica(replica_id).fetch_faults += n
 
     # -- artifact distribution ----------------------------------------
-    def _fetch_verified(self, r: Replica, source: str):
+    def _fetch_verified(self, r: Replica, source: str, acct: _FetchAcct):
         """Ship ``source`` to the replica's local store and admit it
-        only after the copy re-verifies against its manifest hashes.
+        only after the copy re-verifies against its manifest hashes —
+        thread transport: local copy + re-hash here; process transport:
+        streaming slab transfer, re-hashed BY THE WORKER on receipt.
         Corrupt copies are deleted and re-fetched up to the retry
-        budget; returns the PACKED loaded artifact."""
+        budget.  All counter updates (the replica's fleet-lifetime
+        totals AND ``acct``, this rollout's own tally) happen under the
+        router lock — concurrent rollouts never read each other's
+        increments.  Returns the admitted artifact (loaded+packed for
+        thread replicas, a ``RemoteArtifact`` token for process
+        replicas)."""
         last: Optional[ArtifactError] = None
         for _ in range(1 + self.max_fetch_retries):
             with self._lock:
                 r.fetches += 1
+                acct.fetches += 1
                 corrupt = r.fetch_faults > 0
                 if corrupt:
                     r.fetch_faults -= 1
+            if isinstance(r, ProcessReplica):
+                try:
+                    return r.registry.fetch(source, corrupt=corrupt)
+                except ArtifactError as e:
+                    last = e
+                    with self._lock:
+                        r.verify_failures += 1
+                        acct.verify_failures += 1
+                    continue
             dst = copy_artifact(source, r.store_dir)
             if corrupt:
                 _flip_one_bit(os.path.join(dst, SLAB_FILE))
@@ -329,6 +556,7 @@ class LutFleet:
                 last = e
                 with self._lock:
                     r.verify_failures += 1
+                    acct.verify_failures += 1
                 # never leave a copy that could be admitted by a later
                 # (non-verifying) reader
                 shutil.rmtree(dst, ignore_errors=True)
@@ -353,9 +581,9 @@ class LutFleet:
         report: Dict[str, ReplicaDistribution] = {}
 
         def one(r: Replica) -> None:
-            f0, v0 = r.fetches, r.verify_failures
+            acct = _FetchAcct()
             try:
-                art = self._fetch_verified(r, source)
+                art = self._fetch_verified(r, source, acct)
                 if model_id in r.registry.model_ids():
                     r.registry.swap(model_id, art)
                 else:
@@ -366,14 +594,14 @@ class LutFleet:
             # and vanish from the rollout accounting
             except Exception as e:
                 report[r.replica_id] = ReplicaDistribution(
-                    r.replica_id, False, None, r.fetches - f0,
-                    r.verify_failures - v0, error=str(e))
+                    r.replica_id, False, None, acct.fetches,
+                    acct.verify_failures, error=str(e))
                 return
             with self._lock:
                 r.admitted[model_id] = art.artifact_id
             report[r.replica_id] = ReplicaDistribution(
-                r.replica_id, True, art.artifact_id, r.fetches - f0,
-                r.verify_failures - v0)
+                r.replica_id, True, art.artifact_id, acct.fetches,
+                acct.verify_failures)
 
         targets = [r for r in self.replicas if r.healthy]
         if not targets:
@@ -407,22 +635,22 @@ class LutFleet:
         errors: Dict[str, str] = {}
 
         def one(r: Replica) -> None:
-            f0, v0 = r.fetches, r.verify_failures
+            acct = _FetchAcct()
             try:
-                art = self._fetch_verified(r, source)
+                art = self._fetch_verified(r, source, acct)
                 entries[r.replica_id] = (
                     r, r.registry.prepare(model_id, art))
                 dist[r.replica_id] = ReplicaDistribution(
                     r.replica_id, True, art.artifact_id,
-                    r.fetches - f0, r.verify_failures - v0)
+                    acct.fetches, acct.verify_failures)
             # broad on purpose: a failure that escaped the worker (e.g.
             # UnknownModelError, a KeyError, from a kill racing this
             # prepare) would skip the all-or-nothing abort check below
             except Exception as e:
                 errors[r.replica_id] = str(e)
                 dist[r.replica_id] = ReplicaDistribution(
-                    r.replica_id, False, None, r.fetches - f0,
-                    r.verify_failures - v0, error=str(e))
+                    r.replica_id, False, None, acct.fetches,
+                    acct.verify_failures, error=str(e))
 
         threads = [threading.Thread(target=one, args=(r,)) for r in targets]
         for t in threads:

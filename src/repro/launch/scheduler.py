@@ -166,6 +166,19 @@ class Scoreboard:
                     oldest = s
             return None if oldest is None else oldest.handle.t_submit
 
+    def earliest_deadline_at(self) -> Optional[float]:
+        """Earliest hard deadline among pending deadline-class requests
+        (drives the batcher's SLO-aware flush timer — a non-full board
+        must still flush early enough for the tightest admitted
+        deadline), or None when no urgent work is pending."""
+        with self._lock:
+            edl = None
+            for s in self._slots:
+                if s.busy and s.urgent and (edl is None
+                                            or s.deadline_at < edl):
+                    edl = s.deadline_at
+            return edl
+
     def issue(self, n: int) -> List:
         """Issue scan: pop up to ``n`` requests in priority order
         (urgent by earliest deadline then age; best-effort by age).
@@ -213,14 +226,23 @@ class ScoreboardScheduler:
         self.window = window
         self.sheds = 0                       # typed rejections issued
         self._batcher = None
-        # whole-flush service intervals (buffer fill + engine +
-        # completion), noted by the batcher after each successful
-        # flush.  Admission estimates from a HIGH quantile of these —
-        # the kernel median alone under-estimates by the per-flush
-        # overhead, and under steady-state overload the queue pins at
-        # the admission ceiling, so that bias turns every boundary
-        # admit into a deadline miss.
-        self._service_s: List[float] = []
+        # whole-flush (fill, seconds) service intervals (buffer fill +
+        # engine + completion), noted by the batcher after each
+        # successful flush.  Admission estimates from a HIGH quantile
+        # of these — the kernel median alone under-estimates by the
+        # per-flush overhead, and under steady-state overload the queue
+        # pins at the admission ceiling, so that bias turns every
+        # boundary admit into a deadline miss.  Keeping the FILL lets
+        # the estimate normalize: a history of lone-straggler flushes
+        # must not mis-price a full-batch flush, nor vice versa.
+        self._service_s: List[Tuple[Optional[int], float]] = []
+        # the estimator sits on the submit hot path (admission + the
+        # fleet router call it per request), but its inputs only change
+        # when a flush lands: memoize the quantile/fit per history
+        # version so steady-state estimates are pure arithmetic
+        self._est_version = 0
+        self._est_cache: Optional[Tuple[int, float, Optional[Tuple[
+            float, float, float]]]] = None
 
     def bind(self, batcher) -> None:
         self._batcher = batcher
@@ -228,44 +250,99 @@ class ScoreboardScheduler:
     def kernel_estimate_s(self) -> Optional[float]:
         return kernel_estimate_s(self._batcher.flushes, self.window)
 
-    def note_service(self, seconds: float) -> None:
-        """Record one successful flush's wall time (called by the
-        batcher; list append is atomic under the GIL)."""
-        self._service_s.append(seconds)
+    def note_service(self, seconds: float,
+                     fill: Optional[int] = None) -> None:
+        """Record one successful flush's wall time and its FILL (real
+        requests served — called by the batcher; list append is atomic
+        under the GIL)."""
+        self._service_s.append((fill, float(seconds)))
         if len(self._service_s) > 4 * self.window:
             del self._service_s[:-self.window]
+        self._est_version += 1
 
-    def service_estimate_s(self) -> Optional[float]:
-        """p90 of recent whole-flush service intervals — deliberately
-        conservative, so admission sheds the coin-flip boundary
-        requests instead of admitting them into a miss."""
-        ss = self._service_s[-self.window:]
-        return float(np.quantile(ss, 0.9)) if ss else None
+    def service_estimate_s(self, fill: Optional[int] = None
+                           ) -> Optional[float]:
+        """Per-flush service estimate — deliberately conservative, so
+        admission sheds the coin-flip boundary requests instead of
+        admitting them into a miss.
+
+        Without ``fill``: the fill-blind p90 of recent whole-flush wall
+        times (the pre-normalization behavior — still what the generic
+        "one more flush ahead of you" terms price with).  With
+        ``fill``: a least-squares ``a + b*fill`` over the recent
+        ``(fill, seconds)`` pairs, padded by the p90 residual so the
+        conservative-quantile character survives normalization.  Falls
+        back to the fill-blind p90 while the history is too small or
+        too degenerate (a single distinct fill, or a nonsensical
+        negative slope) to support a fit."""
+        cache = self._est_cache
+        if cache is None or cache[0] != self._est_version:
+            cache = self._fit_service(self._est_version)
+            self._est_cache = cache
+        if cache is None:
+            return None
+        _, p90, fit = cache
+        if fill is None or fit is None:
+            return p90
+        a, b, pad = fit
+        return a + b * fill + pad
+
+    def _fit_service(self, version: int
+                     ) -> Optional[Tuple[int, float, Optional[Tuple[
+                         float, float, float]]]]:
+        """Recompute the memoized (p90, fit) for one history version —
+        off the per-request path; runs once per noted flush."""
+        recent = self._service_s[-self.window:]
+        if not recent:
+            return None
+        secs = [s for _, s in recent]
+        p90 = float(np.quantile(secs, 0.9))
+        pairs = [(f, s) for f, s in recent if f is not None]
+        if len(pairs) < 4 or len({f for f, _ in pairs}) < 2:
+            return (version, p90, None)
+        fs = np.asarray([f for f, _ in pairs], dtype=np.float64)
+        ss = np.asarray([s for _, s in pairs], dtype=np.float64)
+        b, a = np.polyfit(fs, ss, 1)
+        if b < 0 or a < 0:
+            # noise-dominated fit (service should never shrink with
+            # fill, nor cost negative overhead at fill 0): the
+            # fill-blind conservative quantile is the honest answer
+            return (version, p90, None)
+        pad = max(0.0, float(np.quantile(ss - (a + b * fs), 0.9)))
+        return (version, p90, (float(a), float(b), pad))
 
     def estimate_delay_s(self,
                          deadline_at: Optional[float] = None
                          ) -> Optional[float]:
-        """Estimated queueing delay a new request would see: the number
-        of full-microbatch flushes ahead of it in issue order (urgent
-        work only when the request itself is deadline-class) plus its
-        own flush, times the live per-flush service estimate (p90 of
-        whole-flush wall times, falling back to the kernel median
-        before any service interval has been noted).  None until the
-        first flush lands (no history — always admit)."""
-        kest = self.service_estimate_s()
-        if kest is None:
-            kest = self.kernel_estimate_s()
-        if kest is None:
-            return None
+        """Estimated queueing delay a new request would see: the
+        full-microbatch flushes ahead of it in issue order (urgent work
+        only when the request itself is deadline-class) priced at the
+        full-fill service estimate, plus its OWN flush priced at the
+        tail fill it would actually ride in — fill-normalized where the
+        history supports it, the fill-blind conservative p90 otherwise,
+        and the kernel median before any service interval has been
+        noted.  None until the first flush lands (no history — always
+        admit)."""
+        mb = self._batcher.microbatch
         ahead = (self.scoreboard.urgent_ahead(deadline_at)
                  if deadline_at is not None else self.scoreboard.depth())
-        flushes = ahead // self._batcher.microbatch + 1
+        est_full = self.service_estimate_s(fill=mb)
+        if est_full is None:
+            kest = self.kernel_estimate_s()
+            if kest is None:
+                return None
+            est_full = est_tail = est_blind = kest
+        else:
+            est_tail = self.service_estimate_s(fill=ahead % mb + 1)
+            est_blind = self.service_estimate_s()
+        total = (ahead // mb) * est_full + est_tail
         # a flush already executing must complete before anything in
         # the scoreboard issues — without this term, steady-state
-        # overload admits boundary requests that miss by one kernel
+        # overload admits boundary requests that miss by one kernel.
+        # Its fill is unknown, so it is priced fill-blind.
         if self._batcher._inflight > 0:
-            flushes += 1
-        return flushes * kest
+            total += est_blind
+        return total
 
     def admit_or_raise(self, handle, now: float) -> None:
         """Shed ``handle`` with the typed ``DeadlineUnmeetable`` when
@@ -315,6 +392,21 @@ class StealGroup:
         with self._lock:
             if batcher in self._members:
                 self._members.remove(batcher)
+
+    def notify_work(self, victim) -> None:
+        """Wake the group's idle batchers NOW: ``victim``'s scoreboard
+        just went steal-eligible (backlog beyond one full microbatch).
+        Called by the victim's ``submit`` path, so steals start on
+        notification latency instead of the idle-poll cadence; the poll
+        in ``MicroBatcher._collect_scheduled`` stays as the fallback
+        for notifications lost to races."""
+        with self._lock:
+            members = list(self._members)
+        for m in members:
+            if m is victim:
+                continue
+            with m._cond:
+                m._cond.notify()
 
     def steal_into(self, thief) -> bool:
         """Execute one flush of the most-backlogged sibling's overflow
@@ -369,35 +461,17 @@ def replay_tiered_open_loop(client, rows: np.ndarray,
     mix).  ``client.submit(x, tier=...)`` may raise the typed
     ``DeadlineUnmeetable`` — recorded as a shed.  Blocks until every
     ADMITTED request completes; engine failures stay on the handles
-    (``h.failed``), only a genuine hang raises."""
-    rng = np.random.default_rng(seed)
-    gaps = rng.exponential(1.0 / rate, len(rows))
-    handles: List = []
-    tier_of: List[SLOTier] = []
-    sheds = 0
-    t0 = time.monotonic()
-    t_next = t0
-    for i, (row, gap) in enumerate(zip(rows, gaps)):
-        t_next += gap
-        dt = t_next - time.monotonic()
-        if dt > 0:
-            time.sleep(dt)
-        tier = tiers[i % len(tiers)]
-        tier_of.append(tier)
-        try:
-            handles.append(client.submit(row, tier=tier))
-        except DeadlineUnmeetable:
-            handles.append(None)
-            sheds += 1
-    for h in handles:
-        if h is None:
-            continue
-        try:
-            h.result(timeout=timeout_s)
-        except RuntimeError:
-            pass                     # failed batch: counted by the caller
-    return TieredReplay(handles=handles, tiers=tier_of, sheds=sheds,
-                        span_s=time.monotonic() - t0)
+    (``h.failed``), only a genuine hang raises.
+
+    Thin adapter over the SHARED Poisson driver
+    (``batching.replay_open_loop``) — one arrival process, one shed
+    accounting, used by the plain, tiered, and fleet benches alike."""
+    from repro.launch.batching import replay_open_loop
+
+    res = replay_open_loop(client, rows, rate, seed=seed,
+                           timeout_s=timeout_s, tiers=list(tiers))
+    return TieredReplay(handles=list(res), tiers=res.tiers,
+                        sheds=res.sheds, span_s=res.span_s)
 
 
 def tier_report(replay: TieredReplay) -> Dict[str, Dict[str, float]]:

@@ -28,6 +28,7 @@ TOP_KEYS = {
     "segmented": dict,         # over-budget segmented execution (v6)
     "connectivity": dict,      # population connectivity search (v7)
     "scheduler": dict,         # SLO-tiered scoreboard scheduler (v8)
+    "rpc_fleet": dict,         # cross-process socket transport (v9)
 }
 
 CONFIG_NUMERIC = [
@@ -99,6 +100,14 @@ SCHEDULER_NUMERIC = [
                 "steals", "stolen_requests")
 ]
 
+RPC_FLEET_NUMERIC = [
+    "workers", "microbatch", "requests",
+    "inproc_p50_ms", "inproc_p99_ms", "rpc_p50_ms", "rpc_p99_ms",
+    "wire_overhead_p50_ms", "wire_overhead_p99_ms", "rpc_dropped",
+    "slab_bytes", "slab_transfer_ms", "slab_transfer_mb_s",
+    "heartbeat_interval_ms", "heartbeat_detect_ms",
+]
+
 FLEET_NUMERIC = [
     "microbatch", "deadline_ms", "requests",
     "throughput_req_s_r1", "throughput_req_s_r2", "throughput_req_s_r4",
@@ -121,7 +130,7 @@ def test_top_level_schema(payload):
         assert key in payload, f"missing top-level key {key!r}"
         assert isinstance(payload[key], typ), (key, type(payload[key]))
     assert payload["bench"] == "lut_infer"
-    assert payload["schema_version"] >= 8
+    assert payload["schema_version"] >= 9
     assert len(payload["configs"]) >= 1
 
 
@@ -276,6 +285,34 @@ def test_scheduler_contracts(payload):
     assert sched["offered_req_s"] > sched["sustainable_req_s"]
     assert sched["sheds_typed_r1"] > 0
     assert sched["steals_r1"] > 0
+
+
+def test_rpc_fleet_entry_schema(payload):
+    rpc = payload["rpc_fleet"]
+    for key in RPC_FLEET_NUMERIC:
+        assert key in rpc, f"rpc_fleet: missing {key!r}"
+        assert isinstance(rpc[key], numbers.Real) and \
+            not isinstance(rpc[key], bool), key
+
+
+def test_rpc_fleet_contracts(payload):
+    """Hardware-independent contracts of the socket transport drill:
+    both closed loops (thread fleet and process fleet) finish with
+    ZERO dropped requests, percentiles are ordered within each series,
+    the slab transfer moved the artifact's real bytes, and the
+    heartbeat prober DID detect the SIGKILLed worker (the bench writes
+    ``heartbeat_detect_ms = -1`` when detection never happened).  The
+    wire-overhead delta itself is hardware-dependent (shared-CPU
+    noise) and deliberately not sign-asserted."""
+    rpc = payload["rpc_fleet"]
+    assert rpc["rpc_dropped"] == 0
+    assert rpc["inproc_p50_ms"] <= rpc["inproc_p99_ms"]
+    assert rpc["rpc_p50_ms"] <= rpc["rpc_p99_ms"]
+    assert rpc["slab_bytes"] > 0
+    assert rpc["slab_transfer_ms"] > 0
+    assert rpc["slab_transfer_mb_s"] > 0
+    assert rpc["heartbeat_detect_ms"] > 0
+    assert rpc["heartbeat_interval_ms"] > 0
 
 
 def test_fleet_entry_schema(payload):

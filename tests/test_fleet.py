@@ -252,6 +252,53 @@ def test_exhausted_fetch_budget_excludes_replica(artifacts):
             assert h.replica_id == "r0"
 
 
+def test_concurrent_rollouts_report_their_own_fetch_counts(artifacts):
+    """Two rollouts racing on the same fleet: each distribution report
+    counts ITS OWN fetch attempts and verify failures, never the other
+    rollout's.  (Regression: the report used to diff the replica's
+    shared lifetime counters OUTSIDE the router lock, so a concurrent
+    rollout's increments leaked into both reports.)"""
+    with LutFleet(2, microbatch=8, deadline_s=0.003) as fleet:
+        # two faults on r1: the racing rollouts share the fault budget
+        # (either splits it 1+1 or one eats both), but each report must
+        # count exactly the attempts ITS rollout made
+        fleet.inject_fetch_corruption("r1", n=2)
+        reports: dict = {}
+        barrier = threading.Barrier(2)
+
+        def rollout(model_id, src):
+            barrier.wait()                    # maximal overlap
+            reports[model_id] = fleet.distribute_artifact(src, model_id)
+
+        threads = [threading.Thread(target=rollout, args=("a", artifacts[0])),
+                   threading.Thread(target=rollout, args=("b", artifacts[1]))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for mid in ("a", "b"):
+            rep = reports[mid]
+            # r0 has no faults: ONE fetch per rollout — a report showing
+            # more has counted the concurrent rollout's attempt
+            assert rep["r0"].admitted
+            assert rep["r0"].fetches == 1, (mid, rep["r0"])
+            assert rep["r0"].verify_failures == 0
+            # r1: every failure this rollout saw triggered exactly one
+            # retry, and the final attempt admitted
+            assert rep["r1"].admitted
+            assert rep["r1"].fetches == rep["r1"].verify_failures + 1, \
+                (mid, rep["r1"])
+        # the per-rollout tallies partition the lifetime totals exactly
+        st = fleet.stats()
+        assert st["r0"]["fetches"] == 2
+        assert st["r1"]["fetches"] == 4
+        assert st["r1"]["verify_failures"] == 2
+        assert (reports["a"]["r1"].fetches
+                + reports["b"]["r1"].fetches) == 4
+        assert (reports["a"]["r1"].verify_failures
+                + reports["b"]["r1"].verify_failures) == 2
+
+
 # ---------------------------------------------------------------------------
 # two-phase coordinated swap
 # ---------------------------------------------------------------------------

@@ -19,7 +19,8 @@ import pytest
 
 from repro.launch.batching import (BatcherStopped, MicroBatcher,
                                    latency_percentiles_ms, replay_open_loop)
-from repro.launch.scheduler import ScoreboardScheduler
+from repro.launch.scheduler import (BATCH, ScoreboardScheduler,
+                                    interactive_tier)
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -239,6 +240,59 @@ def test_replay_open_loop_serves_everything():
     for r, h in zip(rows, handles):
         assert np.array_equal(h.result(), _engine(r[None])[0])
     assert sum(f.fill for f in mb.flushes) == 40
+
+
+def test_replay_open_loop_mixed_tiers_absorbs_sheds():
+    """The shared Poisson driver is tier-aware: ``tiers=`` assigns
+    request i the tier ``tiers[i % len(tiers)]``, a submit the target
+    sheds with the typed DeadlineUnmeetable is absorbed as a None
+    handle + shed count (never an escaped exception mid-replay), and
+    the result stays a plain list for pre-tier callers.  (Regression:
+    the driver was tier-blind — every request went out best-effort, so
+    the open-loop bench could never exercise admission control.)"""
+    KERNEL_S = 0.02
+    n_req = 200
+
+    def slow_engine(batch):
+        time.sleep(KERNEL_S)
+        return _engine(batch)
+
+    sched = ScoreboardScheduler()
+    tiers = [interactive_tier(0.005), BATCH]
+    rows = np.tile(np.arange(N_FEAT, dtype=np.int32), (n_req, 1))
+    with MicroBatcher(slow_engine, microbatch=2, deadline_s=0.001,
+                      n_features=N_FEAT, scheduler=sched) as mb:
+        # 10x the sustainable rate with a 5 ms deadline vs a 20 ms
+        # kernel: once the first flush lands history, every interactive
+        # submit is a provable miss and must shed
+        res = replay_open_loop(mb, rows, rate=1000.0, seed=1,
+                               timeout_s=120.0, tiers=tiers)
+    assert isinstance(res, list)             # pre-tier callers unbroken
+    assert len(res) == n_req
+    assert res.tiers == [tiers[i % 2] for i in range(n_req)]
+    # sheds absorbed into accounting, typed and tier-respecting
+    assert res.sheds > 0
+    assert sum(1 for h in res if h is None) == res.sheds
+    assert sched.sheds == res.sheds
+    for h, tier in zip(res, res.tiers):
+        if h is None:
+            assert tier.has_deadline         # best-effort never sheds
+        else:
+            assert h.done and not h.failed   # zero hung, zero dropped
+    assert res.span_s > 0.0
+
+
+def test_replay_open_loop_untiered_defaults_compatible():
+    """Without ``tiers`` the driver behaves exactly as before: every
+    request submitted (tier=None), no sheds, accounting attrs present."""
+    rows = np.tile(np.arange(N_FEAT, dtype=np.int32), (16, 1))
+    with MicroBatcher(_engine, microbatch=8, deadline_s=0.005,
+                      n_features=N_FEAT) as mb:
+        res = replay_open_loop(mb, rows, rate=5000.0, seed=0)
+    assert len(res) == 16 and all(h is not None and h.done for h in res)
+    assert res.sheds == 0
+    assert res.tiers == [None] * 16
+    assert res.span_s > 0.0
 
 
 def test_failed_flush_still_records_telemetry():

@@ -154,8 +154,10 @@ def test_admission_sheds_with_typed_rejection():
     shed, and the request never enters the scoreboard — while
     best-effort and wide-deadline requests keep admitting."""
     gate = threading.Event()
+    entered = threading.Event()
 
     def slow(batch):
+        entered.set()
         gate.wait(5.0)
         time.sleep(0.02)
         return _engine(batch)
@@ -167,9 +169,14 @@ def test_admission_sheds_with_typed_rejection():
         warm = mb.submit(np.arange(N_FEAT), tier=BATCH)
         warm.result(timeout=5.0)          # one flush -> kernel history
         gate.clear()                      # hold the engine: backlog grows
+        entered.clear()
         backlog = [mb.submit(np.arange(N_FEAT),
                              tier=interactive_tier(60.0))
                    for _ in range(10)]
+        # the batcher is now held at the gate with the first backlog
+        # flush — the remaining depth is stable, so the no-queue check
+        # below races nothing
+        assert entered.wait(5.0)
         depth_before = sched.scoreboard.depth()
         with pytest.raises(DeadlineUnmeetable, match="shed"):
             mb.submit(np.arange(N_FEAT), tier=interactive_tier(0.005))
@@ -212,6 +219,119 @@ def test_estimate_counts_inflight_flush():
         assert busy_est == pytest.approx(idle_est + per_flush)
         gate.set()
         h.result(timeout=5.0)
+
+
+def test_flush_wakes_for_admitted_hard_deadline():
+    """An admitted deadline-class request must not wait out a batcher
+    flush deadline LONGER than its own hard deadline: the collect wait
+    wakes at min(oldest + deadline_s, earliest deadline_at - service
+    estimate).  (Regression: the phase-2 wait used only the flush
+    timer, so with deadline_s=2 s a lone interactive request with a
+    250 ms SLO sat in the scoreboard for the full 2 s — admission
+    control admitted it, then the batcher's own timer missed it.)"""
+    sched = ScoreboardScheduler()
+    with MicroBatcher(_engine, microbatch=8, deadline_s=2.0,
+                      n_features=N_FEAT, scheduler=sched) as mb:
+        # one full flush first: the estimator has history, so the wake
+        # lands a service interval BEFORE the hard deadline
+        warm = [mb.submit(np.arange(N_FEAT), tier=BATCH) for _ in range(8)]
+        for h in warm:
+            h.result(timeout=5.0)
+        slo = 0.25
+        h = mb.submit(np.arange(N_FEAT), tier=interactive_tier(slo))
+        out = h.result(timeout=5.0)
+    assert np.array_equal(out, _engine(np.arange(N_FEAT)[None])[0])
+    # served within its own SLO (+ scheduling jitter), NOT the 2 s
+    # flush deadline — pre-fix this latency is ~2 s and the SLO is lost
+    assert h.latency_s <= slo + 0.35, h.latency_s
+    assert h.t_done <= h.deadline_at + 0.35
+    # and it genuinely waited for backfill rather than flushing a
+    # 1/8 batch immediately (the flush timer still batches)
+    assert h.latency_s >= 0.05 * slo
+    tail = mb.flushes[-1]
+    assert tail.fill == 1 and tail.deadline_hit
+
+
+def test_deadline_wake_still_batches_follow_up_traffic():
+    """The SLO-aware wake must not degenerate into flush-per-request:
+    requests arriving within the wait window still coalesce into one
+    flush ahead of the earliest deadline."""
+    sched = ScoreboardScheduler()
+    with MicroBatcher(_engine, microbatch=8, deadline_s=2.0,
+                      n_features=N_FEAT, scheduler=sched) as mb:
+        warm = [mb.submit(np.arange(N_FEAT), tier=BATCH) for _ in range(8)]
+        for h in warm:
+            h.result(timeout=5.0)
+        hs = [mb.submit(np.full(N_FEAT, i, np.int32),
+                        tier=interactive_tier(0.4)) for i in range(4)]
+        for i, h in enumerate(hs):
+            out = h.result(timeout=5.0)
+            assert np.array_equal(
+                out, _engine(np.full(N_FEAT, i, np.int32)[None])[0])
+            assert h.t_done <= h.deadline_at + 0.35
+    fills = [f.fill for f in mb.flushes[1:]]
+    assert sum(fills) == 4
+    assert max(fills) == 4       # coalesced, not four fill-1 flushes
+
+
+# ---------------------------------------------------------------------------
+# fill-normalized service estimation
+# ---------------------------------------------------------------------------
+
+def test_service_estimate_normalizes_by_fill():
+    """The admission estimate prices the flush a request would RIDE:
+    with (fill, seconds) history spanning fill sizes, the estimate for
+    a lone straggler differs from a full batch by the fitted per-row
+    cost, and stays conservative (never below the true line).
+    (Regression: the estimator was fill-independent — a history of
+    fill-1 stragglers priced a 32-row flush at straggler cost and vice
+    versa.)"""
+    sched = ScoreboardScheduler()
+    a_true, b_true = 0.001, 0.002          # 1 ms overhead + 2 ms/row
+    for fill in (1, 2, 4, 8, 1, 2, 4, 8):
+        sched.note_service(a_true + b_true * fill, fill=fill)
+    est1 = sched.service_estimate_s(fill=1)
+    est8 = sched.service_estimate_s(fill=8)
+    est16 = sched.service_estimate_s(fill=16)   # beyond observed fills
+    blind = sched.service_estimate_s()
+    # the fit recovers the slope: 7 rows apart => ~14 ms apart
+    assert est8 - est1 == pytest.approx(7 * b_true, rel=0.15)
+    assert est16 - est1 == pytest.approx(15 * b_true, rel=0.15)
+    # conservative: residual pad keeps each estimate >= the true cost
+    assert est1 >= a_true + b_true * 1 - 1e-12
+    assert est8 >= a_true + b_true * 8 - 1e-12
+    # fill-blind p90 sits inside the observed range — it cannot price
+    # BOTH a straggler and a bigger-than-seen batch, which is the bug
+    assert est1 < blind < est16
+
+
+def test_service_estimate_degenerate_history_falls_back():
+    """Too little history, a single distinct fill, or a noise-dominated
+    fit (negative slope) must fall back to the fill-blind conservative
+    p90 instead of extrapolating nonsense."""
+    # fewer than 4 pairs -> p90
+    s = ScoreboardScheduler()
+    for fill in (1, 8):
+        s.note_service(0.01, fill=fill)
+    assert s.service_estimate_s(fill=4) == s.service_estimate_s()
+    # one distinct fill -> p90 (no slope to fit)
+    s = ScoreboardScheduler()
+    for _ in range(8):
+        s.note_service(0.01, fill=4)
+    assert s.service_estimate_s(fill=32) == s.service_estimate_s()
+    # negative slope (service shrinking with fill is noise) -> p90
+    s = ScoreboardScheduler()
+    for fill, sec in ((1, 0.020), (2, 0.015), (4, 0.010), (8, 0.005)):
+        s.note_service(sec, fill=fill)
+        s.note_service(sec, fill=fill)
+    assert s.service_estimate_s(fill=8) == s.service_estimate_s()
+    # fill-less history (legacy note_service callers) -> p90
+    s = ScoreboardScheduler()
+    for _ in range(8):
+        s.note_service(0.01)
+    assert s.service_estimate_s(fill=4) == s.service_estimate_s()
+    # and no history at all stays None
+    assert ScoreboardScheduler().service_estimate_s(fill=4) is None
 
 
 # ---------------------------------------------------------------------------
@@ -292,6 +412,48 @@ def test_steal_group_moves_overflow_to_idle_sibling():
     assert stolen and sum(f.fill for f in stolen) == group.stolen_requests
     assert not [f for f in idle.flushes if f.cause == "steal"]
     # accounting: every request served exactly once, between the two
+    assert sum(f.fill for f in hot.flushes) == 64
+
+
+def test_steal_is_notification_driven_not_poll_driven():
+    """A victim whose board goes steal-eligible NOTIFIES the group's
+    idle batchers (StealGroup.notify_work from the submit path) — the
+    idle sibling starts stealing on notification latency, not on the
+    poll cadence.  Pinned by making the poll absurdly slow (30 s): if
+    stealing still only happened on the timer, the idle sibling would
+    sleep through the whole run and steals would be zero (the hot
+    batcher alone finishes this backlog in well under 30 s)."""
+    group = StealGroup()
+    s_hot, s_idle = ScoreboardScheduler(), ScoreboardScheduler()
+
+    def slow(batch):
+        time.sleep(0.005)
+        return _engine(batch)
+
+    hot = MicroBatcher(slow, microbatch=4, deadline_s=0.001,
+                       n_features=N_FEAT, scheduler=s_hot,
+                       steal_group=group, steal_poll_s=30.0).start()
+    idle = MicroBatcher(slow, microbatch=4, deadline_s=0.001,
+                        n_features=N_FEAT, scheduler=s_idle,
+                        steal_group=group, steal_poll_s=30.0).start()
+    t0 = time.monotonic()
+    try:
+        hs = [hot.submit(np.full(N_FEAT, i, np.int32), tier=BATCH)
+              for i in range(64)]
+        for i, h in enumerate(hs):
+            out = h.result(timeout=20.0)
+            assert np.array_equal(
+                out, _engine(np.full(N_FEAT, i, np.int32)[None])[0])
+    finally:
+        hot.stop()
+        idle.stop()
+    # finished far inside one poll period, with real steals — only the
+    # notification path can have woken the idle sibling
+    assert time.monotonic() - t0 < 25.0
+    assert group.steals >= 1
+    assert group.stolen_requests >= 1
+    stolen = [f for f in hot.flushes if f.cause == "steal"]
+    assert stolen and sum(f.fill for f in stolen) == group.stolen_requests
     assert sum(f.fill for f in hot.flushes) == 64
 
 

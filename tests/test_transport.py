@@ -1,0 +1,264 @@
+"""Unit tests for the fleet wire layer (launch/transport.py): framing,
+request-id multiplexing, typed errors, and connection-death semantics.
+No worker processes here — peers are threads over a socketpair; the
+end-to-end process fleet is tests/test_process_fleet.py."""
+import socket
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.launch.transport import (HEADER, MAX_PAYLOAD, MSG_ERR, MSG_OK,
+                                    MSG_PING, MSG_RESULT, MSG_SUBMIT,
+                                    ConnectionClosed, FrameConn, RpcClient,
+                                    RpcError, TransportError, array_blob,
+                                    array_meta, blob_array, pack_payload,
+                                    unpack_payload)
+
+
+def _pair():
+    a, b = socket.socketpair()
+    return a, b
+
+
+# ---------------------------------------------------------------------------
+# payload + frame layout
+# ---------------------------------------------------------------------------
+
+def test_payload_roundtrip_meta_and_blob():
+    meta = {"model_id": "m", "nested": {"x": [1, 2, 3]}, "f": 0.25}
+    blob = bytes(range(256)) * 3
+    got_meta, got_blob = unpack_payload(pack_payload(meta, blob))
+    assert got_meta == meta
+    assert got_blob == blob
+
+
+def test_payload_empty_blob_default():
+    meta, blob = unpack_payload(pack_payload({"a": 1}))
+    assert meta == {"a": 1} and blob == b""
+
+
+def test_unpack_rejects_truncated_meta():
+    payload = pack_payload({"key": "value"})
+    with pytest.raises(TransportError):
+        unpack_payload(payload[:2])          # shorter than the length prefix
+    # length prefix claims more meta than the payload holds
+    with pytest.raises(TransportError):
+        unpack_payload(b"\xff\xff\xff\xff" + payload[4:])
+
+
+def test_frame_header_layout():
+    # the documented !BII layout: u8 type, u32 req id, u32 payload len
+    assert HEADER.size == 9
+    assert HEADER.pack(MSG_PING, 7, 0) == b"\x02\x00\x00\x00\x07" + b"\x00" * 4
+
+
+def test_frameconn_roundtrip_and_interleaving():
+    a, b = _pair()
+    ca, cb = FrameConn(a), FrameConn(b)
+    try:
+        ca.send(MSG_SUBMIT, 1, {"i": 1}, b"one")
+        ca.send(MSG_PING, 2, {"i": 2})
+        assert cb.recv() == (MSG_SUBMIT, 1, {"i": 1}, b"one")
+        assert cb.recv() == (MSG_PING, 2, {"i": 2}, b"")
+        # replies flow the other way on the same pair
+        cb.send(MSG_OK, 2, {"pong": True})
+        assert ca.recv() == (MSG_OK, 2, {"pong": True}, b"")
+    finally:
+        ca.close()
+        cb.close()
+
+
+def test_frameconn_rejects_oversized_frame():
+    a, b = _pair()
+    ca, cb = FrameConn(a), FrameConn(b)
+    try:
+        with pytest.raises(TransportError, match="exceeds cap"):
+            ca.send(MSG_SUBMIT, 1, {}, b"x" * (MAX_PAYLOAD + 1))
+        # a corrupted length prefix must not trigger a huge allocation
+        a.sendall(HEADER.pack(MSG_SUBMIT, 1, MAX_PAYLOAD + 1))
+        with pytest.raises(TransportError, match="exceeds cap"):
+            cb.recv()
+    finally:
+        ca.close()
+        cb.close()
+
+
+def test_frameconn_peer_close_is_typed():
+    a, b = _pair()
+    ca, cb = FrameConn(a), FrameConn(b)
+    ca.close()
+    with pytest.raises(ConnectionClosed):
+        cb.recv()
+    cb.close()
+
+
+def test_array_blob_roundtrip():
+    x = np.arange(24, dtype=np.int32).reshape(4, 6)
+    meta, blob = array_meta(x), array_blob(x)
+    y = blob_array(meta, blob)
+    assert y.dtype == x.dtype and np.array_equal(x, y)
+
+
+# ---------------------------------------------------------------------------
+# RpcClient: pipelining, demux, typed errors, death
+# ---------------------------------------------------------------------------
+
+def _echo_server(conn: FrameConn, script):
+    """Serve scripted replies: script maps req meta['op'] to a callable
+    (conn, rid, meta, blob) -> None.  Runs until the peer closes."""
+    def run():
+        while True:
+            try:
+                msg, rid, meta, blob = conn.recv()
+            except TransportError:
+                return
+            script[meta.get("op", "default")](conn, rid, meta, blob)
+    t = threading.Thread(target=run, daemon=True)
+    t.start()
+    return t
+
+
+def test_rpc_call_roundtrip_and_pipelining():
+    a, b = _pair()
+    server = FrameConn(b)
+
+    def ok(conn, rid, meta, blob):
+        conn.send(MSG_OK, rid, {"echo": meta["i"]}, blob)
+
+    _echo_server(server, {"default": ok})
+    client = RpcClient(a)
+    try:
+        # many calls in flight from many threads — req ids demux them
+        out = [None] * 16
+        def call(i):
+            meta, blob = client.call(MSG_PING, {"i": i}, f"b{i}".encode())
+            out[i] = (meta["echo"], blob)
+        threads = [threading.Thread(target=call, args=(i,))
+                   for i in range(16)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert out == [(i, f"b{i}".encode()) for i in range(16)]
+    finally:
+        client.close()
+        server.close()
+
+
+def test_rpc_err_maps_to_typed_rpcerror():
+    a, b = _pair()
+    server = FrameConn(b)
+
+    def err(conn, rid, meta, blob):
+        conn.send(MSG_ERR, rid, {"kind": "unknown_model", "error": "nope"})
+
+    _echo_server(server, {"default": err})
+    client = RpcClient(a)
+    try:
+        with pytest.raises(RpcError, match="nope") as ei:
+            client.call(MSG_SUBMIT, {})
+        assert ei.value.kind == "unknown_model"
+    finally:
+        client.close()
+        server.close()
+
+
+def test_rpc_result_frames_demux_to_handlers():
+    """SUBMIT's two-answer shape: the OK ack completes the call, the
+    async RESULT (same req id) lands in the registered handler — even
+    when the RESULT arrives before the ack."""
+    a, b = _pair()
+    server = FrameConn(b)
+
+    def submit(conn, rid, meta, blob):
+        if meta.get("result_first"):
+            conn.send(MSG_RESULT, rid, {"ok": True, "v": meta["i"]}, blob)
+            conn.send(MSG_OK, rid, {})
+        else:
+            conn.send(MSG_OK, rid, {})
+            conn.send(MSG_RESULT, rid, {"ok": True, "v": meta["i"]}, blob)
+
+    _echo_server(server, {"default": submit})
+    client = RpcClient(a)
+    try:
+        for result_first in (False, True):
+            got = {}
+            ev = threading.Event()
+
+            def handler(meta, blob, exc):
+                got.update(meta=meta, blob=blob, exc=exc)
+                ev.set()
+
+            rid = client.new_req_id()
+            client.expect_result(rid, handler)
+            client.call(MSG_SUBMIT,
+                        {"i": 9, "result_first": result_first},
+                        b"row", req_id=rid)
+            assert ev.wait(5.0)
+            assert got["exc"] is None
+            assert got["meta"]["v"] == 9 and got["blob"] == b"row"
+    finally:
+        client.close()
+        server.close()
+
+
+def test_rpc_connection_death_fails_pending_and_handlers():
+    a, b = _pair()
+    server = FrameConn(b)
+    dead = threading.Event()
+    client = RpcClient(a, on_dead=lambda exc: dead.set())
+    fail = {}
+    ev = threading.Event()
+
+    def handler(meta, blob, exc):
+        fail["exc"] = exc
+        ev.set()
+
+    rid = client.new_req_id()
+    client.expect_result(rid, handler)
+    caller_exc = {}
+
+    def call():
+        try:
+            client.call(MSG_SUBMIT, {}, req_id=rid, timeout=30.0)
+        except Exception as e:
+            caller_exc["e"] = e
+
+    t = threading.Thread(target=call)
+    t.start()
+    time.sleep(0.05)             # let the call register as pending
+    server.close()               # peer dies with everything in flight
+    t.join(timeout=5.0)
+    assert not t.is_alive()
+    assert isinstance(caller_exc["e"], ConnectionClosed)
+    assert ev.wait(5.0) and isinstance(fail["exc"], ConnectionClosed)
+    assert dead.wait(5.0)
+    # post-death calls fail fast with the same typed error
+    with pytest.raises(ConnectionClosed):
+        client.call(MSG_PING, {})
+    client.close()
+
+
+def test_rpc_call_timeout_is_typed_and_late_reply_ignored():
+    a, b = _pair()
+    server = FrameConn(b)
+    hold = threading.Event()
+
+    def slow(conn, rid, meta, blob):
+        hold.wait(5.0)
+        conn.send(MSG_OK, rid, {"late": True})
+
+    _echo_server(server, {"default": slow})
+    client = RpcClient(a)
+    try:
+        with pytest.raises(TransportError, match="timeout"):
+            client.call(MSG_PING, {}, timeout=0.1)
+        hold.set()               # late reply must be dropped, not crash
+        time.sleep(0.1)
+        meta, _ = client.call(MSG_PING, {}, timeout=5.0)
+        assert meta == {"late": True}
+    finally:
+        client.close()
+        server.close()
